@@ -1,0 +1,141 @@
+"""Fig. 20: end-task accuracy of L-PCN's selective approximation vs.
+traditional (exact) and Mesorasi (fully approximate).
+
+We train a small PointNet++ classifier on a synthetic 8-class shape task
+with the TRADITIONAL path, then evaluate the same weights under each
+execution mode — exactly the paper's setting (the accelerator changes
+inference execution, not training).
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mlp import MLP, apply_mlp, init_mlp
+from repro.core.pipeline import (LPCNConfig, data_structuring,
+                                 fc_lpcn, fc_traditional)
+from repro.core.hub_schedule import build_schedule
+from repro.core.islandize import islandize
+from repro.data.synthetic import make_cloud
+from repro.models.baselines import mesorasi_fc
+
+
+def _gen_task(n_clouds: int, n_points: int, seed: int):
+    """8-class shape task, separable by construction: class k = a fixed
+    primitive composition (sphere/box/cylinder × scale), jittered."""
+    from repro.data.synthetic import _box, _cylinder, _sphere
+    rng = np.random.default_rng(seed)
+    xs, ys = [], []
+    for i in range(n_clouds):
+        cls = i % 8
+        kind, big = cls % 4, cls // 4
+        scale = 0.9 if big else 0.45
+        n1 = n_points // 2
+        c = rng.normal(0, 0.05, 3)
+        if kind == 0:
+            a = _sphere(rng, n1, c, 0.5 * scale)
+            b = _sphere(rng, n_points - n1, -c, 0.25 * scale)
+        elif kind == 1:
+            a = _box(rng, n1, c, np.full(3, scale))
+            b = _sphere(rng, n_points - n1, -c, 0.3 * scale)
+        elif kind == 2:
+            a = _cylinder(rng, n1, c, 0.3 * scale, 1.2 * scale)
+            b = _box(rng, n_points - n1, -c, np.full(3, 0.4 * scale))
+        else:
+            a = _cylinder(rng, n1, c, 0.5 * scale, 0.4 * scale)
+            b = _cylinder(rng, n_points - n1, -c, 0.15 * scale,
+                          1.5 * scale)
+        pts = np.concatenate([a, b])[:n_points]
+        pts += 0.01 * rng.normal(size=pts.shape)
+        pts -= pts.mean(0)
+        pts /= np.abs(pts).max() + 1e-9
+        xs.append(pts.astype(np.float32))
+        ys.append(cls)
+    return (jnp.asarray(np.stack(xs)), jnp.asarray(np.array(ys),
+                                                   jnp.int32))
+
+
+def _model_init(key, activation: str):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mlp1": init_mlp(k1, [6, 32, 64], activation),
+        "mlp2": init_mlp(k2, [64 + 3, 64, 128], activation),
+        "head": init_mlp(k3, [128, 64, 8], "per_layer"),
+    }
+
+
+def _forward(params, xyz, mode: str, key, comp: str = "linear",
+             activation: str = "block_end"):
+    cfg1 = LPCNConfig(n_centers=128, k=16, mode=mode, compensation=comp)
+    cfg2 = LPCNConfig(n_centers=32, k=16, mode=mode, compensation=comp,
+                      island_size=16, cache_capacity_x=2.0)
+    k1, k2 = jax.random.split(key)
+
+    def block(cfg, mlp, xyz_in, feats, kk):
+        cidx, nbr = data_structuring(cfg, xyz_in, kk)
+        centers = xyz_in[cidx]
+        cf = feats[cidx]
+        if mode == "traditional":
+            f = fc_traditional(mlp, xyz_in, feats, nbr, centers, cf, "sa")
+        elif mode == "mesorasi":
+            f = mesorasi_fc(mlp, xyz_in, feats, nbr, centers, cf, "sa")
+        else:
+            n_hubs = max(int(cidx.shape[0]) // cfg.island_size, 1)
+            isl = islandize(centers, n_hubs, capacity=cfg.island_capacity,
+                            key=kk)
+            sched = build_schedule(isl, nbr, cfg.cache_capacity)
+            f = fc_lpcn(mlp, xyz_in, feats, nbr, centers, isl, sched,
+                        cfg, cf)
+        return centers, f
+
+    c1, f1 = block(cfg1, params["mlp1"], xyz, xyz, k1)
+    c2, f2 = block(cfg2, params["mlp2"], c1, f1, k2)
+    g = f2.max(axis=0)
+    return apply_mlp(params["head"], g)
+
+
+def run_accuracy(quick: bool = False) -> dict:
+    n_train, n_test = (64, 32) if quick else (160, 64)
+    n_points = 256
+    xtr, ytr = _gen_task(n_train, n_points, seed=1)
+    xte, yte = _gen_task(n_test, n_points, seed=2)
+    results = {}
+    for act_name, activation in [("block_end", "block_end"),
+                                 ("per_layer", "per_layer")]:
+        key = jax.random.PRNGKey(0)
+        params = _model_init(key, activation)
+
+        fwd_tr = jax.jit(jax.vmap(
+            lambda p, x: _forward(p, x, "traditional", key,
+                                  activation=activation),
+            in_axes=(None, 0)), static_argnums=())
+
+        def loss_fn(p, xs, ys):
+            logits = fwd_tr(p, xs)
+            lp = jax.nn.log_softmax(logits)
+            return -jnp.mean(lp[jnp.arange(ys.shape[0]), ys])
+
+        # train with the exact path
+        lr = 3e-3
+        for epoch in range(4 if quick else 10):
+            for i in range(0, n_train, 16):
+                g = jax.grad(loss_fn)(params, xtr[i:i + 16],
+                                      ytr[i:i + 16])
+                params = jax.tree.map(lambda p, gg: p - lr * gg,
+                                      params, g)
+
+        accs = {}
+        for mode, comp in [("traditional", "linear"),
+                           ("lpcn", "linear"), ("lpcn", "mlp"),
+                           ("mesorasi", "linear")]:
+            fwd = jax.jit(jax.vmap(
+                lambda p, x: _forward(p, x, mode, key, comp,
+                                      activation), in_axes=(None, 0)))
+            pred = jnp.argmax(fwd(params, xte), -1)
+            tag = mode if mode != "lpcn" else f"lpcn_{comp}"
+            accs[tag] = float((pred == yte).mean())
+        results[act_name] = accs
+    return results

@@ -1,0 +1,153 @@
+"""Analytical accelerator performance model (the CPU-container stand-in
+for the paper's cycle-accurate RTL simulation — DESIGN.md §2).
+
+Every constant is from the paper or the cited baselines:
+  * 250 MHz FPGA clock (Arria 10 GX prototypes), 1 GHz ASIC variant
+  * FCU: 16×16 systolic array (all baselines, §VI-A) -> 256 MAC/cycle
+  * DSU (per baseline §VI-C):
+      - PointACC: 16 parallel distance calculators + 32-way bitonic
+        ranking -> S·N/16 distance cycles + S·N/32·log(32) sort cycles
+      - HgPCN: octree narrows candidates ~8x, then PointACC-style rank
+      - EdgePC: Morton-window (W=128) approximate gather
+      - Crescent: KD-bucket (2 leaves x 64) approximate gather
+  * Islandization Unit: 1,497 cycles/frame (paper Table II) — <1 %
+  * off-chip bandwidth: 16 B/cycle (DDR4-class @ 250 MHz = 4 GB/s)
+  * GDPCA: Bit-Pragmatic FCU — cycles scale with average nonzero-bit
+    fraction of the *delta* inputs (≈ 0.45 of 8-bit baseline per [5]/[34])
+  * Mesorasi: FC = PFT build (N evals) + delayed-aggregation gather;
+    on-chip: gather overlaps compute; off-chip: PFT refetch serializes.
+
+Latency(frame) = Σ_layers [ DSU(layer) + FCU(layer) ] + IslU
+FCU(layer) = max(compute_cycles, fetch_cycles)  (double-buffered overlap)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+CLOCK_FPGA = 250e6
+MAC_PER_CYCLE = 256          # 16x16 systolic
+BYTES_PER_CYCLE = 16         # off-chip
+ISLAND_UNIT_CYCLES = 1497    # paper Table II
+FEAT_BYTES = 4
+
+
+@dataclass
+class LayerWork:
+    """Measured workload of one PCN layer (from core.workload)."""
+    n_points: int            # input cloud size N
+    n_subsets: int           # S
+    k: int
+    f_in: int
+    f_out: int
+    base_evals: int          # baseline MLP point-evals (= S*K)
+    lpcn_evals: int          # islandized MLP point-evals
+    base_fetches: int
+    lpcn_fetches: int
+
+
+def mlp_macs(f_in: int, f_out: int, hidden: tuple = ()) -> int:
+    dims = [f_in, *hidden, f_out]
+    return sum(a * b for a, b in zip(dims[:-1], dims[1:]))
+
+
+def dsu_cycles(method: str, n: int, s: int, k: int) -> int:
+    if method == "pointacc":
+        dist = s * n // 16
+        sort = s * (n // 32) * 5
+        return dist + sort
+    if method == "hgpcn":
+        cand = max(n // 8, 4 * k)
+        return s * 400 // 16 + s * cand // 16 + s * (cand // 32) * 5
+    if method == "edgepc":
+        w = 128
+        return s * w // 16 + s * (w // 32) * 5
+    if method == "crescent":
+        w = 2 * 64
+        return s * w // 16 + s * (w // 32) * 5
+    raise ValueError(method)
+
+
+def fcu_cycles(evals: int, macs_per_point: int, fetches: int,
+               f_in: int, weight_bytes: int,
+               overlap: bool = True) -> tuple:
+    compute = evals * macs_per_point // MAC_PER_CYCLE
+    fetch = (fetches * f_in * FEAT_BYTES
+             + (-(-evals // 16)) // 16 * weight_bytes) // BYTES_PER_CYCLE
+    if overlap:
+        return max(compute, fetch), compute, fetch
+    return compute + fetch, compute, fetch
+
+
+def frame_latency(method: str, layers: list[LayerWork],
+                  mode: str = "lpcn", hidden: tuple = ()) -> dict:
+    """Cycles for one point-cloud frame.  mode: traditional | lpcn."""
+    total_dsu = total_fcu = 0
+    for L in layers:
+        total_dsu += dsu_cycles(method, L.n_points, L.n_subsets, L.k)
+        macs = mlp_macs(L.f_in, L.f_out, hidden)
+        wbytes = macs * 1  # int8/bf8 weights on-chip-resident per tile
+        if mode == "traditional":
+            c, _, _ = fcu_cycles(L.base_evals, macs, L.base_fetches,
+                                 L.f_in, wbytes)
+        else:
+            c, _, _ = fcu_cycles(L.lpcn_evals, macs, L.lpcn_fetches,
+                                 L.f_in, wbytes)
+        total_fcu += c
+    isl = ISLAND_UNIT_CYCLES if mode == "lpcn" else 0
+    return {"dsu": total_dsu, "fcu": total_fcu, "islu": isl,
+            "total": total_dsu + total_fcu + isl}
+
+
+def speedup(method: str, layers: list[LayerWork],
+            hidden: tuple = ()) -> dict:
+    base = frame_latency(method, layers, "traditional", hidden)
+    ours = frame_latency(method, layers, "lpcn", hidden)
+    return {
+        "method": method,
+        "baseline_cycles": base["total"],
+        "lpcn_cycles": ours["total"],
+        "speedup": base["total"] / max(ours["total"], 1),
+        "dsu_frac_baseline": base["dsu"] / base["total"],
+        "islu_frac": ours["islu"] / ours["total"],
+        "baseline_ms": base["total"] / CLOCK_FPGA * 1e3,
+        "lpcn_ms": ours["total"] / CLOCK_FPGA * 1e3,
+    }
+
+
+# ---- Fig. 17: FC-only speedups (GDPCA / Mesorasi) --------------------------
+
+def fc_speedup_gdpca(layers: list[LayerWork], hidden: tuple = (),
+                     nonzero_bit_frac: float = 0.45) -> float:
+    """GDPCA: same eval count, Bit-Pragmatic cycles scale with nonzero
+    bits of delta-encoded inputs."""
+    base = ours = 0
+    for L in layers:
+        macs = mlp_macs(L.f_in, L.f_out, hidden)
+        base += L.base_evals * macs
+        ours += int(L.base_evals * macs * nonzero_bit_frac)
+    return base / max(ours, 1)
+
+
+def fc_speedup_lpcn(layers: list[LayerWork], hidden: tuple = ()) -> float:
+    base = ours = 0
+    for L in layers:
+        macs = mlp_macs(L.f_in, L.f_out, hidden)
+        base += L.base_evals * macs // MAC_PER_CYCLE
+        c, _, _ = fcu_cycles(L.lpcn_evals, macs, L.lpcn_fetches, L.f_in,
+                             macs)
+        ours += c
+    return base / max(ours, 1)
+
+
+def fc_speedup_mesorasi(layers: list[LayerWork], hidden: tuple = (),
+                        on_chip: bool = True) -> float:
+    base = ours = 0
+    for L in layers:
+        macs = mlp_macs(L.f_in, L.f_out, hidden)
+        base += L.base_evals * macs // MAC_PER_CYCLE
+        evals = L.n_points + L.n_subsets        # PFT + centers
+        compute = evals * macs // MAC_PER_CYCLE
+        # delayed-aggregation phase: refetch F_out feats for every slot
+        refetch = (L.base_evals * L.f_out * FEAT_BYTES) // BYTES_PER_CYCLE
+        ours += max(compute, refetch) if on_chip else compute + refetch
+    return base / max(ours, 1)

@@ -1,0 +1,193 @@
+"""Benchmark driver — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (us_per_call = modeled
+accelerator frame latency in µs where applicable, else wall-clock of the
+measurement; derived = the figure's headline metric).
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only SECTION]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+
+def _emit(rows, name, us, derived):
+    rows.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+# ---- Fig. 4(b): overlap-vs-distance motivation study -----------------------
+
+def bench_overlap_study(rows, quick: bool):
+    import jax
+    import jax.numpy as jnp
+    from repro.core.pipeline import LPCNConfig, data_structuring
+    from repro.core.workload import overlap_histogram
+    from repro.data.synthetic import make_cloud
+    rng = np.random.default_rng(0)
+    xyz = jnp.asarray(make_cloud(rng, 1024))
+    for sa, (s, k) in {"SA1": (512, 32), "SA2": (128, 64)}.items():
+        cfg = LPCNConfig(n_centers=s, k=k)
+        t0 = time.time()
+        cidx, nbr = data_structuring(cfg, xyz, jax.random.PRNGKey(0))
+        hist = overlap_histogram(nbr, xyz[cidx])
+        us = (time.time() - t0) * 1e6
+        near_mean, near_max = hist["near_0_16"]
+        rest_mean, _ = hist["rest"]
+        _emit(rows, f"fig4b_overlap_{sa}_top16", us,
+              f"mean={near_mean:.3f} max={near_max:.3f} "
+              f"rest_mean={rest_mean:.3f}")
+
+
+# ---- Fig. 15: theoretical workload optimization -----------------------------
+
+def bench_workload_reduction(rows, quick: bool):
+    from .workloads import BENCHMARKS, layer_works, totals
+    for name, (model, _ds, n) in BENCHMARKS.items():
+        if quick and n > 4096:
+            continue
+        t0 = time.time()
+        lw = layer_works(model, n)
+        t = totals(lw)
+        us = (time.time() - t0) * 1e6
+        _emit(rows, f"fig15_workload_{name}", us,
+              f"fetch_saving={t['fetch_saving']:.3f} "
+              f"mem_saving={t['mem_saving']:.3f} "
+              f"compute_saving={t['compute_saving']:.3f}")
+
+
+# ---- Fig. 16: speedup over the four DS-accelerator baselines ---------------
+
+def bench_speedup_baselines(rows, quick: bool):
+    from .perfmodel import speedup
+    from .workloads import BENCHMARKS, layer_works
+    for name, (model, _ds, n) in BENCHMARKS.items():
+        if quick and n > 4096:
+            continue
+        lw = layer_works(model, n)
+        for method in ("pointacc", "hgpcn", "edgepc", "crescent"):
+            s = speedup(method, lw)
+            us = s["lpcn_ms"] * 1e3
+            _emit(rows, f"fig16_{method}_{name}", us,
+                  f"speedup={s['speedup']:.2f} "
+                  f"dsu_frac={s['dsu_frac_baseline']:.2f} "
+                  f"islu_frac={s['islu_frac']:.4f}")
+
+
+# ---- Fig. 17: FC speedup vs GDPCA / Mesorasi --------------------------------
+
+def bench_fc_speedup(rows, quick: bool):
+    from .perfmodel import (fc_speedup_gdpca, fc_speedup_lpcn,
+                            fc_speedup_mesorasi)
+    from .workloads import BENCHMARKS, layer_works
+    for name, (model, _ds, n) in BENCHMARKS.items():
+        if quick and n > 4096:
+            continue
+        t0 = time.time()
+        lw = layer_works(model, n)
+        us = (time.time() - t0) * 1e6
+        _emit(rows, f"fig17_fc_{name}", us,
+              f"gdpca={fc_speedup_gdpca(lw):.2f} "
+              f"lpcn={fc_speedup_lpcn(lw):.2f} "
+              f"mesorasi_onchip={fc_speedup_mesorasi(lw, on_chip=True):.2f} "
+              f"mesorasi_offchip="
+              f"{fc_speedup_mesorasi(lw, on_chip=False):.2f}")
+
+
+# ---- Fig. 18/19: large-scale PCNs (PointNeXt / PointVector) ----------------
+
+def bench_large_scale(rows, quick: bool):
+    from .perfmodel import fc_speedup_mesorasi, frame_latency
+    from .workloads import LARGE_SCALE, layer_works, totals
+    for name, (model, _ds, n) in LARGE_SCALE.items():
+        if quick and n > 8192:
+            continue
+        t0 = time.time()
+        # FractalCloud setting: block-based approximate DS (morton-strided
+        # sampling + window gather) — also the only tractable DS at 65k+
+        lw = layer_works(model, n, neighbor="edgepc", sampler="morton")
+        t = totals(lw)
+        # FractalCloud = block DS + Mesorasi delayed-aggregation FC;
+        # L-PCN plug-in replaces the FC optimization
+        base = frame_latency("crescent", lw, "traditional")
+        ours = frame_latency("crescent", lw, "lpcn")
+        mes_fc_speed = fc_speedup_mesorasi(lw, on_chip=False)
+        fractal = base["dsu"] + base["fcu"] / max(mes_fc_speed, 1e-9)
+        us = (time.time() - t0) * 1e6
+        _emit(rows, f"fig18_19_{name}", us,
+              f"fetch_saving={t['fetch_saving']:.3f} "
+              f"compute_saving={t['compute_saving']:.3f} "
+              f"speedup_vs_fractalcloud="
+              f"{fractal / max(ours['total'], 1):.2f}")
+
+
+# ---- Fig. 20: accuracy ------------------------------------------------------
+
+def bench_accuracy(rows, quick: bool):
+    from .accuracy import run_accuracy
+    t0 = time.time()
+    res = run_accuracy(quick=quick)
+    us = (time.time() - t0) * 1e6
+    for name, accs in res.items():
+        _emit(rows, f"fig20_accuracy_{name}", us,
+              " ".join(f"{k}={v:.3f}" for k, v in accs.items()))
+
+
+# ---- Fig. 22: sensitivity ---------------------------------------------------
+
+def bench_sensitivity(rows, quick: bool):
+    from .perfmodel import speedup
+    from .workloads import layer_works, totals
+    sizes = [16, 32] if quick else [8, 16, 32, 64]
+    caps = [2.0] if quick else [1.0, 2.0, 4.0]
+    for isz in sizes:
+        for cx in caps:
+            t0 = time.time()
+            lw = layer_works("pointnet2_c", 1024,
+                             {"island_size": isz,
+                              "island_capacity": 2 * isz,
+                              "cache_capacity_x": cx})
+            t = totals(lw)
+            s = speedup("pointacc", lw)
+            us = (time.time() - t0) * 1e6
+            _emit(rows, f"fig22_sens_isz{isz}_cap{cx}", us,
+                  f"fetch_saving={t['fetch_saving']:.3f} "
+                  f"compute_saving={t['compute_saving']:.3f} "
+                  f"speedup={s['speedup']:.2f}")
+
+
+SECTIONS = {
+    "overlap": bench_overlap_study,
+    "workload": bench_workload_reduction,
+    "speedup": bench_speedup_baselines,
+    "fc": bench_fc_speedup,
+    "large": bench_large_scale,
+    "accuracy": bench_accuracy,
+    "sensitivity": bench_sensitivity,
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--out", default="results/bench.json")
+    args = ap.parse_args(argv)
+    rows: list = []
+    print("name,us_per_call,derived")
+    for name, fn in SECTIONS.items():
+        if args.only and name != args.only:
+            continue
+        fn(rows, args.quick)
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    json.dump([{"name": n, "us": u, "derived": d} for n, u, d in rows],
+              open(args.out, "w"), indent=1)
+
+
+if __name__ == "__main__":
+    main()

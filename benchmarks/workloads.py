@@ -1,0 +1,131 @@
+"""Shared benchmark machinery: run PCN models on synthetic datasets and
+collect per-layer LayerWork records for the perf model."""
+from __future__ import annotations
+
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mlp import init_mlp
+from repro.core.pipeline import LPCNConfig, data_structuring
+from repro.core.hub_schedule import build_schedule
+from repro.core.islandize import islandize
+from repro.core.workload import analyze
+from repro.data.synthetic import DATASETS, make_cloud
+from repro.models import MODEL_ZOO
+
+from .perfmodel import LayerWork
+
+# benchmark name -> (model key, dataset, n_points)
+BENCHMARKS = {
+    "pointnet2_c@modelnet40": ("pointnet2_c", "modelnet40", 1024),
+    "pointnet2_ps@shapenet": ("pointnet2_ps", "shapenet", 2048),
+    "pointnet2_s@s3dis": ("pointnet2_s", "s3dis", 4096),
+    "dgcnn_c@modelnet40": ("dgcnn_c", "modelnet40", 1024),
+    "dgcnn_s@scannet": ("dgcnn_s", "scannet", 8192),
+}
+
+LARGE_SCALE = {
+    "pointnext_s@s3dis8k": ("pointnext_s", "scannet", 8192),
+    "pointnext_s@s3dis64k": ("pointnext_s", "s3dis_large", 65536),
+    "pointvector_l@s3dis8k": ("pointvector_l", "scannet", 8192),
+}
+
+
+def scaled_spec(model_key: str, n_points: int):
+    """Scale a model spec's center counts to the dataset size."""
+    mod, spec = MODEL_ZOO[model_key]
+    if model_key.startswith("dgcnn"):
+        from repro.models.dgcnn import with_points
+        return mod, with_points(spec, n_points)
+    # SA stacks: scale n_centers proportionally to the reference input
+    ref = {"pointnet2_c": 1024, "pointnet2_ps": 2048, "pointnet2_s": 4096,
+           "pointnext_s": 8192, "pointvector_l": 8192}[model_key]
+    factor = n_points / ref
+    from repro.models.common import BlockSpec
+    blocks = tuple(
+        BlockSpec(max(int(b.n_centers * factor), 16), b.k, b.mlp_dims,
+                  b.radius, b.kind, b.sampler, b.neighbor)
+        for b in spec.blocks)
+    return mod, replace(spec, blocks=blocks)
+
+
+def layer_works(model_key: str, n_points: int, isl_kw: dict | None = None,
+                neighbor: str = "pointacc", seed: int = 0,
+                n_clouds: int = 1, sampler: str | None = None
+                ) -> list[LayerWork]:
+    """Run the DS + islandization for each layer of the model over
+    ``n_clouds`` synthetic clouds and return averaged LayerWork records
+    (measured, not estimated)."""
+    mod, spec = scaled_spec(model_key, n_points)
+    isl_kw = isl_kw or {}
+    rng = np.random.default_rng(seed)
+    scene = n_points >= 4096
+    out: list[LayerWork] = []
+    for c in range(n_clouds):
+        xyz = jnp.asarray(make_cloud(rng, n_points, scene))
+        cur_xyz = xyz
+        f_prev = spec.in_feats
+        key = jax.random.PRNGKey(seed + c)
+        for li, b in enumerate(spec.blocks):
+            key, k1, k2 = jax.random.split(key, 3)
+            cfg = LPCNConfig(
+                n_centers=b.n_centers, k=b.k,
+                sampler=(sampler or b.sampler) if b.sampler != "all"
+                else b.sampler,
+                neighbor=neighbor,
+                block_kind=b.kind,
+                island_size=isl_kw.get("island_size", 32),
+                island_capacity=isl_kw.get("island_capacity", 64),
+                cache_capacity_x=isl_kw.get("cache_capacity_x", 2.0),
+                hub_select=isl_kw.get("hub_select", "random"))
+            cidx, nbr = data_structuring(cfg, cur_xyz, k1)
+            centers = cur_xyz[cidx]
+            n_hubs = max(int(cidx.shape[0]) // cfg.island_size, 1)
+            isl = islandize(centers, n_hubs, capacity=cfg.island_capacity,
+                            hub_select=cfg.hub_select, key=k2)
+            sched = build_schedule(isl, nbr, cfg.cache_capacity)
+            r = analyze(isl, sched, cfg.k).concrete()
+            f_in = (3 + f_prev) if b.kind == "sa" else 2 * f_prev
+            f_out = b.mlp_dims[-1]
+            lw = LayerWork(
+                n_points=int(cur_xyz.shape[0]), n_subsets=r.n_subsets,
+                k=b.k, f_in=f_in, f_out=f_out,
+                base_evals=r.baseline_mlp_evals,
+                lpcn_evals=r.lpcn_mlp_evals,
+                base_fetches=r.baseline_fetches,
+                lpcn_fetches=r.lpcn_fetches)
+            if c == 0:
+                out.append(lw)
+            else:  # running average
+                o = out[li]
+                for fld in ("base_evals", "lpcn_evals", "base_fetches",
+                            "lpcn_fetches"):
+                    setattr(o, fld,
+                            (getattr(o, fld) * c + getattr(lw, fld))
+                            // (c + 1))
+            # downsample for next layer (SA) or keep all (edge)
+            if b.sampler != "all":
+                cur_xyz = centers
+            f_prev = f_out
+    return out
+
+
+def totals(layers: list[LayerWork]) -> dict:
+    """Frame-level savings.  Overall-memory model (paper's yellow bars):
+    feature traffic = fetches x f_in x 4B; layer weights are fetched ONCE
+    per frame (on-chip resident during the layer, as in all baselines)."""
+    bf = sum(l.base_fetches * l.f_in * 4 for l in layers)
+    lf = sum(l.lpcn_fetches * l.f_in * 4 for l in layers)
+    bcnt = sum(l.base_fetches for l in layers)
+    lcnt = sum(l.lpcn_fetches for l in layers)
+    bev = sum(l.base_evals * (l.f_in * l.f_out) for l in layers)
+    lev = sum(l.lpcn_evals * (l.f_in * l.f_out) for l in layers)
+    wbytes = sum(l.f_in * l.f_out * 4 for l in layers)
+    return {
+        "fetch_saving": 1 - lcnt / max(bcnt, 1),
+        "compute_saving": 1 - lev / max(bev, 1),
+        "mem_saving": 1 - (lf + wbytes) / max(bf + wbytes, 1),
+    }

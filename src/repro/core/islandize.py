@@ -1,0 +1,191 @@
+"""Octree-based Islandization (paper §IV-A) — TPU-native implementation.
+
+Partition the sampled point cloud (central points) into *Islands* of
+spatially adjacent point subsets:
+
+  Step 1  select Hub points among the sampled centers (random, as in the
+          paper's Partitioning Module; FPS optional for better coverage);
+  Step 2  round-based gathering of adjacent Sampled-Octree nodes around
+          every hub (multi-source BFS over occupied voxels,
+          26-connectivity).  A node reached in an earlier round is "nearer"
+          (paper rule); same-round ties go to the hub with the smallest
+          euclidean distance to the voxel center;
+  Step 3  islands = point subsets whose centers share a Hub List — every
+          center lands in exactly ONE island (partition property);
+  Step 4  Island Lists: hub subset first, then BFS-round order (the paper's
+          inside-to-outside processing order), padded to a fixed capacity.
+
+All steps are jittable with static shapes.  Voxels are nodes of the linear
+Sampled Octree at ``level`` (so "adjacent octree node" == adjacent occupied
+voxel).  Centers whose island is already at capacity overflow into
+``solo_centers`` and are processed without reuse (mirrors fixed hardware
+capacity; counted honestly by the workload model).
+
+Implementation detail vs. the paper: if the occupied-voxel graph is
+disconnected and BFS saturates before every voxel is reached, remaining
+voxels are assigned to the globally nearest hub (the paper's stopping rule
+"until every central point belongs to a Hub List" assumes connectivity).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import morton
+from .octree import adjacent_node_keys
+from .sampling import farthest_point_sampling
+
+UINT32_SENTINEL = jnp.uint32(0xFFFFFFFF)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class Islands:
+    """Result of islandization.
+
+    members:  (H, M) int32 — center (subset) indices per island, hub at
+              slot 0, -1 padding.  A center appears in at most one island.
+    hub:      (H,) int32 — hub center index per island (== members[:, 0]).
+    solo:     (S,) bool — centers that overflowed island capacity; processed
+              without reuse.
+    round_of: (S,) int32 — BFS round at which each center's voxel was
+              gathered (0 = hub's own voxel).
+    """
+    members: jnp.ndarray
+    hub: jnp.ndarray
+    solo: jnp.ndarray
+    round_of: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.members, self.hub, self.solo, self.round_of), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def n_islands(self) -> int:
+        return self.members.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.members.shape[1]
+
+
+@partial(jax.jit,
+         static_argnames=("n_hubs", "level", "capacity", "hub_select",
+                          "max_rounds"))
+def islandize(centers: jnp.ndarray, n_hubs: int, *, level: int = 4,
+              capacity: int = 64, hub_select: str = "random",
+              max_rounds: int = 32,
+              key: jax.Array | None = None) -> Islands:
+    """Partition ``centers`` (S, 3) into ``n_hubs`` islands.
+
+    ``capacity`` = max subsets per island (paper default: 32; we default to
+    2x for headroom).  Returns :class:`Islands`.
+    """
+    S = centers.shape[0]
+    if key is None:
+        key = jax.random.PRNGKey(0)
+
+    # ---- voxelization of the Sampled Octree at `level` -------------------
+    codes = morton.morton_codes(centers, morton.MAX_DEPTH)
+    ckeys = morton.node_key(codes, level, morton.MAX_DEPTH)        # (S,)
+
+    # unique occupied voxels, padded to S with UINT32_SENTINEL sentinels
+    sort_keys = jnp.sort(ckeys)
+    is_new = jnp.concatenate([jnp.array([True]),
+                              sort_keys[1:] != sort_keys[:-1]])
+    # unique keys compacted to the front, UINT32_SENTINEL sentinel padding
+    # (codes are 63-bit so the sentinel can never collide with a real key)
+    ukeys = jnp.sort(jnp.where(is_new, sort_keys, UINT32_SENTINEL))
+
+    vox_of_center = jnp.searchsorted(ukeys, ckeys).astype(jnp.int32)  # (S,)
+
+    # voxel center coordinates (for same-round nearest-hub tie-break)
+    side = 1 << level
+    vxyz = morton.decode(jnp.where(ukeys == UINT32_SENTINEL, jnp.uint32(0),
+                                   ukeys)).astype(jnp.float32)
+    lo = centers.min(0)
+    extent = jnp.maximum(jnp.max(centers.max(0) - lo), 1e-9)
+    vcenter = lo + (vxyz + 0.5) / side * extent                      # (S, 3)
+
+    # 27-neighborhood voxel ids (exact match into ukeys, else -1)
+    nkeys = adjacent_node_keys(ukeys, level, morton.MAX_DEPTH)       # (S,27)
+    npos = jnp.searchsorted(ukeys, nkeys).astype(jnp.int32)
+    npos = jnp.clip(npos, 0, S - 1)
+    nvalid = (ukeys[npos] == nkeys) & (nkeys != UINT32_SENTINEL)
+    nbr = jnp.where(nvalid, npos, -1)                                # (S,27)
+
+    # ---- Step 1: hub selection -------------------------------------------
+    if hub_select == "fps":
+        hub_idx = farthest_point_sampling(centers, n_hubs)
+    else:  # random (paper default)
+        hub_idx = jax.random.choice(key, S, (n_hubs,), replace=False)
+    hub_idx = hub_idx.astype(jnp.int32)                              # (H,)
+    hub_xyz = centers[hub_idx]                                       # (H, 3)
+    hub_vox = vox_of_center[hub_idx]                                 # (H,)
+
+    # ---- Step 2: multi-source BFS over occupied voxels ---------------
+    INF = jnp.float32(jnp.inf)
+    assign0 = jnp.full((S,), -1, jnp.int32)
+    # seed: hub voxels (later hub wins ties on the same voxel — rare)
+    assign0 = assign0.at[hub_vox].set(jnp.arange(n_hubs, dtype=jnp.int32))
+    round0 = jnp.where(assign0 >= 0, 0, jnp.iinfo(jnp.int32).max)
+    valid_vox = ukeys != UINT32_SENTINEL
+
+    def bfs_round(r, state):
+        assign, rnd = state
+        # neighbor assignments from previous rounds only
+        nass = jnp.where(nbr >= 0, assign[jnp.clip(nbr, 0, S - 1)], -1)
+        nrnd = jnp.where(nbr >= 0, rnd[jnp.clip(nbr, 0, S - 1)],
+                         jnp.iinfo(jnp.int32).max)
+        frontier_nbr = (nass >= 0) & (nrnd < r)                      # (S,27)
+        # distance from the candidate hub to this voxel's center
+        cand_hub_xyz = hub_xyz[jnp.clip(nass, 0, n_hubs - 1)]        # (S,27,3)
+        d = jnp.sum((cand_hub_xyz - vcenter[:, None, :]) ** 2, -1)
+        d = jnp.where(frontier_nbr, d, INF)
+        best = jnp.argmin(d, axis=-1)                                 # (S,)
+        best_hub = jnp.take_along_axis(nass, best[:, None], 1)[:, 0]
+        reach = (jnp.min(d, axis=-1) < INF) & (assign < 0) & valid_vox
+        assign = jnp.where(reach, best_hub, assign)
+        rnd = jnp.where(reach, r, rnd)
+        return assign, rnd
+
+    assign, vrnd = jax.lax.fori_loop(1, max_rounds + 1, bfs_round,
+                                     (assign0, round0))
+
+    # fallback: disconnected voxels -> globally nearest hub
+    unassigned = (assign < 0) & valid_vox
+    d_all = jnp.sum((vcenter[:, None, :] - hub_xyz[None, :, :]) ** 2, -1)
+    nearest = jnp.argmin(d_all, axis=-1).astype(jnp.int32)
+    assign = jnp.where(unassigned, nearest, assign)
+    vrnd = jnp.where(unassigned, max_rounds + 1, vrnd)
+
+    # ---- Step 3: per-center island id ------------------------------------
+    island_of = assign[vox_of_center]                                # (S,)
+    round_of = vrnd[vox_of_center].astype(jnp.int32)                 # (S,)
+
+    # ---- Step 4: Island Lists (hub first, then round order) --------------
+    d_to_hub = jnp.sum((centers - hub_xyz[island_of]) ** 2, -1)
+    is_hub = jnp.zeros((S,), bool).at[hub_idx].set(True)
+    # sort key: (island, hub-first, round, distance)
+    ordr = jnp.lexsort((d_to_hub, round_of.astype(jnp.float32),
+                        (~is_hub).astype(jnp.int32), island_of))
+    # rank within island
+    sorted_isl = island_of[ordr]
+    pos_in_isl = jnp.arange(S) - jnp.searchsorted(sorted_isl, sorted_isl)
+    M = capacity
+    fits = pos_in_isl < M
+    members = jnp.full((n_hubs, M), -1, jnp.int32)
+    # overflow entries are routed to row n_hubs (out of bounds -> dropped)
+    members = members.at[jnp.where(fits, sorted_isl, n_hubs),
+                         jnp.clip(pos_in_isl, 0, M - 1)].set(
+        ordr.astype(jnp.int32), mode="drop")
+    solo = jnp.zeros((S,), bool).at[ordr].set(~fits)
+
+    return Islands(members=members, hub=hub_idx, solo=solo,
+                   round_of=round_of)

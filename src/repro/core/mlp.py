@@ -1,0 +1,80 @@
+"""Shared point-MLP of the FC step (the paper's systolic-array workload).
+
+Two activation placements (paper §VI-E):
+  * ``per_layer`` — ReLU after every layer but the last (PointNet++
+    default); delta compensation is approximate.
+  * ``block_end`` — all layers linear, one activation applied *after*
+    pooling (DGCNN(c) / PointVector-L style); compensation is exact.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class Dense:
+    w: jnp.ndarray
+    b: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.w, self.b), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class MLP:
+    layers: list  # [Dense]
+    activation: str = "per_layer"  # per_layer | block_end
+
+    def tree_flatten(self):
+        return (self.layers,), (self.activation,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux[0])
+
+    @property
+    def f_in(self) -> int:
+        return self.layers[0].w.shape[0]
+
+    @property
+    def f_out(self) -> int:
+        return self.layers[-1].w.shape[1]
+
+    def flops_per_point(self) -> int:
+        return sum(2 * l.w.shape[0] * l.w.shape[1] for l in self.layers)
+
+
+def init_mlp(key: jax.Array, dims: list[int],
+             activation: str = "per_layer",
+             dtype=jnp.float32) -> MLP:
+    layers = []
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (a, b), dtype) * jnp.sqrt(2.0 / a)
+        layers.append(Dense(w=w, b=jnp.zeros((b,), dtype)))
+    return MLP(layers=layers, activation=activation)
+
+
+def apply_mlp(mlp: MLP, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., f_in) -> (..., f_out)."""
+    n = len(mlp.layers)
+    for i, l in enumerate(mlp.layers):
+        x = x @ l.w + l.b
+        if mlp.activation == "per_layer" and i < n - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def post_pool_activation(mlp: MLP, x: jnp.ndarray) -> jnp.ndarray:
+    if mlp.activation == "block_end":
+        return jax.nn.relu(x)
+    return x

@@ -1,0 +1,120 @@
+"""Morton (Z-order) codes — the octree linearization used throughout L-PCN.
+
+The paper's Octree-Search Engines traverse a pointer octree keyed by Morton
+codes [35].  On TPU we use the *linear octree* equivalent: points are sorted
+by Morton code once; every octree node at depth d is then a contiguous range
+of the sorted array, and octree search becomes binary search
+(``jnp.searchsorted``) over the keys — fully vectorized, no pointer chasing.
+
+Hardware adaptation note (DESIGN.md §2): TPUs have no native 64-bit integer
+lanes, so codes are uint32 with 10 bits/axis (1024^3 voxels).  That bounds
+octree depth at 10 — ample for the paper's workloads (islandization uses
+level <= 8; point identity is by index, not by code, so code collisions in
+ultra-dense clouds only make two points share a voxel, never corrupt
+identity).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MAX_DEPTH = 10  # 10 bits per axis -> 30-bit codes in uint32
+SENTINEL = 0xFFFFFFFF  # > any 30-bit code
+
+
+def _part1by2(x: jnp.ndarray) -> jnp.ndarray:
+    """Spread the low 10 bits of ``x`` so there are two zero bits between
+    each original bit (uint32 in/out)."""
+    x = x.astype(jnp.uint32) & jnp.uint32(0x3FF)
+    x = (x | (x << jnp.uint32(16))) & jnp.uint32(0x030000FF)
+    x = (x | (x << jnp.uint32(8))) & jnp.uint32(0x0300F00F)
+    x = (x | (x << jnp.uint32(4))) & jnp.uint32(0x030C30C3)
+    x = (x | (x << jnp.uint32(2))) & jnp.uint32(0x09249249)
+    return x
+
+
+def _compact1by2(x: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`_part1by2`."""
+    x = x.astype(jnp.uint32) & jnp.uint32(0x09249249)
+    x = (x | (x >> jnp.uint32(2))) & jnp.uint32(0x030C30C3)
+    x = (x | (x >> jnp.uint32(4))) & jnp.uint32(0x0300F00F)
+    x = (x | (x >> jnp.uint32(8))) & jnp.uint32(0x030000FF)
+    x = (x | (x >> jnp.uint32(16))) & jnp.uint32(0x3FF)
+    return x
+
+
+def quantize(points: jnp.ndarray, depth: int = MAX_DEPTH,
+             lo: jnp.ndarray | None = None,
+             hi: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Quantize float xyz points into integer voxel coordinates at ``depth``.
+
+    points: (..., 3) float.  Returns (..., 3) uint32 in [0, 2**depth).
+    ``lo``/``hi`` give the bounding box; default = per-cloud min/max.
+    """
+    if lo is None:
+        lo = points.reshape(-1, 3).min(axis=0)
+    if hi is None:
+        hi = points.reshape(-1, 3).max(axis=0)
+    extent = jnp.maximum(jnp.max(hi - lo), 1e-9)
+    n = (1 << depth) - 1
+    scaled = (points - lo) / extent * n
+    return jnp.clip(scaled, 0, n).astype(jnp.uint32)
+
+
+def encode(ivox: jnp.ndarray) -> jnp.ndarray:
+    """Interleave integer voxel coords (..., 3) uint32 -> Morton uint32."""
+    x = _part1by2(ivox[..., 0])
+    y = _part1by2(ivox[..., 1])
+    z = _part1by2(ivox[..., 2])
+    return x | (y << jnp.uint32(1)) | (z << jnp.uint32(2))
+
+
+def decode(codes: jnp.ndarray) -> jnp.ndarray:
+    """Morton uint32 -> (..., 3) uint32 voxel coordinates."""
+    x = _compact1by2(codes)
+    y = _compact1by2(codes >> jnp.uint32(1))
+    z = _compact1by2(codes >> jnp.uint32(2))
+    return jnp.stack([x, y, z], axis=-1).astype(jnp.uint32)
+
+
+def morton_codes(points: jnp.ndarray, depth: int = MAX_DEPTH,
+                 lo=None, hi=None) -> jnp.ndarray:
+    """points (..., 3) float -> Morton codes (...,) uint32 at ``depth``."""
+    return encode(quantize(points, depth, lo, hi))
+
+
+def node_key(codes: jnp.ndarray, depth: int, full_depth: int = MAX_DEPTH
+             ) -> jnp.ndarray:
+    """Octree-node key at ``depth`` of a point coded at ``full_depth``:
+    drop the trailing 3*(full_depth-depth) bits."""
+    shift = jnp.uint32(3 * (full_depth - depth))
+    return codes >> shift
+
+
+# ---------------------------------------------------------------------------
+# numpy twins (used by analytics / dataset tooling; bit-identical)
+# ---------------------------------------------------------------------------
+
+def _np_part1by2(x: np.ndarray) -> np.ndarray:
+    x = x.astype(np.uint32) & np.uint32(0x3FF)
+    x = (x | (x << np.uint32(16))) & np.uint32(0x030000FF)
+    x = (x | (x << np.uint32(8))) & np.uint32(0x0300F00F)
+    x = (x | (x << np.uint32(4))) & np.uint32(0x030C30C3)
+    x = (x | (x << np.uint32(2))) & np.uint32(0x09249249)
+    return x
+
+
+def np_morton_codes(points: np.ndarray, depth: int = MAX_DEPTH,
+                    lo=None, hi=None) -> np.ndarray:
+    pts = np.asarray(points, dtype=np.float64)
+    if lo is None:
+        lo = pts.reshape(-1, 3).min(axis=0)
+    if hi is None:
+        hi = pts.reshape(-1, 3).max(axis=0)
+    extent = max(float(np.max(np.asarray(hi) - np.asarray(lo))), 1e-9)
+    n = (1 << depth) - 1
+    iv = np.clip((pts - lo) / extent * n, 0, n).astype(np.uint32)
+    return (_np_part1by2(iv[..., 0])
+            | (_np_part1by2(iv[..., 1]) << np.uint32(1))
+            | (_np_part1by2(iv[..., 2]) << np.uint32(2)))

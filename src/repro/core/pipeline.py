@@ -1,0 +1,253 @@
+"""The L-PCN Building Block: Data Structuring → Islandization → Feature
+Computation (paper Fig. 2/5/13), as one composable JAX module.
+
+``lpcn_block`` runs a full PCN building block for one cloud and returns
+(center_xyz, center_features, workload report).  Execution modes:
+
+  * ``traditional`` — every subset fully fetched + computed (the baseline
+    every accelerator in Fig. 16 uses for its FCU);
+  * ``lpcn`` — Octree-based Islandization + Hub-based Scheduling: pool MLP
+    once per island (hub-relative), compensated reuse for cached positions,
+    compact overflow buffer for the rest.  FLOPs genuinely shrink: the MLP
+    runs on (H·C + overflow_budget + fallback) points, not S·K.
+
+Block kinds:  ``sa``  — Set Abstraction (PointNet++/PointNeXt/PointVector),
+MLP input [p − c, f];  ``edge`` — EdgeConv (DGCNN), MLP input [f_j − f_i,
+f_i].  Delta compensation handles both (delta_comp.py).
+
+The Pallas kernels (kernels/gather_mlp, kernels/hub_reuse) implement the
+same two dataflows for the MXU; this file is their jnp oracle and the
+default CPU path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+import jax
+import jax.numpy as jnp
+
+from . import neighbor as nb
+from . import octree as oct
+from .delta_comp import compensation
+from .hub_schedule import Schedule, build_schedule
+from .islandize import Islands, islandize
+from .mlp import MLP, apply_mlp, post_pool_activation
+from .sampling import (farthest_point_sampling, morton_strided_sampling,
+                       random_sampling)
+from .workload import WorkloadReport, analyze
+
+
+@dataclass(frozen=True)
+class LPCNConfig:
+    """Hyper-parameters of one building block (paper defaults)."""
+    n_centers: int = 512
+    k: int = 32
+    sampler: str = "fps"              # fps | random | morton | all
+    neighbor: str = "pointacc"        # pointacc|hgpcn|edgepc|crescent|ball
+    radius: float = 0.2               # ball query radius
+    mode: str = "lpcn"                # traditional | lpcn
+    block_kind: str = "sa"            # sa | edge
+    island_size: int = 32             # subsets per island (paper default)
+    island_capacity: int = 64         # island-list rows (2x headroom)
+    cache_capacity_x: float = 2.0     # hub cache = x * k (paper: 2x)
+    compensation: str = "linear"      # linear | mlp
+    octree_level: int = 4
+    hub_select: str = "random"
+    overflow_frac: float = 0.5        # compact overflow buffer / (M*K)
+
+    @property
+    def cache_capacity(self) -> int:
+        return int(self.cache_capacity_x * self.k)
+
+
+def data_structuring(cfg: LPCNConfig, xyz: jnp.ndarray,
+                     key: jax.Array) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """DS step: sample centers, gather neighbors.  Returns
+    (center_idx (S,), nbr_idx (S, K))."""
+    tree = oct.build(xyz)
+    if cfg.sampler == "fps":
+        cidx = farthest_point_sampling(xyz, cfg.n_centers)
+    elif cfg.sampler == "random":
+        cidx = random_sampling(key, xyz.shape[0], cfg.n_centers)
+    elif cfg.sampler == "morton":
+        cidx = morton_strided_sampling(tree.order, cfg.n_centers)
+    elif cfg.sampler == "all":        # DGCCN: every point is a center
+        cidx = jnp.arange(xyz.shape[0], dtype=jnp.int32)
+    else:
+        raise ValueError(cfg.sampler)
+    centers = xyz[cidx]
+    if cfg.neighbor == "pointacc":
+        nbr = nb.knn_bruteforce(xyz, centers, cfg.k)
+    elif cfg.neighbor == "hgpcn":
+        # density-adaptive narrowing level: expected >= k points within
+        # the 27-voxel neighborhood (keeps HgPCN in the accurate class)
+        import math
+        lvl = max(1, min(cfg.octree_level,
+                         int(math.log(max(xyz.shape[0] / cfg.k, 2), 8))))
+        nbr = nb.knn_octree(tree, xyz, centers, cfg.k, level=lvl)
+    elif cfg.neighbor == "edgepc":
+        nbr = nb.knn_morton_window(tree, xyz, centers, cfg.k)
+    elif cfg.neighbor == "crescent":
+        nbr = nb.knn_kdtree_approx(xyz, centers, cfg.k)
+    elif cfg.neighbor == "ball":
+        nbr = nb.ball_query(xyz, centers, cfg.radius, cfg.k)
+    else:
+        raise ValueError(cfg.neighbor)
+    return cidx, nbr
+
+
+def _center_vec(kind: str, centers_xyz, center_feats):
+    """The per-subset vector the MLP input is normalized against."""
+    return centers_xyz if kind == "sa" else center_feats
+
+
+def _point_inputs(kind: str, xyz, feats, ids, center_vec):
+    """MLP inputs for gathered point ids (..., ) against per-... center_vec.
+
+    sa:   [xyz[ids] - c, feats[ids]]
+    edge: [feats[ids] - c, c]
+    """
+    if kind == "sa":
+        rel = xyz[ids] - center_vec
+        return jnp.concatenate([rel, feats[ids]], axis=-1)
+    rel = feats[ids] - center_vec
+    return jnp.concatenate([rel, jnp.broadcast_to(center_vec, rel.shape)],
+                           axis=-1)
+
+
+def _subset_inputs(kind, xyz, feats, nbr_idx, centers_xyz, center_feats):
+    """(S, K, f_in) MLP inputs for all subsets (dense/traditional path)."""
+    cv = _center_vec(kind, centers_xyz, center_feats)
+    return _point_inputs(kind, xyz, feats, nbr_idx, cv[:, None, :])
+
+
+def fc_traditional(mlp: MLP, xyz, feats, nbr_idx, centers_xyz,
+                   center_feats=None, kind: str = "sa"):
+    """Baseline FC: full MLP on all S*K gathered points, then max-pool."""
+    x = _subset_inputs(kind, xyz, feats, nbr_idx, centers_xyz, center_feats)
+    h = apply_mlp(mlp, x)                                 # (S, K, Fout)
+    pooled = h.max(axis=1)
+    return post_pool_activation(mlp, pooled)
+
+
+def fc_lpcn(mlp: MLP, xyz, feats, nbr_idx, centers_xyz,
+            islands: Islands, sched: Schedule, cfg: LPCNConfig,
+            center_feats=None):
+    """Islandized FC: pool-MLP + compensated reuse + compact overflow.
+
+    Returns (S, Fout) center features — same contract as fc_traditional.
+    """
+    S, K = nbr_idx.shape
+    H, M = islands.members.shape
+    C = sched.pool_ids.shape[1]
+    Fout = mlp.f_out
+    kind = cfg.block_kind
+
+    cvec = _center_vec(kind, centers_xyz, center_feats)   # (S, Dc)
+    hub_vec = cvec[islands.hub]                           # (H, Dc)
+
+    # --- pool MLP (hub-relative), one eval per cached unique point -------
+    pids = jnp.clip(sched.pool_ids, 0, xyz.shape[0] - 1)  # (H, C)
+    pool_in = _point_inputs(kind, xyz, feats, pids, hub_vec[:, None, :])
+    pool_out = apply_mlp(mlp, pool_in)                    # (H, C, Fout)
+    pool_live = sched.pool_ids >= 0
+
+    # --- per-subset compensation (one Δ per non-hub subset) --------------
+    mem = jnp.clip(islands.members, 0, S - 1)             # (H, M)
+    sub_vec = cvec[mem]                                   # (H, M, Dc)
+    delta = hub_vec[:, None, :] - sub_vec                 # (H, M, Dc)
+    comp = compensation(mlp, delta, cfg.compensation, kind)  # (H, M, Fout)
+
+    # --- reuse gather ------------------------------------------------------
+    slot = sched.reuse_slot                               # (H, M, K)
+    safe_slot = jnp.clip(slot, 0, C - 1)
+    reused = jnp.take_along_axis(
+        pool_out, safe_slot.reshape(H, M * K, 1), axis=1
+    ).reshape(H, M, K, Fout) + comp[:, :, None, :]
+    reuse_ok = (slot >= 0) & jnp.take_along_axis(
+        pool_live, safe_slot.reshape(H, M * K), axis=1).reshape(H, M, K)
+
+    # --- compact overflow compute (never-cached positions) ---------------
+    B = max(int(cfg.overflow_frac * M * K), K)            # overflow budget
+    need = (~reuse_ok) & sched.subset_valid[..., None]    # (H, M, K)
+
+    def island_overflow(need_h, ids_h, sub_vec_h):
+        flatneed = need_h.reshape(-1)
+        prio = jnp.where(flatneed, jnp.arange(M * K), M * K)
+        takepos = jnp.argsort(prio)[:B]                   # overflow slots
+        taken = flatneed[takepos]
+        ids = ids_h.reshape(-1)[takepos]
+        ids = jnp.clip(ids, 0, xyz.shape[0] - 1)
+        row = jnp.clip(takepos // K, 0, M - 1)
+        x = _point_inputs(kind, xyz, feats, ids, sub_vec_h[row])
+        return takepos, taken, x
+
+    ids_hmk = jnp.where(mem[..., None] >= 0, nbr_idx[mem], 0)
+    takepos, taken, ox = jax.vmap(island_overflow)(
+        need, ids_hmk, sub_vec)                           # (H,B),(H,B),(H,B,fin)
+    o_out = apply_mlp(mlp, ox)                            # (H, B, Fout)
+
+    # scatter overflow results back into (H, M*K, Fout)
+    full = jnp.where(reuse_ok[..., None], reused, -jnp.inf
+                     ).reshape(H, M * K, Fout)
+    oidx = jnp.where(taken, takepos, M * K)               # drop untaken
+    full = full.at[jnp.arange(H)[:, None], oidx].set(
+        jnp.where(taken[..., None], o_out, -jnp.inf), mode="drop")
+    full = full.reshape(H, M, K, Fout)
+
+    # rows whose overflow exceeded the budget fall back to the dense path
+    covered = jnp.zeros((H, M * K), bool)
+    covered = covered.at[jnp.arange(H)[:, None], oidx].set(taken, mode="drop")
+    uncovered_row = (need.reshape(H, M * K) & ~covered
+                     ).reshape(H, M, K).any(-1)           # (H, M)
+
+    # --- max-pool per subset, scatter to center order ---------------------
+    pooled = full.max(axis=2)                             # (H, M, Fout)
+    out = jnp.zeros((S, Fout), pooled.dtype)
+    rows_ok = sched.subset_valid
+    tgt = jnp.where(rows_ok, islands.members, S)
+    out = out.at[tgt.reshape(-1)].set(pooled.reshape(-1, Fout), mode="drop")
+
+    # --- dense fallback: solo subsets + budget-exhausted rows -------------
+    solo = islands.solo
+    fb = jnp.zeros((S,), bool).at[tgt.reshape(-1)].set(
+        uncovered_row.reshape(-1), mode="drop") | solo
+    x_dense = _subset_inputs(kind, xyz, feats, nbr_idx, centers_xyz,
+                             center_feats)
+    h_dense = apply_mlp(mlp, x_dense).max(axis=1)
+    out = jnp.where(fb[:, None], h_dense, out)
+    return post_pool_activation(mlp, out)
+
+
+@dataclass
+class BlockOutput:
+    center_idx: jnp.ndarray
+    center_xyz: jnp.ndarray
+    features: jnp.ndarray
+    islands: Islands | None
+    schedule: Schedule | None
+    nbr_idx: jnp.ndarray
+    report: WorkloadReport | None = None
+
+
+def lpcn_block(cfg: LPCNConfig, mlp: MLP, xyz: jnp.ndarray,
+               feats: jnp.ndarray, key: jax.Array,
+               with_report: bool = False) -> BlockOutput:
+    """One full building block on a single cloud (N,3)/(N,F)."""
+    kds, kisl = jax.random.split(key)
+    cidx, nbr = data_structuring(cfg, xyz, kds)
+    centers_xyz = xyz[cidx]
+    center_feats = feats[cidx]
+    if cfg.mode == "traditional":
+        f = fc_traditional(mlp, xyz, feats, nbr, centers_xyz, center_feats,
+                           cfg.block_kind)
+        return BlockOutput(cidx, centers_xyz, f, None, None, nbr)
+    n_hubs = max(int(cidx.shape[0]) // cfg.island_size, 1)
+    isl = islandize(centers_xyz, n_hubs, level=cfg.octree_level,
+                    capacity=cfg.island_capacity,
+                    hub_select=cfg.hub_select, key=kisl)
+    sched = build_schedule(isl, nbr, cfg.cache_capacity)
+    f = fc_lpcn(mlp, xyz, feats, nbr, centers_xyz, isl, sched, cfg,
+                center_feats)
+    report = analyze(isl, sched, cfg.k) if with_report else None
+    return BlockOutput(cidx, centers_xyz, f, isl, sched, nbr, report)

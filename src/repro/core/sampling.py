@@ -1,0 +1,54 @@
+"""Sampling Module — central-point selection (paper Fig. 6).
+
+Farthest Point Sampling is the standard PCN sampler (and the reason the
+default PCN processing order is spatially *distant*, which L-PCN's
+islandization undoes — paper §III-A).  Also provides random and grid
+(Morton-strided) sampling used by the approximate-DS baselines.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=("n_samples",))
+def farthest_point_sampling(points: jnp.ndarray, n_samples: int,
+                            start: int = 0) -> jnp.ndarray:
+    """FPS over (N, 3) points -> (n_samples,) int32 indices.
+
+    O(N * n_samples), the classic iterative algorithm: keep per-point
+    distance-to-selected-set; each round pick the argmax and relax.
+    """
+    n = points.shape[0]
+    min_d = jnp.full((n,), jnp.inf, dtype=points.dtype)
+
+    def body(i, state):
+        min_d, idx, last = state
+        d = jnp.sum((points - points[last]) ** 2, axis=-1)
+        min_d = jnp.minimum(min_d, d)
+        nxt = jnp.argmax(min_d).astype(jnp.int32)
+        idx = idx.at[i].set(nxt)
+        return min_d, idx, nxt
+
+    idx0 = jnp.zeros((n_samples,), jnp.int32).at[0].set(start)
+    _, idx, _ = jax.lax.fori_loop(1, n_samples, body,
+                                  (min_d, idx0, jnp.int32(start)))
+    return idx
+
+
+def random_sampling(key: jax.Array, n_points: int, n_samples: int
+                    ) -> jnp.ndarray:
+    """Uniform sample without replacement -> (n_samples,) int32 indices."""
+    return jax.random.choice(key, n_points, (n_samples,),
+                             replace=False).astype(jnp.int32)
+
+
+def morton_strided_sampling(sorted_order: jnp.ndarray, n_samples: int
+                            ) -> jnp.ndarray:
+    """EdgePC-style approximate sampler: stride the Morton-sorted order
+    (uniform coverage of space at near-zero cost)."""
+    n = sorted_order.shape[0]
+    pos = (jnp.arange(n_samples) * n) // n_samples
+    return sorted_order[pos].astype(jnp.int32)

@@ -1,0 +1,140 @@
+"""Workload accounting — the paper's "theoretical workload optimization".
+
+Counts, exactly as the paper defines them (§V, §VI-B):
+
+  baseline (traditional, no reuse):
+      feature fetches   = sum over subsets of K
+      MLP point-evals   = sum over subsets of K
+
+  L-PCN (Islandization Unit):
+      feature fetches   = unique cached points per island (pool fills)
+                        + positions whose point never got a cache slot
+                          (capacity overflow -> fetched again)
+      MLP point-evals   = the same computed positions
+                        + one delta-compensation MLP eval per non-hub
+                          subset (the paper's "one-time overhead of
+                          supplementary computation", §VI-B)
+      solo subsets (island-capacity overflow) count at baseline cost.
+
+Derived:  fetch_saving = 1 - lpcn/baseline  (paper Fig. 15 green bars),
+overall-memory saving folds in weight traffic (yellow bars), compute saving
+(grey bars).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .hub_schedule import Schedule
+from .islandize import Islands
+
+
+@dataclass
+class WorkloadReport:
+    baseline_fetches: int
+    lpcn_fetches: int
+    baseline_mlp_evals: int
+    lpcn_mlp_evals: int
+    n_subsets: int
+    n_islands_used: int
+    k: int
+
+    @property
+    def fetch_saving(self) -> float:
+        return 1.0 - self.lpcn_fetches / max(self.baseline_fetches, 1)
+
+    @property
+    def compute_saving(self) -> float:
+        return 1.0 - self.lpcn_mlp_evals / max(self.baseline_mlp_evals, 1)
+
+    def memory_saving(self, feat_bytes: int, weight_bytes: int,
+                      tile_rows: int = 16) -> float:
+        """Overall-memory-access saving (paper's yellow bars).  Weight
+        traffic model: the systolic FCU re-streams the layer weights once
+        per ``tile_rows`` input rows (output-stationary tiling), so weight
+        bytes scale with ceil(rows/tile_rows)."""
+        def total(fetches):
+            wpasses = -(-fetches // tile_rows)
+            return fetches * feat_bytes + wpasses * weight_bytes
+        base = total(self.baseline_fetches)
+        ours = total(self.lpcn_fetches)
+        return 1.0 - ours / max(base, 1)
+
+    def scaled(self, mlp_flops_per_point: int) -> dict:
+        return dict(
+            baseline_flops=self.baseline_mlp_evals * mlp_flops_per_point,
+            lpcn_flops=self.lpcn_mlp_evals * mlp_flops_per_point,
+        )
+
+    def concrete(self) -> "WorkloadReport":
+        """Materialize jnp counters into python ints."""
+        g = lambda v: int(v) if hasattr(v, "item") else v
+        return WorkloadReport(
+            g(self.baseline_fetches), g(self.lpcn_fetches),
+            g(self.baseline_mlp_evals), g(self.lpcn_mlp_evals),
+            g(self.n_subsets), g(self.n_islands_used), self.k)
+
+    @staticmethod
+    def total(reports: list["WorkloadReport"]) -> "WorkloadReport":
+        """Aggregate layer reports into a whole-network report."""
+        rs = [r.concrete() for r in reports]
+        return WorkloadReport(
+            sum(r.baseline_fetches for r in rs),
+            sum(r.lpcn_fetches for r in rs),
+            sum(r.baseline_mlp_evals for r in rs),
+            sum(r.lpcn_mlp_evals for r in rs),
+            sum(r.n_subsets for r in rs),
+            sum(r.n_islands_used for r in rs), rs[0].k if rs else 0)
+
+
+def analyze(islands: Islands, sched: Schedule, k: int) -> WorkloadReport:
+    """Exact workload counters for one DS layer.  Trace-safe: counters are
+    jnp scalars under jit/vmap; call ``.item()`` on them (or run eagerly)
+    for python ints."""
+    live = sched.reuse_slot >= 0        # (H, M, K) cached positions
+    first = sched.is_first              # fills (computed once)
+    valid = sched.subset_valid          # (H, M)
+    pos_valid = valid[..., None] & jnp.ones_like(first)
+
+    n_rows = valid.sum()
+    n_solo = islands.solo.sum()
+    n_subsets = n_rows + n_solo
+
+    computed_cached = (first & live).sum()               # pool fills
+    overflow = (pos_valid & ~live).sum()                 # never cached
+
+    # one delta-MLP eval per non-hub processed subset
+    n_non_hub = jnp.maximum(valid.sum(-1) - 1, 0).sum()
+
+    base = n_subsets * k
+    lpcn_fetch = computed_cached + overflow + n_solo * k
+    lpcn_mlp = computed_cached + overflow + n_non_hub + n_solo * k
+    return WorkloadReport(
+        baseline_fetches=base, lpcn_fetches=lpcn_fetch,
+        baseline_mlp_evals=base, lpcn_mlp_evals=lpcn_mlp,
+        n_subsets=n_subsets,
+        n_islands_used=int((valid.any(-1)).sum()), k=k)
+
+
+def overlap_histogram(nbr_idx: jnp.ndarray, centers: jnp.ndarray,
+                      groups=(16, 16, 32)) -> dict:
+    """Paper Fig. 4(b): per subset, sort all other subsets by center
+    distance and measure gathered-point overlap ratio within distance
+    groups (top-16 nearest, next 16, next 32, rest)."""
+    S, K = nbr_idx.shape
+    d = jnp.sum((centers[:, None] - centers[None, :]) ** 2, -1)
+    d = d.at[jnp.arange(S), jnp.arange(S)].set(jnp.inf)
+    order = jnp.argsort(d, axis=-1)                       # (S, S)
+    eq = (nbr_idx[:, None, :, None] == nbr_idx[None, :, None, :])
+    ov = eq.any(-1).sum(-1) / K                           # (S, S) overlap
+    ov_sorted = jnp.take_along_axis(ov, order, axis=-1)
+    out, lo = {}, 0
+    for g in groups:
+        seg = ov_sorted[:, lo:lo + g]
+        out[f"near_{lo}_{lo+g}"] = (float(seg.mean()), float(seg.max()))
+        lo += g
+    rest = ov_sorted[:, lo:S - 1]
+    out["rest"] = (float(rest.mean()), float(rest.max()))
+    return out

@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: causal flash attention (forward), GQA-aware.
+
+Used by the LM stack's prefill path (beyond-paper perf work, §Perf).
+Standard online-softmax tiling: grid (batch·q_heads, q_tiles, kv_tiles);
+running (m, l, acc) live in VMEM scratch across the kv_tile axis and the
+output block is written at the last kv tile.  GQA never materializes
+expanded K/V: the K/V BlockSpec index maps q-head → kv-head.
+
+Causality is enforced by masking inside the tile; fully-masked kv tiles
+are skipped via ``pl.when`` on the tile index (no wasted MXU passes past
+the diagonal).
+
+VMEM budget per step (TQ=TK=128, D=128, f32 accum):
+  q/k/v tiles 3·128·128·4 ≈ 196 KB + scores 128·128·4 + acc ≈ 130 KB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, tq: int, tk: int, causal: bool):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # skip tiles strictly above the diagonal (causal)
+    run = (not causal) or (ki * tk <= qi * tq + tq - 1)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale          # (TQ, D)
+        k = k_ref[0].astype(jnp.float32)                  # (TK, D)
+        v = v_ref[0].astype(jnp.float32)                  # (TK, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            rows = qi * tq + jax.lax.broadcasted_iota(
+                jnp.int32, (tq, tk), 0)
+            cols = ki * tk + jax.lax.broadcasted_iota(
+                jnp.int32, (tq, tk), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+
+        m_prev = m_scr[...]                               # (TQ, 1)
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                            # (TQ, TK)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+        acc_scr[...] = acc
+
+    @pl.when(ki == nk - 1)
+    def _fin():
+        l = jnp.maximum(l_scr[...], 1e-20)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           tq: int = 128, tk: int = 128,
+                           interpret: bool = False):
+    """q (B, Hq, Sq, D); k/v (B, Hkv, Skv, D), Hq % Hkv == 0.
+    -> (B, Hq, Sq, D), same dtype as q."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    tq = min(tq, sq)
+    tk = min(tk, skv)
+    scale = 1.0 / (d ** 0.5)
+
+    q4 = q.reshape(b * hq, sq, d)
+    k4 = k.reshape(b * hkv, skv, d)
+    v4 = v.reshape(b * hkv, skv, d)
+
+    def kv_map(bh, qi, ki):
+        return (bh // group, ki, 0)
+
+    kern = functools.partial(_flash_kernel, scale=scale, tq=tq, tk=tk,
+                             causal=causal)
+    out = pl.pallas_call(
+        kern,
+        grid=(b * hq, pl.cdiv(sq, tq), pl.cdiv(skv, tk)),
+        in_specs=[
+            pl.BlockSpec((1, tq, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, tk, d), kv_map),
+            pl.BlockSpec((1, tk, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, tq, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((tq, 1), jnp.float32),
+            pltpu.VMEM((tq, 1), jnp.float32),
+            pltpu.VMEM((tq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q4, k4, v4)
+    return out.reshape(b, hq, sq, d)

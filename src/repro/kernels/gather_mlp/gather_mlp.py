@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: fused center-normalize → MLP → max-pool (FC step).
+
+The paper's FCU streams each gathered point subset through a 16×16 systolic
+array (MLP = 98 % of FC FLOPs) and max-pools into the center.  TPU
+adaptation: one fused kernel per subset tile —
+
+    x   = [raw[..., :Dc] − center, raw[..., Dc:]]      (VPU)
+    h   = relu(x @ W1 + b1) @ W2 + b2                  (MXU, f32 accum)
+    out = max over K                                   (VPU)
+
+so the (TS·K, H) intermediate never touches HBM.  Grid over subset tiles;
+weights are small enough to sit whole in VMEM (≤ 256×256 f32 = 256 KB).
+
+VMEM budget per step (TS=8, K=32, D=131, H=128):
+  raw tile 8·32·131·4 ≈ 134 KB + hidden 8·32·128·4 ≈ 131 KB + weights.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 3.4e38
+
+
+def _gather_mlp_kernel(raw_ref, ctr_ref, w1_ref, b1_ref, w2_ref, b2_ref,
+                       out_ref, *, dc: int):
+    ts, k, d = raw_ref.shape
+    raw = raw_ref[...]                                    # (TS, K, D)
+    ctr = ctr_ref[...]                                    # (TS, Dc)
+    rel = raw[..., :dc] - ctr[:, None, :]
+    x = jnp.concatenate([rel, raw[..., dc:]], axis=-1)    # (TS, K, D)
+    x2 = x.reshape(ts * k, d)
+    h = jax.lax.dot_general(x2, w1_ref[...], (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    h = jax.nn.relu(h + b1_ref[...][None, :])
+    y = jax.lax.dot_general(h, w2_ref[...], (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y = y + b2_ref[...][None, :]
+    out_ref[...] = jnp.max(y.reshape(ts, k, -1), axis=1).astype(
+        out_ref.dtype)
+
+
+def gather_mlp_pallas(raw: jnp.ndarray, centers: jnp.ndarray,
+                      w1, b1, w2, b2, ts: int = 8,
+                      interpret: bool = False):
+    """raw (S, K, D) gathered inputs; centers (S, Dc) subtracted from the
+    leading Dc lanes; two-layer MLP; max over K.  -> (S, F_out)."""
+    s, k, d = raw.shape
+    dc = centers.shape[1]
+    fout = w2.shape[1]
+    hdim = w1.shape[1]
+    ts = min(ts, s)
+    kern = functools.partial(_gather_mlp_kernel, dc=dc)
+    return pl.pallas_call(
+        kern,
+        grid=(pl.cdiv(s, ts),),
+        in_specs=[
+            pl.BlockSpec((ts, k, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((ts, dc), lambda i: (i, 0)),
+            pl.BlockSpec((d, hdim), lambda i: (0, 0)),
+            pl.BlockSpec((hdim,), lambda i: (0,)),
+            pl.BlockSpec((hdim, fout), lambda i: (0, 0)),
+            pl.BlockSpec((fout,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((ts, fout), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, fout), raw.dtype),
+        interpret=interpret,
+    )(raw, centers, w1, b1, w2, b2)

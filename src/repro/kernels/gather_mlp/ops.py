@@ -1,0 +1,21 @@
+"""Jitted public wrapper for the fused gather-MLP-pool kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .gather_mlp import gather_mlp_pallas
+from .ref import gather_mlp_ref
+
+
+@partial(jax.jit, static_argnames=("ts", "interpret"))
+def gather_mlp(raw, centers, w1, b1, w2, b2, ts: int = 8,
+               interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return gather_mlp_pallas(raw, centers, w1, b1, w2, b2, ts=ts,
+                             interpret=interpret)
+
+
+__all__ = ["gather_mlp", "gather_mlp_ref"]

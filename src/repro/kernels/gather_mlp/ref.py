@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the gather_mlp kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_mlp_ref(raw, centers, w1, b1, w2, b2):
+    """raw (S,K,D), centers (S,Dc) -> (S, F_out)."""
+    dc = centers.shape[1]
+    rel = raw[..., :dc] - centers[:, None, :]
+    x = jnp.concatenate([rel, raw[..., dc:]], axis=-1)
+    h = jax.nn.relu(
+        jnp.einsum("skd,dh->skh", x, w1,
+                   preferred_element_type=jnp.float32) + b1)
+    y = jnp.einsum("skh,hf->skf", h, w2,
+                   preferred_element_type=jnp.float32) + b2
+    return jnp.max(y, axis=1).astype(raw.dtype)

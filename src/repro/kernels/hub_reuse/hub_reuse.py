@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: islandized FC — pool-MLP + compensated reuse-gather.
+
+The Islandization Unit's datapath (paper Fig. 13/14), one island per grid
+step:
+
+  1. pool MLP: the island's Hub-Cache contents (C unique points, hub-
+     relative inputs) go through the 2-layer MLP once          (MXU)
+  2. reuse gather: every (subset, k) position fetches its cache slot.
+     TPU adaptation: the gather is a ONE-HOT MATMUL (M·K, C) @ (C, F) —
+     a systolic-friendly reuse of the MXU instead of the FPGA's BRAM
+     random port                                              (MXU)
+  3. delta compensation: + comp[subset] broadcast over k       (VPU)
+  4. masked max-pool over K                                    (VPU)
+
+Overflow (never-cached) positions are computed by the gather_mlp kernel
+outside and merged with an elementwise max (max-pool commutes), so this
+kernel touches exactly the deduplicated workload — the paper's compute
+saving is structural, not simulated.
+
+VMEM budget per island step (C=64, M=64, K=32, F=128):
+  pool 64·131·4 ≈ 33 KB, one-hot 2048·64·4 ≈ 512 KB, out 64·128·4.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 3.4e38
+
+
+def _hub_reuse_kernel(pool_ref, slot_ref, comp_ref, w1_ref, b1_ref,
+                      w2_ref, b2_ref, out_ref):
+    """pool_ref (1, C, D) hub-relative inputs; slot_ref (1, M, K) int32;
+    comp_ref (1, M, F); out_ref (1, M, F)."""
+    _, c, d = pool_ref.shape
+    _, m, k = slot_ref.shape
+    pool = pool_ref[...].reshape(c, d)
+    h = jax.lax.dot_general(pool, w1_ref[...], (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    h = jax.nn.relu(h + b1_ref[...][None, :])
+    y = jax.lax.dot_general(h, w2_ref[...], (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y = y + b2_ref[...][None, :]                       # (C, F)
+
+    slot = slot_ref[...].reshape(m * k)                # (M*K,)
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, (m * k, c), 1)
+              == slot[:, None]).astype(jnp.float32)    # (M*K, C)
+    gathered = jax.lax.dot_general(
+        onehot, y, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)            # (M*K, F) MXU
+    gathered = gathered.reshape(m, k, -1)
+    gathered = gathered + comp_ref[...].reshape(m, 1, -1)
+    live = (slot >= 0).reshape(m, k, 1)
+    gathered = jnp.where(live, gathered, -BIG)
+    out_ref[...] = jnp.max(gathered, axis=1)[None].astype(out_ref.dtype)
+
+
+def hub_reuse_pallas(pool_in: jnp.ndarray, slot: jnp.ndarray,
+                     comp: jnp.ndarray, w1, b1, w2, b2,
+                     interpret: bool = False):
+    """pool_in (H, C, D); slot (H, M, K) int32 (-1 = not cached);
+    comp (H, M, F) per-subset delta compensation.  -> (H, M, F) pooled
+    reuse partials (−BIG where a subset has no cached positions)."""
+    hn, c, d = pool_in.shape
+    _, m, k = slot.shape
+    hdim = w1.shape[1]
+    fout = w2.shape[1]
+    return pl.pallas_call(
+        _hub_reuse_kernel,
+        grid=(hn,),
+        in_specs=[
+            pl.BlockSpec((1, c, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, m, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, m, fout), lambda i: (i, 0, 0)),
+            pl.BlockSpec((d, hdim), lambda i: (0, 0)),
+            pl.BlockSpec((hdim,), lambda i: (0,)),
+            pl.BlockSpec((hdim, fout), lambda i: (0, 0)),
+            pl.BlockSpec((fout,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, m, fout), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((hn, m, fout), pool_in.dtype),
+        interpret=interpret,
+    )(pool_in, slot, comp, w1, b1, w2, b2)

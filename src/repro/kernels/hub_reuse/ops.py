@@ -1,0 +1,21 @@
+"""Jitted public wrapper for the hub_reuse kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .hub_reuse import hub_reuse_pallas
+from .ref import hub_reuse_ref
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def hub_reuse(pool_in, slot, comp, w1, b1, w2, b2,
+              interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return hub_reuse_pallas(pool_in, slot, comp, w1, b1, w2, b2,
+                            interpret=interpret)
+
+
+__all__ = ["hub_reuse", "hub_reuse_ref"]

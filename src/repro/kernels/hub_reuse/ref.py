@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the hub_reuse kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BIG = 3.4e38
+
+
+def hub_reuse_ref(pool_in, slot, comp, w1, b1, w2, b2):
+    """pool_in (H,C,D), slot (H,M,K), comp (H,M,F) -> (H,M,F)."""
+    h = jax.nn.relu(
+        jnp.einsum("hcd,de->hce", pool_in, w1,
+                   preferred_element_type=jnp.float32) + b1)
+    y = jnp.einsum("hce,ef->hcf", h, w2,
+                   preferred_element_type=jnp.float32) + b2   # (H,C,F)
+    c = pool_in.shape[1]
+    safe = jnp.clip(slot, 0, c - 1)
+    g = jnp.take_along_axis(
+        y, safe.reshape(y.shape[0], -1, 1), axis=1
+    ).reshape(slot.shape + (y.shape[-1],))                    # (H,M,K,F)
+    g = g + comp[:, :, None, :]
+    g = jnp.where((slot >= 0)[..., None], g, -BIG)
+    return jnp.max(g, axis=2).astype(pool_in.dtype)

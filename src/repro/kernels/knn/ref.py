@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the KNN kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def knn_ref(centers: jnp.ndarray, points: jnp.ndarray, k: int):
+    """(S,3),(N,3) -> (S,k) sq-dists ascending, (S,k) int32 indices.
+    Ties broken by lower point index (lexicographic (d, idx))."""
+    c = centers.astype(jnp.float32)
+    p = points.astype(jnp.float32)
+    d = jnp.sum((c[:, None, :] - p[None, :, :]) ** 2, axis=-1)   # (S, N)
+    idx = jnp.argsort(d, axis=-1, stable=True)[:, :k]
+    dd = jnp.take_along_axis(d, idx, axis=-1)
+    return dd, idx.astype(jnp.int32)

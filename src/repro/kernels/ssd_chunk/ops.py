@@ -1,0 +1,19 @@
+"""Jitted public wrapper for the SSD intra-chunk kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .ref import ssd_chunk_ref
+from .ssd_chunk import ssd_chunk_pallas
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk(x, B, C, dt, cum, interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return ssd_chunk_pallas(x, B, C, dt, cum, interpret=interpret)
+
+
+__all__ = ["ssd_chunk", "ssd_chunk_ref"]

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel (mirrors nn/ssm.py)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def ssd_chunk_ref(x, B, C, dt, cum):
+    """x (bs,nc,q,H,P); B/C (bs,nc,q,S); dt/cum (bs,nc,q,H) ->
+    (y_in (bs,nc,q,H,P), states (bs,nc,H,P,S))."""
+    q = x.shape[2]
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(seg), 0.0)
+    CB = jnp.einsum("bnis,bnjs->bnij", C, B)
+    y_in = jnp.einsum("bnij,bnijh,bnjh,bnjhp->bnihp", CB, L, dt, x)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)
+    states = jnp.einsum("bnjs,bnjh,bnjh,bnjhp->bnhps",
+                        B, decay_to_end, dt, x)
+    return y_in, states

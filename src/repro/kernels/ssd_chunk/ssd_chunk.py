@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: Mamba-2 SSD intra-chunk block (the quadratic hot
+spot of the SSD scan — nn/ssm.py's y_in + chunk-state computation).
+
+Per (batch, chunk) grid step, entirely in VMEM:
+
+    seg   = cum_i − cum_j   (per head)            (VPU)
+    L     = exp(seg) · tril                        (VPU)
+    CB    = C_c @ B_cᵀ                             (MXU)
+    y_in  = (CB ⊙ L ⊙ dt_j) @ x_c   per head       (MXU)
+    state = (B_c ⊙ decay_to_end ⊙ dt)ᵀ @ x_c       (MXU)
+
+so the (q, q, H) decay tensor never reaches HBM — on TPU this is the
+difference between the SSD being HBM-bound and MXU-bound (the jnp path
+materializes B·nc·q²·H·4 bytes).  Heads are looped inside the kernel
+(per-head (q, q) tiles keep VMEM small and MXU shapes aligned).
+
+VMEM per step (q=64, H<=8 per shard, P=64, S=128):
+  x (q,H,P) + B/C (q,S) + per-head (q,q) + state (H,P,S) ≈ 300 KB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(x_ref, b_ref, c_ref, dt_ref, cum_ref,
+                      y_ref, st_ref, *, n_heads: int):
+    """Blocks carry leading (1, 1) grid dims:
+    x (1,1,q,H,P) f32; b/c (1,1,q,S) f32; dt/cum (1,1,q,H) f32.
+    Outputs: y (1,1,q,H,P) intra-chunk term; st (1,1,H,P,S) chunk state.
+    """
+    q = x_ref.shape[2]
+    x = x_ref[0, 0]
+    B = b_ref[0, 0]
+    C = c_ref[0, 0]
+    dt = dt_ref[0, 0]
+    cum = cum_ref[0, 0]
+
+    cb = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (q, q)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    tril = rows >= cols
+
+    for h in range(n_heads):  # static loop: small H per shard
+        seg = cum[:, h][:, None] - cum[:, h][None, :]
+        L = jnp.where(tril, jnp.exp(seg), 0.0)
+        m = cb * L * dt[:, h][None, :]                   # (q, q)
+        y_h = jax.lax.dot_general(m, x[:, h, :],
+                                  (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        y_ref[0, 0, :, h, :] = y_h
+        decay_end = jnp.exp(cum[-1, h] - cum[:, h]) * dt[:, h]  # (q,)
+        bw = B * decay_end[:, None]                      # (q, S)
+        st_h = jax.lax.dot_general(x[:, h, :], bw,
+                                   (((0,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+        st_ref[0, 0, h, :, :] = st_h                     # (P, S)
+
+
+def ssd_chunk_pallas(x, B, C, dt, cum, interpret: bool = False):
+    """x (bs, nc, q, H, P); B/C (bs, nc, q, S); dt/cum (bs, nc, q, H)
+    -> y_in (bs, nc, q, H, P), states (bs, nc, H, P, S).  All f32."""
+    bs, nc, q, h, p = x.shape
+    s = B.shape[-1]
+    kern = functools.partial(_ssd_chunk_kernel, n_heads=h)
+    grid = (bs, nc)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, q, h, p), lambda i, j: (i, j, 0, 0, 0)),
+            pl.BlockSpec((1, 1, q, s), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, q, s), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, q, h), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, q, h), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, q, h, p), lambda i, j: (i, j, 0, 0, 0)),
+            pl.BlockSpec((1, 1, h, p, s), lambda i, j: (i, j, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bs, nc, q, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((bs, nc, h, p, s), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, B, C, dt, cum)

@@ -1,0 +1,252 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape) on the
+production meshes, record memory / cost / collective analysis.
+
+MUST set the device-count flag before ANY other import (jax locks device
+count on first init).
+"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCH_IDS, SHAPES, SUBQUADRATIC, get_config  # noqa: E402
+from repro.dist import sharding as shd                                # noqa: E402
+from repro.launch.mesh import make_production_mesh                    # noqa: E402
+from repro.lm import model_zoo as zoo                                 # noqa: E402
+from repro.lm import steps                                            # noqa: E402
+from repro.optim import adamw                                         # noqa: E402
+
+HW = dict(peak_bf16=197e12, hbm_bw=819e9, ici_bw=50e9)
+
+COLL_RE = re.compile(
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?\s*=?|"  # op name (we re-parse shapes below)
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+
+def _bytes_of_shape_str(s: str) -> int:
+    """'bf16[2,16,512]{...}' -> byte count (0 for tuple/token types)."""
+    m = _SHAPE_RE.match(s.strip())
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in the per-device program.
+
+    Returns {op_kind: bytes} + {"total": ...}.  Operand shapes are parsed
+    from the op's own output shape (collectives are shape-preserving for
+    all-reduce/all-to-all/permute; all-gather output > input — we use the
+    output, the wire cost upper bound).
+    """
+    out: dict = {}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(
+            r"%?\S+\s*=\s*((?:\([^)]*\))|\S+)\s+"
+            r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+            r"collective-permute)(?:-start)?", ls)
+        if not m:
+            continue
+        shape_str, kind = m.groups()
+        if shape_str.startswith("("):
+            nbytes = sum(_bytes_of_shape_str(p)
+                         for p in shape_str[1:-1].split(","))
+        else:
+            nbytes = _bytes_of_shape_str(shape_str)
+        out[kind] = out.get(kind, 0) + nbytes
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def build_lowered(arch: str, shape_name: str, multi_pod: bool,
+                  microbatches: int | None = None):
+    cfg = get_config(arch)
+    sp = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dp = (2 * 16) if multi_pod else 16
+    key = jax.random.PRNGKey(0)
+
+    with shd.use_mesh(mesh, sp=cfg.seq_shard_blocks,
+                      profile=cfg.shard_profile):
+        params_shape = jax.eval_shape(lambda k: zoo.init(k, cfg), key)
+        p_sh = shd.param_shardings(params_shape, mesh, cfg.moe_shard)
+
+        if sp.kind == "train":
+            mb = (microbatches if microbatches is not None
+                  else max(min(16, sp.global_batch // dp), 1))
+            opt_cfg = adamw.AdamWConfig()
+            opt_shape = jax.eval_shape(
+                lambda p: adamw.init_state(opt_cfg, p), params_shape)
+            o_sh = shd.param_shardings(opt_shape, mesh, cfg.moe_shard)
+            batch = zoo.input_specs(cfg, sp.seq_len, sp.global_batch,
+                                    "train")
+            b_sh = shd.batch_shardings(batch, mesh)
+            step_fn = steps.make_train_step(
+                cfg, opt_cfg, microbatches=mb,
+                accum_dtype=jnp.bfloat16 if cfg.family == "moe"
+                else jnp.float32,
+                param_shardings=p_sh)
+            fn = jax.jit(step_fn,
+                         in_shardings=(p_sh, o_sh, b_sh, None),
+                         out_shardings=(p_sh, o_sh, None),
+                         donate_argnums=(0, 1))
+            return fn.lower(params_shape, opt_shape, batch,
+                            jnp.zeros((), jnp.int32)), cfg, mesh, mb
+
+        if sp.kind == "prefill":
+            batch = zoo.input_specs(cfg, sp.seq_len, sp.global_batch,
+                                    "prefill")
+            b_sh = shd.batch_shardings(batch, mesh)
+            step_fn = steps.make_prefill_step(cfg)
+            fn = jax.jit(step_fn, in_shardings=(p_sh, b_sh))
+            return fn.lower(params_shape, batch), cfg, mesh, 1
+
+        # decode: one token against a cache of sp.seq_len
+        cache_shape = zoo.cache_specs(cfg, sp.global_batch, sp.seq_len)
+        c_sh = shd.cache_shardings(cache_shape, mesh)
+        tok = jax.ShapeDtypeStruct((sp.global_batch,), jnp.int32)
+        step_fn = steps.make_decode_step(cfg)
+        fn = jax.jit(step_fn,
+                     in_shardings=(p_sh, shd.batch_shardings(tok, mesh),
+                                   c_sh, None),
+                     out_shardings=(shd.batch_shardings(tok, mesh), None,
+                                    c_sh),
+                     donate_argnums=(2,))
+        return fn.lower(params_shape, tok, cache_shape,
+                        jnp.zeros((), jnp.int32)), cfg, mesh, 1
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             want_text: bool = True) -> dict:
+    t0 = time.time()
+    sp = SHAPES[shape_name]
+    if shape_name == "long_500k" and arch not in SUBQUADRATIC:
+        return {"arch": arch, "shape": shape_name,
+                "multi_pod": multi_pod, "status": "skipped",
+                "reason": "full-attention arch; 500k needs sub-quadratic "
+                          "mixing (DESIGN.md §4)"}
+    try:
+        # COST variant: no grad-accum scan (mb=1) so XLA cost analysis and
+        # the HLO collective schedule cover the FULL step (lax.scan bodies
+        # are counted once — verified empirically; see DESIGN.md §6).
+        lowered, cfg, mesh, _ = build_lowered(arch, shape_name, multi_pod,
+                                              microbatches=1)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        ca = compiled.cost_analysis() or {}
+        colls = collective_bytes(compiled.as_text()) if want_text else {}
+
+        # MEM variant: the production grad-accum config — memory truth.
+        # (single-pod only: the roofline/memory table is single-pod per
+        # the assignment; the multi-pod pass proves compile + sharding.
+        # DRYRUN_SKIP_MEM_VARIANT=1 skips it — the analytic model in
+        # launch/memmodel.py covers the fits-proof, anchored by the cells
+        # where both were measured.)
+        if (sp.kind == "train" and not multi_pod
+                and not os.environ.get("DRYRUN_SKIP_MEM_VARIANT")):
+            lowered_m, _, _, mb = build_lowered(arch, shape_name,
+                                                multi_pod)
+            ma = lowered_m.compile().memory_analysis()
+        else:
+            mb = 1
+            ma = compiled.memory_analysis()
+        chips = len(mesh.devices.flatten())
+        pc = cfg.param_counts()
+
+        flops = float(ca.get("flops", 0.0))
+        byts = float(ca.get("bytes accessed", 0.0))
+        rec = {
+            "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+            "status": "ok", "chips": chips, "microbatches": mb,
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            "hlo_flops_per_chip": flops,
+            "hlo_bytes_per_chip": byts,
+            "collective_bytes_per_chip": colls,
+            "memory": {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+            },
+            "params_total": pc["total"], "params_active": pc["active"],
+            "compute_s": flops / HW["peak_bf16"],
+            "memory_s": byts / HW["hbm_bw"],
+            "collective_s": colls.get("total", 0) / HW["ici_bw"],
+        }
+        terms = {k: rec[k] for k in ("compute_s", "memory_s",
+                                     "collective_s")}
+        rec["dominant"] = max(terms, key=terms.get)
+        return rec
+    except Exception as e:  # noqa: BLE001 — record, don't crash the sweep
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "error", "error": f"{type(e).__name__}: {e}",
+                "trace": traceback.format_exc()[-2000:]}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.json")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results = []
+    if os.path.exists(args.out):
+        results = json.load(open(args.out))
+    done = {(r["arch"], r["shape"], r["multi_pod"]) for r in results
+            if r.get("status") in ("ok", "skipped")}
+
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                if (a, s, mp) in done:
+                    continue
+                rec = run_cell(a, s, mp)
+                results = [r for r in results
+                           if not (r["arch"] == a and r["shape"] == s
+                                   and r["multi_pod"] == mp)]
+                results.append(rec)
+                os.makedirs(os.path.dirname(args.out), exist_ok=True)
+                json.dump(results, open(args.out, "w"), indent=1)
+                status = rec["status"]
+                extra = (f"dom={rec.get('dominant')} "
+                         f"compile={rec.get('compile_s')}s"
+                         if status == "ok" else
+                         rec.get("reason", rec.get("error", ""))[:120])
+                print(f"[{'2pod' if mp else '1pod'}] {a} × {s}: "
+                      f"{status} {extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

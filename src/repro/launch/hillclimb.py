@@ -1,0 +1,89 @@
+"""Hillclimb harness: re-lower ONE cell with config overrides, report the
+three roofline terms and the delta vs. the recorded baseline.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb \
+        --arch qwen2-72b --shape train_4k \
+        --set seq_shard_blocks=False --tag no_sp
+
+Results append to results/hillclimb.json with the tag, so EXPERIMENTS.md
+§Perf can cite exact before/after numbers.
+"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse        # noqa: E402
+import dataclasses     # noqa: E402
+import json            # noqa: E402
+import time            # noqa: E402
+
+import jax             # noqa: E402
+
+import repro.launch.dryrun as dr   # noqa: E402
+from repro.configs import get_config, _ARCH_MODULES  # noqa: E402
+
+
+def parse_override(s: str):
+    k, v = s.split("=", 1)
+    for cast in (int, float):
+        try:
+            return k, cast(v)
+        except ValueError:
+            pass
+    if v in ("True", "False"):
+        return k, v == "True"
+    return k, v
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg overrides key=value")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--out", default="results/hillclimb.json")
+    args = ap.parse_args(argv)
+
+    overrides = dict(parse_override(s) for s in args.set)
+
+    # monkeypatch get_config so build_lowered sees the overridden cfg
+    base_cfg = get_config(args.arch)
+    cfg = dataclasses.replace(base_cfg, **overrides)
+    import repro.launch.dryrun as dmod
+    orig = dmod.get_config
+    dmod.get_config = lambda a, reduced=False: cfg if a == args.arch \
+        else orig(a, reduced)
+    try:
+        t0 = time.time()
+        rec = dr.run_cell(args.arch, args.shape, args.multi_pod)
+    finally:
+        dmod.get_config = orig
+
+    rec["tag"] = args.tag
+    rec["overrides"] = overrides
+    rec["wall_s"] = round(time.time() - t0, 1)
+
+    hist = []
+    if os.path.exists(args.out):
+        hist = json.load(open(args.out))
+    hist.append(rec)
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    json.dump(hist, open(args.out, "w"), indent=1)
+
+    if rec["status"] == "ok":
+        print(f"[{args.tag}] {args.arch} × {args.shape}"
+              f"{' (2pod)' if args.multi_pod else ''}")
+        for k in ("compute_s", "memory_s", "collective_s", "dominant"):
+            print(f"  {k:14s} {rec[k]}")
+        cb = rec["collective_bytes_per_chip"]
+        print("  collectives  ",
+              {k: f"{v/1e9:.2f}GB" for k, v in cb.items()})
+    else:
+        print(rec.get("error"), "\n", rec.get("trace", "")[-1500:])
+
+
+if __name__ == "__main__":
+    main()

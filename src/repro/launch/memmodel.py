@@ -1,0 +1,119 @@
+"""Analytic per-device HBM model — the TPU "fits in 16 GiB" proof.
+
+The XLA-CPU ``memory_analysis()`` of the dry-run overstates TPU memory in
+two documented ways: (1) the CPU backend upconverts every bf16 GEMM
+operand to f32 (temporary full-weight copies that do not exist on TPU);
+(2) the CPU thunk scheduler runs independent chunks concurrently, keeping
+all their score tensors live (TPU executes sequentially, reusing one
+chunk's buffers).  This model computes the schedule-faithful footprint:
+
+  state  = params(bf16) + grads(accum dtype) + adam m/v (state dtype)
+           — all sharded exactly as dist/sharding.py shards them
+  live activations (train, per microbatch, remat per layer):
+           layer-boundary residuals (saved) + one layer's working set
+  caches (decode): KV/state caches, sharded as cache_shardings
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+
+from repro.configs import SHAPES
+from repro.dist import sharding as shd
+from repro.lm import model_zoo as zoo
+from repro.lm.config import ArchConfig
+
+
+def _tree_device_bytes(shapes_tree, shardings_tree, mesh) -> int:
+    """Sum of per-device bytes over a (ShapeDtypeStruct, NamedSharding)
+    tree pair."""
+    total = 0
+    flat_s = jax.tree_util.tree_leaves(shapes_tree)
+    flat_h = jax.tree_util.tree_leaves(
+        shardings_tree, is_leaf=lambda x: hasattr(x, "spec"))
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for s, h in zip(flat_s, flat_h):
+        n = 1
+        spec = tuple(h.spec) + (None,) * (len(s.shape) - len(h.spec))
+        for dim, entry in zip(s.shape, spec):
+            if entry is None:
+                n *= dim
+            else:
+                axes = entry if isinstance(entry, tuple) else (entry,)
+                div = 1
+                for a in axes:
+                    div *= sizes[a]
+                n *= -(-dim // div)     # ceil: GSPMD pads
+        total += n * s.dtype.itemsize
+    return total
+
+
+def train_footprint(cfg: ArchConfig, shape_name: str, mesh,
+                    microbatches: int, accum_bytes: int = 4,
+                    opt_state_bytes: int = 2) -> dict:
+    """Per-device bytes for one training step (production schedule)."""
+    sp = SHAPES[shape_name]
+    key = jax.random.PRNGKey(0)
+    params = jax.eval_shape(lambda k: zoo.init(k, cfg), key)
+    p_sh = shd.param_shardings(params, mesh, cfg.moe_shard)
+    param_b = _tree_device_bytes(params, p_sh, mesh)
+    n_params_dev = param_b // 2       # bf16 params
+    grads_b = n_params_dev * accum_bytes
+    opt_b = 2 * n_params_dev * opt_state_bytes   # m and v
+
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dp *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+    tp = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+
+    rows_per_dev = max(sp.global_batch // (dp * microbatches), 1)
+    seq = sp.seq_len
+    d = cfg.d_model
+    # residual stream saved at every layer boundary (remat policy), seq
+    # sharded over model between blocks (SP)
+    resid = (cfg.n_layers + cfg.enc_layers) * rows_per_dev \
+        * (-(-seq // tp)) * d * 2
+    # one layer's working set: attention scores chunk (f32) + mlp hidden
+    if cfg.family == "ssm":
+        q = min(cfg.ssd_chunk, seq)
+        nc = max(seq // q, 1)
+        work = rows_per_dev * nc * q * q * (-(-cfg.ssm_heads // tp)) * 4 \
+            + rows_per_dev * nc * (-(-cfg.ssm_heads // tp)) \
+            * cfg.ssm_headdim * cfg.ssm_state * 4
+    else:
+        from repro.nn.attention import CHUNK_Q_ABOVE, N_Q_CHUNKS
+        qc = seq if seq <= CHUNK_Q_ABOVE else seq // N_Q_CHUNKS
+        heads_dev = -(-cfg.n_heads // tp)
+        work = rows_per_dev * heads_dev * qc * seq * 4
+        ff = cfg.moe_d_ff or cfg.d_ff
+        work += rows_per_dev * seq * max(-(-ff // tp), d) * 2
+    # logits for one microbatch (vocab sharded over model)
+    logits = rows_per_dev * seq * (-(-cfg.vocab // tp)) * 4
+
+    total = param_b + grads_b + opt_b + resid + work + logits
+    return {
+        "params_bytes": param_b, "grads_bytes": grads_b,
+        "opt_bytes": opt_b, "residuals_bytes": resid,
+        "working_set_bytes": work, "logits_bytes": logits,
+        "total_bytes": total, "fits_16GiB": total < 16 * 2 ** 30,
+    }
+
+
+def decode_footprint(cfg: ArchConfig, shape_name: str, mesh) -> dict:
+    """Per-device bytes for one decode step (params + caches + small
+    working set)."""
+    sp = SHAPES[shape_name]
+    key = jax.random.PRNGKey(0)
+    params = jax.eval_shape(lambda k: zoo.init(k, cfg), key)
+    p_sh = shd.param_shardings(params, mesh, cfg.moe_shard)
+    param_b = _tree_device_bytes(params, p_sh, mesh)
+    cache = zoo.cache_specs(cfg, sp.global_batch, sp.seq_len)
+    c_sh = shd.cache_shardings(cache, mesh)
+    cache_b = _tree_device_bytes(cache, c_sh, mesh)
+    work = sp.global_batch * cfg.d_model * 4 * 8
+    total = param_b + cache_b + work
+    return {"params_bytes": param_b, "cache_bytes": cache_b,
+            "working_set_bytes": work, "total_bytes": total,
+            "fits_16GiB": total < 16 * 2 ** 30}

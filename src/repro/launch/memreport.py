@@ -1,0 +1,58 @@
+"""Analytic per-device memory for every cell (no compile — fast).
+
+    PYTHONPATH=src python -m repro.launch.memreport
+"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse  # noqa: E402
+import json      # noqa: E402
+
+from repro.configs import ARCH_IDS, SHAPES, SUBQUADRATIC, get_config  # noqa: E402
+from repro.launch import memmodel  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/memmodel.json")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args(argv)
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    dp = 32 if args.multi_pod else 16
+    out = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for sname, sp in SHAPES.items():
+            if sname == "long_500k" and arch not in SUBQUADRATIC:
+                continue
+            if sp.kind == "train":
+                mb = max(min(16, sp.global_batch // dp), 1)
+                accum = 2 if cfg.family == "moe" else 4
+                r = memmodel.train_footprint(cfg, sname, mesh, mb,
+                                             accum_bytes=accum)
+            elif sp.kind == "decode":
+                r = memmodel.decode_footprint(cfg, sname, mesh)
+            else:  # prefill: no grads/opt/residual pyramid, last-token head
+                full = memmodel.train_footprint(cfg, sname, mesh, 1)
+                r = {
+                    "params_bytes": full["params_bytes"],
+                    "working_set_bytes": full["working_set_bytes"]
+                    + full["residuals_bytes"] // max(cfg.n_layers, 1) * 2,
+                    "total_bytes": full["params_bytes"]
+                    + full["working_set_bytes"]
+                    + full["residuals_bytes"] // max(cfg.n_layers, 1) * 2,
+                }
+                r["fits_16GiB"] = r["total_bytes"] < 16 * 2 ** 30
+            r.update(arch=arch, shape=sname,
+                     gib=round(r["total_bytes"] / 2**30, 2))
+            out.append(r)
+            print(f"{arch:28s} {sname:12s} {r['gib']:7.2f} GiB/chip "
+                  f"fits={r['fits_16GiB']}")
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    json.dump(out, open(args.out, "w"), indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

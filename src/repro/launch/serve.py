@@ -1,0 +1,73 @@
+"""Serving driver: batched prefill + decode loop with continuous-batching
+slots (small-scale runnable on the dev container).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --reduced \
+        --batch 4 --prompt-len 16 --gen 8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.dist import sharding as shd
+from repro.launch.mesh import local_mesh
+from repro.lm import model_zoo as zoo
+from repro.lm import steps as steps_mod
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--cache-len", type=int, default=64)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    mesh = local_mesh()
+    rng = np.random.default_rng(0)
+
+    with shd.use_mesh(mesh):
+        key = jax.random.PRNGKey(0)
+        params = zoo.init(key, cfg)
+        frames = None
+        if cfg.family == "audio":
+            frames = 0.01 * jnp.ones(
+                (args.batch, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+        cache = zoo.make_cache(cfg, params, args.batch, args.cache_len,
+                               frames=frames)
+        decode = jax.jit(steps_mod.make_decode_step(cfg),
+                         donate_argnums=(2,))
+
+        # "prefill" by teacher-forcing the prompt through decode slots
+        # (token-by-token; the batched prefill path is exercised in the
+        # dry-run and tests)
+        prompts = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len),
+                               dtype=np.int32)
+        tok = jnp.asarray(prompts[:, 0])
+        t0 = time.time()
+        for pos in range(args.prompt_len - 1):
+            _, _, cache = decode(params, tok, cache, jnp.int32(pos))
+            tok = jnp.asarray(prompts[:, pos + 1])
+        out = []
+        for g in range(args.gen):
+            tok, logits, cache = decode(params, tok, cache,
+                                        jnp.int32(args.prompt_len + g))
+            out.append(np.asarray(tok))
+        dt = time.time() - t0
+        gen = np.stack(out, 1)
+        print(f"generated {gen.shape} tokens in {dt:.2f}s "
+              f"({args.batch*args.gen/dt:.1f} tok/s)")
+        print(gen)
+        return gen
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Loss functions (vocab-sharding friendly)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """logits (..., V) any float dtype, labels (...) int32 -> scalar mean
+    NLL over unmasked positions.  Stable: f32 max-sub logsumexp (GSPMD
+    turns the vocab reductions into partial+all-reduce when logits are
+    vocab-sharded)."""
+    lg = logits.astype(jnp.float32)
+    m = jnp.max(lg, axis=-1, keepdims=True)
+    lse = m[..., 0] + jnp.log(jnp.sum(jnp.exp(lg - m), axis=-1))
+    picked = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    nll = lse - picked
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,120 @@
+"""Unified entry points across the 4 model families.
+
+    init(key, cfg)                         -> params
+    loss_fn(cfg, params, batch)            -> (loss, aux)
+    decode_fn(cfg, params, tok, cache, pos)-> (logits, cache)
+    make_cache(cfg, params, batch, len)    -> cache
+    input_specs(cfg, shape, ...)           -> ShapeDtypeStruct batch
+
+Batches are dicts:  dense/moe/ssm/hybrid: {tokens (B,S+1)};
+vlm: {patches (B,P,D), tokens (B,S+1)};  audio: {frames (B,T,D),
+tokens (B,S+1)}.  Labels are tokens shifted by one.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer as tfm
+from . import whisper as whi
+from .config import ArchConfig
+from .losses import cross_entropy
+
+AUX_WEIGHT = 0.01
+
+
+def init(key, cfg: ArchConfig):
+    if cfg.family == "audio":
+        return whi.init_params(key, cfg)
+    return tfm.init_params(key, cfg)
+
+
+def loss_fn(cfg: ArchConfig, params, batch):
+    toks = batch["tokens"]
+    inp, lab = toks[:, :-1], toks[:, 1:]
+    if cfg.family == "audio":
+        logits, aux = whi.forward(cfg, params, batch["frames"], inp)
+        return cross_entropy(logits, lab), aux
+    if cfg.family == "vlm":
+        logits, aux = tfm.forward(cfg, params, tokens=inp,
+                                  prefix_embeds=batch["patches"])
+        txt_logits = logits[:, cfg.prefix_tokens:]
+        return (cross_entropy(txt_logits, lab) + AUX_WEIGHT * aux, aux)
+    logits, aux = tfm.forward(cfg, params, tokens=inp)
+    return cross_entropy(logits, lab) + AUX_WEIGHT * aux, aux
+
+
+def prefill_fn(cfg: ArchConfig, params, batch):
+    """Forward pass only (inference prefill): returns last-position
+    logits.  The head projects ONLY the last position — a (B, S, V)
+    logits tensor is never materialized."""
+    if cfg.family == "audio":
+        logits, _ = whi.forward(cfg, params, batch["frames"],
+                                batch["tokens"][:, :-1],
+                                head_last_only=True)
+    elif cfg.family == "vlm":
+        logits, _ = tfm.forward(cfg, params, tokens=batch["tokens"][:, :-1],
+                                prefix_embeds=batch["patches"],
+                                head_last_only=True)
+    else:
+        logits, _ = tfm.forward(cfg, params, tokens=batch["tokens"][:, :-1],
+                                head_last_only=True)
+    return logits[:, -1, :]
+
+
+def make_cache(cfg: ArchConfig, params, batch_sz: int, cache_len: int,
+               frames=None):
+    if cfg.family == "audio":
+        return whi.init_cache(cfg, params, frames, cache_len)
+    return tfm.init_cache(cfg, batch_sz, cache_len)
+
+
+def decode_fn(cfg: ArchConfig, params, token, cache, pos):
+    if cfg.family == "audio":
+        return whi.decode_step(cfg, params, token, cache, pos)
+    return tfm.decode_step(cfg, params, token, cache, pos)
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct stand-ins for the dry-run (no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, seq_len: int, batch: int,
+                kind: str = "train") -> dict:
+    """Dry-run input specs for one step of the given kind."""
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    i32 = jnp.int32
+    S = jax.ShapeDtypeStruct
+    if kind in ("train", "prefill"):
+        b = {"tokens": S((batch, seq_len + 1), i32)}
+        if cfg.family == "vlm":
+            b["patches"] = S((batch, cfg.prefix_tokens, cfg.d_model), dt)
+        if cfg.family == "audio":
+            b["frames"] = S((batch, cfg.enc_seq, cfg.d_model), dt)
+        return b
+    # decode: one new token against a cache of seq_len
+    return {"token": S((batch,), i32)}
+
+
+def cache_specs(cfg: ArchConfig, batch: int, cache_len: int):
+    """ShapeDtypeStructs of the decode cache (mirrors make_cache)."""
+    def spec_of(tree):
+        return jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    if cfg.family == "audio":
+        dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        caches = []
+        for _ in range(cfg.n_layers):
+            caches.append({
+                "k": jax.ShapeDtypeStruct(
+                    (batch, cache_len, cfg.n_kv, cfg.hd), dt),
+                "v": jax.ShapeDtypeStruct(
+                    (batch, cache_len, cfg.n_kv, cfg.hd), dt),
+                "xk": jax.ShapeDtypeStruct(
+                    (batch, cfg.enc_seq, cfg.n_kv, cfg.hd), dt),
+                "xv": jax.ShapeDtypeStruct(
+                    (batch, cfg.enc_seq, cfg.n_kv, cfg.hd), dt),
+            })
+        return caches
+    dummy = jax.eval_shape(lambda: tfm.init_cache(cfg, batch, cache_len))
+    return dummy

@@ -1,0 +1,245 @@
+"""Generic decoder-only LM covering 9 of the 10 assigned architectures
+(dense / MoE / SSM / hybrid / VLM-prefix); whisper.py adds the enc-dec
+audio arch on the same primitives.
+
+Params are a dict:
+  embed (V, D), final_norm {...}, lm_head (D, V) (absent if tied),
+  layers: list of per-layer dicts {"norm1", "mixer", "norm2"?, "ffn"?}.
+
+Execution is unrolled over the layer list (the dry-run needs per-layer HLO
+for honest cost analysis — lax.scan bodies are counted once by XLA cost
+analysis, verified empirically).  `remat` wraps each layer in
+jax.checkpoint for training.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import attention as attn
+from repro.nn import layers as nnl
+from repro.nn import moe as nnmoe
+from repro.nn import rglru as nnr
+from repro.nn import ssm as nnssm
+from repro.dist.sharding import constrain
+from .config import ArchConfig
+
+
+def _dt(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: ArchConfig, i: int) -> dict:
+    dt = _dt(cfg)
+    d = cfg.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    mixer_kind = cfg.mixer_of(i)
+    p = {"norm1": nnl.norm_params(cfg.norm, d, dt)}
+    if mixer_kind in ("attn", "local"):
+        p["mixer"] = attn.attn_params(k1, d, cfg.n_heads, cfg.n_kv,
+                                      cfg.hd, cfg.qkv_bias, dt)
+    elif mixer_kind == "ssd":
+        p["mixer"] = nnssm.ssd_params(k1, d, cfg.ssm_state, cfg.ssm_conv,
+                                      cfg.ssm_expand, cfg.ssm_headdim, dt)
+    elif mixer_kind == "rglru":
+        p["mixer"] = nnr.rglru_params(k1, d, cfg.d_rnn or d,
+                                      cfg.ssm_conv, dt)
+    else:
+        raise ValueError(mixer_kind)
+    ffn_kind = cfg.ffn_of(i)
+    if ffn_kind != "none":
+        p["norm2"] = nnl.norm_params(cfg.norm, d, dt)
+        if ffn_kind == "mlp":
+            p["ffn"] = nnl.mlp_params(k2, d, cfg.d_ff, cfg.act, dt)
+        else:
+            p["ffn"] = nnmoe.moe_params(k2, d, cfg.moe_d_ff or cfg.d_ff,
+                                        cfg.moe_experts, cfg.act, dt,
+                                        shared=cfg.moe_shared)
+    return p
+
+
+def init_params(key, cfg: ArchConfig) -> dict:
+    dt = _dt(cfg)
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    params = {
+        "embed": nnl.embed_init(keys[0], (cfg.vocab, cfg.d_model), dt),
+        "final_norm": nnl.norm_params(cfg.norm, cfg.d_model, dt),
+        "layers": [init_layer(keys[2 + i], cfg, i)
+                   for i in range(cfg.n_layers)],
+    }
+    if not cfg.tie_embed:
+        params["lm_head"] = nnl.lecun(keys[1], (cfg.d_model, cfg.vocab), dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# layer application
+# ---------------------------------------------------------------------------
+
+def apply_layer(cfg: ArchConfig, i: int, p: dict, x, positions,
+                prefix_len: int = 0):
+    """Full-sequence (train/prefill) layer.  Returns (x, aux_loss)."""
+    aux = jnp.float32(0.0)
+    mixer_kind = cfg.mixer_of(i)
+    h = nnl.apply_norm(cfg.norm, x, p["norm1"])
+    if mixer_kind == "attn":
+        m = attn.causal_attention(p["mixer"], h, cfg.n_heads, cfg.n_kv,
+                                  cfg.hd, positions, cfg.rope_theta,
+                                  cfg.logits_softcap, prefix_len)
+    elif mixer_kind == "local":
+        m = attn.local_attention(p["mixer"], h, cfg.n_heads, cfg.n_kv,
+                                 cfg.hd, positions, cfg.rope_theta,
+                                 cfg.local_window)
+    elif mixer_kind == "ssd":
+        m = nnssm.ssd_apply(p["mixer"], h, cfg.ssm_state, cfg.ssm_expand,
+                            cfg.ssm_headdim, cfg.ssd_chunk)
+    elif mixer_kind == "rglru":
+        m = nnr.rglru_apply(p["mixer"], h)
+    x = x + m
+    if "ffn" in p:
+        h = nnl.apply_norm(cfg.norm, x, p["norm2"])
+        if cfg.ffn_of(i) == "moe":
+            y, aux = nnmoe.moe_apply(p["ffn"], h, cfg.moe_experts,
+                                     cfg.moe_top_k, cfg.act,
+                                     cfg.capacity_factor, cfg.moe_scheme,
+                                     cfg.moe_shard)
+        else:
+            y = nnl.mlp_apply(p["ffn"], h, cfg.act)
+        x = x + y
+    return x, aux
+
+
+def forward(cfg: ArchConfig, params: dict, tokens=None, embeds=None,
+            prefix_embeds=None, head_last_only: bool = False):
+    """Full-sequence forward.  tokens (B, S) int32 and/or prefix_embeds
+    (B, P, D) prepended (VLM).  Returns (logits (B, T, V), aux).
+    ``head_last_only``: inference prefill — project only the final
+    position (avoids materializing (B, S, V) logits)."""
+    assert tokens is not None or embeds is not None
+    if embeds is None:
+        x = params["embed"][tokens]
+    else:
+        x = embeds
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    prefix_len = 0
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+        prefix_len = prefix_embeds.shape[1]
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    aux_total = jnp.float32(0.0)
+    x = constrain(x, "dp", "sp" if cfg.seq_shard_blocks else None, None)
+    for i, lp in enumerate(params["layers"]):
+        f = functools.partial(apply_layer, cfg, i, prefix_len=prefix_len)
+        if cfg.remat:
+            f = jax.checkpoint(f)   # prefix_len bound statically above
+        x, aux = f(lp, x, positions)
+        x = constrain(x, "dp", "sp" if cfg.seq_shard_blocks else None, None)
+        aux_total = aux_total + aux
+    x = nnl.apply_norm(cfg.norm, x, params["final_norm"])
+    if head_last_only:
+        x = x[:, -1:, :]
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = x @ head
+    return logits, aux_total
+
+
+# ---------------------------------------------------------------------------
+# decode (one token against caches)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int) -> list:
+    """Per-layer decode caches (dtype = model dtype, f32 recurrent
+    states)."""
+    dt = _dt(cfg)
+    caches = []
+    for i in range(cfg.n_layers):
+        kind = cfg.mixer_of(i)
+        if kind in ("attn", "local"):
+            w = min(cfg.local_window, cache_len) if kind == "local" \
+                else cache_len
+            shape = (batch, w, cfg.n_kv, cfg.hd)
+            if cfg.kv_quant:
+                caches.append({
+                    "k": jnp.zeros(shape, jnp.int8),
+                    "v": jnp.zeros(shape, jnp.int8),
+                    "ks": jnp.zeros(shape[:3], jnp.float32),
+                    "vs": jnp.zeros(shape[:3], jnp.float32)})
+            else:
+                caches.append({"k": jnp.zeros(shape, dt),
+                               "v": jnp.zeros(shape, dt)})
+        elif kind == "ssd":
+            caches.append({
+                "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_headdim,
+                                    cfg.ssm_state), jnp.float32),
+                "conv": jnp.zeros((batch, cfg.ssm_conv - 1,
+                                   cfg.d_inner + 2 * cfg.ssm_state), dt)})
+        elif kind == "rglru":
+            dr = cfg.d_rnn or cfg.d_model
+            caches.append({
+                "state": jnp.zeros((batch, dr), jnp.float32),
+                "conv": jnp.zeros((batch, cfg.ssm_conv - 1, dr), dt)})
+    return caches
+
+
+def decode_step(cfg: ArchConfig, params: dict, token, caches: list, pos):
+    """token (B,) int32; pos scalar int32 (current position).  Returns
+    (logits (B, V), new caches)."""
+    x = params["embed"][token][:, None, :]              # (B, 1, D)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    new_caches = []
+    for i, (lp, c) in enumerate(zip(params["layers"], caches)):
+        kind = cfg.mixer_of(i)
+        h = nnl.apply_norm(cfg.norm, x, lp["norm1"])
+        if kind in ("attn", "local"):
+            window = cfg.local_window if kind == "local" else 0
+            if cfg.kv_quant:
+                m, nk, nv, nks, nvs = attn.decode_attention(
+                    lp["mixer"], h, c["k"], c["v"], pos, cfg.n_heads,
+                    cfg.n_kv, cfg.hd, cfg.rope_theta, window=window,
+                    softcap=cfg.logits_softcap, k_scale=c["ks"],
+                    v_scale=c["vs"])
+                new_caches.append({"k": nk, "v": nv, "ks": nks,
+                                   "vs": nvs})
+            else:
+                m, nk, nv = attn.decode_attention(
+                    lp["mixer"], h, c["k"], c["v"], pos, cfg.n_heads,
+                    cfg.n_kv, cfg.hd, cfg.rope_theta, window=window,
+                    softcap=cfg.logits_softcap)
+                new_caches.append({"k": nk, "v": nv})
+        elif kind == "ssd":
+            m, st, cv = nnssm.ssd_decode(lp["mixer"], h, c["state"],
+                                         c["conv"], cfg.ssm_state,
+                                         cfg.ssm_expand, cfg.ssm_headdim)
+            new_caches.append({"state": st, "conv": cv})
+        else:  # rglru
+            m, st, cv = nnr.rglru_decode(lp["mixer"], h, c["state"],
+                                         c["conv"])
+            new_caches.append({"state": st, "conv": cv})
+        x = x + m
+        if "ffn" in lp:
+            h = nnl.apply_norm(cfg.norm, x, lp["norm2"])
+            if cfg.ffn_of(i) == "moe":
+                y, _ = nnmoe.moe_apply(lp["ffn"], h, cfg.moe_experts,
+                                       cfg.moe_top_k, cfg.act,
+                                       cfg.capacity_factor, cfg.moe_scheme,
+                                       cfg.moe_shard)
+            else:
+                y = nnl.mlp_apply(lp["ffn"], h, cfg.act)
+            x = x + y
+    x = nnl.apply_norm(cfg.norm, x, params["final_norm"])
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    return (x @ head)[:, 0, :], new_caches

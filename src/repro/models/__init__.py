@@ -1,0 +1,13 @@
+"""PCN benchmark models (paper Table I + §VI-D) and FC baselines."""
+from . import pointnet2, dgcnn, pointnext, pointvector, baselines
+from .common import BlockSpec, PCNSpec
+
+MODEL_ZOO = {
+    "pointnet2_c": (pointnet2, pointnet2.POINTNET2_C),
+    "pointnet2_ps": (pointnet2, pointnet2.POINTNET2_PS),
+    "pointnet2_s": (pointnet2, pointnet2.POINTNET2_S),
+    "dgcnn_c": (dgcnn, dgcnn.DGCNN_C),
+    "dgcnn_s": (dgcnn, dgcnn.DGCNN_S),
+    "pointnext_s": (pointnext, pointnext.POINTNEXT_S),
+    "pointvector_l": (pointvector, pointvector.POINTVECTOR_L),
+}

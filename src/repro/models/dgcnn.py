@@ -1,0 +1,95 @@
+"""DGCNN [48] — EdgeConv benchmark, (c) classification / (s) segmentation.
+
+EdgeConv: every point is a center (sampler="all"), k=20, MLP input
+[f_j − f_i, f_i].  Accelerator-standard simplification (as in Mesorasi /
+EdgePC): the neighbor graph is built in coordinate space for all layers
+(the original paper rebuilds it in feature space; DS accelerators gather
+spatially).  DGCNN(c) applies activation at block end, which makes L-PCN's
+delta compensation exact (paper §VI-E).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import (BlockSpec, PCNSpec, apply_head, init_model,
+                     run_blocks, total_report)
+from repro.core.mlp import apply_mlp
+
+DGCNN_C = PCNSpec(
+    name="dgcnn_c",
+    blocks=(
+        BlockSpec(1024, 20, (64,), kind="edge", sampler="all"),
+        BlockSpec(1024, 20, (64,), kind="edge", sampler="all"),
+        BlockSpec(1024, 20, (128,), kind="edge", sampler="all"),
+        BlockSpec(1024, 20, (256,), kind="edge", sampler="all"),
+    ),
+    head_dims=(512, 256),
+    n_classes=40,
+    activation="block_end",   # -> exact delta compensation (paper §VI-E)
+)
+
+DGCNN_S = PCNSpec(
+    name="dgcnn_s",
+    blocks=(
+        BlockSpec(8192, 20, (64,), kind="edge", sampler="all"),
+        BlockSpec(8192, 20, (64,), kind="edge", sampler="all"),
+        BlockSpec(8192, 20, (64,), kind="edge", sampler="all"),
+    ),
+    head_dims=(256, 128),
+    n_classes=20,
+    in_feats=6,
+    task="seg",
+    activation="block_end",
+)
+
+
+def with_points(spec: PCNSpec, n: int) -> PCNSpec:
+    """Rescale an `all`-sampler spec to an n-point cloud."""
+    from dataclasses import replace
+    return replace(spec, blocks=tuple(
+        BlockSpec(n, b.k, b.mlp_dims, b.radius, b.kind, b.sampler,
+                  b.neighbor) for b in spec.blocks))
+
+
+def init(key, spec=DGCNN_C):
+    return init_model(key, spec)
+
+
+def apply(params, spec, xyz, feats, key, mode: str = "lpcn",
+          isl_kw: dict | None = None, with_report: bool = False):
+    """EdgeConv stack; every layer keeps all N points (no downsampling)."""
+    reports = []
+    f = feats
+    per_layer = []
+    for b, mlp in zip(spec.blocks, params["blocks"]):
+        key, sub = jax.random.split(key)
+        from .common import lpcn_cfg_for
+        from repro.core.pipeline import lpcn_block
+        cfg = lpcn_cfg_for(b, mode, isl_kw or {})
+        out = lpcn_block(cfg, mlp, xyz, f, sub, with_report=with_report)
+        f = out.features
+        per_layer.append(f)
+        if with_report and out.report is not None:
+            reports.append(out.report)
+    cat = jnp.concatenate(per_layer, axis=-1)
+    if spec.task == "cls":
+        g = cat.max(axis=0)
+        return apply_head(params, g), total_report(reports)
+    g = cat.max(axis=0, keepdims=True)
+    per_point = jnp.concatenate(
+        [cat, jnp.broadcast_to(g, cat.shape[:1] + g.shape[1:])], axis=-1)
+    return apply_head(params, per_point), total_report(reports)
+
+
+def init_for_task(key, spec):
+    """Head input dim differs from the generic initializer (concat of all
+    EdgeConv outputs [+ global]), so rebuild the head accordingly."""
+    from repro.core.mlp import init_mlp
+    params = init_model(key, spec)
+    cat_dim = sum(b.mlp_dims[-1] for b in spec.blocks)
+    head_in = cat_dim if spec.task == "cls" else 2 * cat_dim
+    key, sub = jax.random.split(key)
+    params["head"] = init_mlp(sub, [head_in, *spec.head_dims,
+                                    spec.n_classes], "per_layer")
+    return params

@@ -1,0 +1,75 @@
+"""PointNet++ [39] — the paper's primary benchmark (3 task variants).
+
+(c)  classification, ModelNet40, 1024 pts:  SA(512,32) SA(128,64) + global
+(ps) part segmentation, ShapeNet, 2048 pts: SA stack + FP decoder
+(s)  semantic segmentation, S3DIS, 4096 pts
+
+Block shapes follow the original SSG configs (and paper Fig. 4a).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import (BlockSpec, PCNSpec, apply_head, feature_propagation,
+                     global_pool, init_model, run_blocks, total_report)
+
+POINTNET2_C = PCNSpec(
+    name="pointnet2_c",
+    blocks=(
+        BlockSpec(512, 32, (64, 64, 128), radius=0.2),
+        BlockSpec(128, 64, (128, 128, 256), radius=0.4),
+    ),
+    global_mlp=(256, 512, 1024),
+    head_dims=(512, 256),
+    n_classes=40,
+)
+
+POINTNET2_PS = PCNSpec(
+    name="pointnet2_ps",
+    blocks=(
+        BlockSpec(512, 32, (64, 64, 128), radius=0.2),
+        BlockSpec(128, 64, (128, 128, 256), radius=0.4),
+    ),
+    head_dims=(256, 128),
+    n_classes=50,
+    task="seg",
+)
+
+POINTNET2_S = PCNSpec(
+    name="pointnet2_s",
+    blocks=(
+        BlockSpec(1024, 32, (32, 32, 64), radius=0.1),
+        BlockSpec(256, 32, (64, 64, 128), radius=0.2),
+        BlockSpec(64, 32, (128, 128, 256), radius=0.4),
+    ),
+    head_dims=(256, 128),
+    n_classes=13,
+    in_feats=6,
+    task="seg",
+)
+
+
+def init(key, spec=POINTNET2_C):
+    return init_model(key, spec)
+
+
+def apply(params, spec, xyz, feats, key, mode: str = "lpcn",
+          isl_kw: dict | None = None, with_report: bool = False):
+    """One cloud -> (logits, total WorkloadReport | None).
+
+    cls:  (n_classes,) logits.   seg: (N, n_classes) per-point logits.
+    """
+    cx, cf, reports, saved = run_blocks(params, spec, xyz, feats, key,
+                                        mode, isl_kw, with_report)
+    if spec.task == "cls":
+        g = global_pool(params, spec, cx, cf)
+        return apply_head(params, g), total_report(reports)
+    # segmentation: FP decoder back up the saved pyramid
+    f = cf
+    xyz_levels = [s[0] for s in saved] + [cx]
+    for lvl in range(len(saved) - 1, -1, -1):
+        src_xyz = xyz_levels[lvl + 1]
+        dst_xyz = xyz_levels[lvl]
+        f = feature_propagation(dst_xyz, src_xyz, f)
+    return apply_head(params, f), total_report(reports)

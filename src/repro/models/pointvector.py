@@ -1,0 +1,70 @@
+"""PointVector [12] — vector-representation PointNet++ variant (§VI-D).
+
+PointVector-L aggregates neighbor features through a *vector-attention*
+style linear combination before pooling.  Crucially for L-PCN, the variant
+evaluated in the paper applies its activation at the END of each building
+block (paper §VI-E), so cached pre-activation results are compensated
+exactly: CONV(A−B) = CONV(A) − CONV(B).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mlp import apply_mlp, init_mlp
+from repro.core.pipeline import lpcn_block
+from .common import (BlockSpec, PCNSpec, apply_head, feature_propagation,
+                     lpcn_cfg_for, total_report)
+
+POINTVECTOR_L = PCNSpec(
+    name="pointvector_l",
+    blocks=(
+        BlockSpec(2048, 32, (96,), radius=0.1),
+        BlockSpec(512, 32, (192,), radius=0.2),
+        BlockSpec(128, 32, (384,), radius=0.4),
+        BlockSpec(32, 32, (768,), radius=0.8),
+    ),
+    head_dims=(256, 128),
+    n_classes=13,
+    in_feats=6,
+    task="seg",
+    activation="block_end",   # -> exact delta compensation (paper §VI-E)
+)
+
+
+def init(key, spec=POINTVECTOR_L, stem_dim: int = 64):
+    params = {"stem": None, "blocks": [], "vector": [], "head": None}
+    key, sub = jax.random.split(key)
+    params["stem"] = init_mlp(sub, [spec.in_feats, stem_dim], "per_layer")
+    f = stem_dim
+    for b in spec.blocks:
+        key, s1, s2 = jax.random.split(key, 3)
+        params["blocks"].append(
+            init_mlp(s1, [3 + f, *b.mlp_dims], spec.activation))
+        f = b.mlp_dims[-1]
+        # vector branch: per-center linear recombination post-pooling
+        params["vector"].append(init_mlp(s2, [f, f], "per_layer"))
+    key, sub = jax.random.split(key)
+    params["head"] = init_mlp(sub, [f, *spec.head_dims, spec.n_classes],
+                              "per_layer")
+    return params
+
+
+def apply(params, spec, xyz, feats, key, mode: str = "lpcn",
+          isl_kw: dict | None = None, with_report: bool = False):
+    reports = []
+    f = apply_mlp(params["stem"], feats)
+    cur_xyz = xyz
+    xyz_levels = [xyz]
+    for b, mlp, vec in zip(spec.blocks, params["blocks"], params["vector"]):
+        key, sub = jax.random.split(key)
+        cfg = lpcn_cfg_for(b, mode, isl_kw or {})
+        out = lpcn_block(cfg, mlp, cur_xyz, f, sub, with_report=with_report)
+        f = jax.nn.relu(apply_mlp(vec, out.features))   # vector recombine
+        cur_xyz = out.center_xyz
+        xyz_levels.append(cur_xyz)
+        if with_report and out.report is not None:
+            reports.append(out.report)
+    for lvl in range(len(spec.blocks) - 1, -1, -1):
+        f = feature_propagation(xyz_levels[lvl], xyz_levels[lvl + 1], f)
+    return apply_head(params, f), total_report(reports)

@@ -1,0 +1,277 @@
+"""Attention: GQA/MQA, full-causal, block-local, cross; train + decode.
+
+Shapes: hidden (B, S, D); per-head (B, S, H, Dh).  GQA is computed grouped
+(no K/V expansion).  The Pallas flash kernel is used for long prefill when
+``use_flash`` (beyond-paper perf path); the einsum path is the oracle and
+the GSPMD-friendly default for the dry-run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain, constrain_heads
+from .layers import lecun, rope
+
+NEG = -2.0e38
+
+
+def attn_params(key, d: int, n_heads: int, n_kv: int, head_dim: int,
+                qkv_bias: bool, dtype) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": lecun(kq, (d, n_heads * head_dim), dtype),
+        "wk": lecun(kk, (d, n_kv * head_dim), dtype),
+        "wv": lecun(kv, (d, n_kv * head_dim), dtype),
+        "wo": lecun(ko, (n_heads * head_dim, d), dtype, fan_in=n_heads * head_dim),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv * head_dim,), dtype)
+    return p
+
+
+def _project_qkv(p, x, n_heads, n_kv, head_dim, positions, theta,
+                 use_rope=True):
+    b, s, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    # heads over the model axis where the head count covers it (GSPMD
+    # pads 40->48 fine, but padding few-KV-head tensors onto 16 devices
+    # causes involuntary-remat permutes — see sharding.constrain_heads)
+    q = constrain_heads(q.reshape(b, s, n_heads, head_dim), n_heads)
+    k = constrain_heads(k.reshape(b, s, n_kv, head_dim), n_kv)
+    v = constrain_heads(v.reshape(b, s, n_kv, head_dim), n_kv)
+    if use_rope:
+        q = rope(q, positions, theta)
+        k = rope(k, positions, theta)
+    return q, k, v
+
+
+def _gqa_scores(q, k, scale):
+    """q (B,S,H,Dh), k (B,T,Hkv,Dh) -> scores (B,Hkv,G,S,T), grouped."""
+    b, s, h, dh = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, s, hkv, g, dh)
+    return jnp.einsum("bshgd,bthd->bhgst", qg * scale, k,
+                      preferred_element_type=jnp.float32)
+
+
+def _gqa_out(probs, v, b, s, h, dh):
+    """probs (B,Hkv,G,S,T), v (B,T,Hkv,Dh) -> (B,S,H*Dh)."""
+    o = jnp.einsum("bhgst,bthd->bshgd", probs, v)
+    return o.reshape(b, s, h * dh)
+
+
+CHUNK_Q_ABOVE = 8192   # chunk the query axis for long prefill
+N_Q_CHUNKS = 8         # python-unrolled (exact FLOP accounting, no scan)
+
+
+def causal_attention(p, x, n_heads, n_kv, head_dim, positions, theta,
+                     softcap: float = 0.0, prefix_len: int = 0,
+                     use_rope: bool = True):
+    """Full causal self-attention (optionally with a bidirectional prefix —
+    PaliGemma's image tokens attend fully within the prefix).
+
+    For S > CHUNK_Q_ABOVE the query axis is processed in N_Q_CHUNKS
+    python-unrolled chunks against the full K/V — the XLA-level
+    flash-attention pattern: peak score memory drops S/NC-fold, FLOPs stay
+    exact in cost analysis (a lax.scan would hide them), and causality
+    additionally skips KV columns beyond each chunk's end."""
+    b, s, d = x.shape
+    q, k, v = _project_qkv(p, x, n_heads, n_kv, head_dim, positions, theta,
+                           use_rope)
+    scale = head_dim ** -0.5
+
+    def block(qc, q0, t_hi):
+        """q chunk (B, QC, H, Dh) at offset q0 vs. keys [0, t_hi)."""
+        qc_len = qc.shape[1]
+        scores = _gqa_scores(qc, k[:, :t_hi], scale)   # (B,Hkv,G,QC,T')
+        if softcap > 0:
+            scores = jnp.tanh(scores / softcap) * softcap
+        rows = q0 + jnp.arange(qc_len)[:, None]
+        cols = jnp.arange(t_hi)[None, :]
+        mask = rows >= cols
+        if prefix_len > 0:
+            mask = mask | ((rows < prefix_len) & (cols < prefix_len))
+        scores = jnp.where(mask, scores, NEG)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        return _gqa_out(probs, v[:, :t_hi], b, qc_len, n_heads, head_dim)
+
+    if s <= CHUNK_Q_ABOVE:
+        o = block(q, 0, s)
+    else:
+        nc = N_Q_CHUNKS
+        assert s % nc == 0
+        qlen = s // nc
+        o = jnp.concatenate(
+            [block(q[:, i * qlen:(i + 1) * qlen], i * qlen,
+                   (i + 1) * qlen) for i in range(nc)], axis=1)
+    return o @ p["wo"]
+
+
+def local_attention(p, x, n_heads, n_kv, head_dim, positions, theta,
+                    window: int):
+    """Block-local causal attention, exact for lookback ``window``.
+
+    Sequence is tiled into blocks of `window`; each block attends to itself
+    and the previous block with a per-position causal+window mask.  Memory
+    is O(S·2w) instead of O(S²)."""
+    b, s, d = x.shape
+    w = min(window, s)
+    assert s % w == 0, "local attention needs seq divisible by window"
+    nb = s // w
+    q, k, v = _project_qkv(p, x, n_heads, n_kv, head_dim, positions, theta)
+    hkv = n_kv
+    g = n_heads // n_kv
+    scale = head_dim ** -0.5
+    qb = (q * scale).reshape(b, nb, w, hkv, g, head_dim)
+    kb = k.reshape(b, nb, w, hkv, head_dim)
+    vb = v.reshape(b, nb, w, hkv, head_dim)
+    # keys for block i: [block i-1 ++ block i]  (block 0 pads with zeros)
+    kprev = jnp.pad(kb[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))
+    vprev = jnp.pad(vb[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))
+    k2 = jnp.concatenate([kprev, kb], axis=2)          # (B,nb,2w,Hkv,Dh)
+    v2 = jnp.concatenate([vprev, vb], axis=2)
+    scores = jnp.einsum("bnshgd,bnthd->bnhgst", qb, k2,
+                        preferred_element_type=jnp.float32)
+    rows = jnp.arange(w)[:, None]                       # in-block q pos
+    cols = jnp.arange(2 * w)[None, :] - w               # key offset
+    mask = (cols <= rows) & (cols > rows - w)           # causal, window w
+    first = jnp.arange(nb)[:, None, None] == 0
+    mask_b = mask[None, :, :] & (~first | (cols[None] >= 0))
+    scores = jnp.where(mask_b[None, :, None, None, :, :], scores, NEG)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bnhgst,bnthd->bnshgd", probs, v2)
+    o = o.reshape(b, s, n_heads * head_dim)
+    return o @ p["wo"]
+
+
+def cross_attention(p, x, kv_feats, n_heads, n_kv, head_dim):
+    """Whisper decoder cross-attention (no RoPE, no mask); q-chunked for
+    long decoder sequences like causal_attention."""
+    b, s, d = x.shape
+    t = kv_feats.shape[1]
+    q = (x @ p["wq"]).reshape(b, s, n_heads, head_dim)
+    k = (kv_feats @ p["wk"]).reshape(b, t, n_kv, head_dim)
+    v = (kv_feats @ p["wv"]).reshape(b, t, n_kv, head_dim)
+
+    def block(qc):
+        scores = _gqa_scores(qc, k, head_dim ** -0.5)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        return _gqa_out(probs, v, b, qc.shape[1], n_heads, head_dim)
+
+    if s <= CHUNK_Q_ABOVE:
+        o = block(q)
+    else:
+        nc = N_Q_CHUNKS
+        qlen = s // nc
+        o = jnp.concatenate(
+            [block(q[:, i * qlen:(i + 1) * qlen]) for i in range(nc)],
+            axis=1)
+    return o @ p["wo"]
+
+
+def decode_cross_attention(p, x, cross_k, cross_v, n_heads, n_kv,
+                           head_dim):
+    """Decoder cross-attention against precomputed encoder K/V
+    (cross_k/v (B, T, Hkv, Dh), computed once per request at prefill)."""
+    b = x.shape[0]
+    q = (x @ p["wq"]).reshape(b, 1, n_heads, head_dim)
+    scores = _gqa_scores(q, cross_k, head_dim ** -0.5)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o = _gqa_out(probs, cross_v, b, 1, n_heads, head_dim)
+    return o @ p["wo"]
+
+
+def cross_kv(p, kv_feats, n_kv, head_dim):
+    """Precompute encoder K/V for decode."""
+    b, t, _ = kv_feats.shape
+    k = (kv_feats @ p["wk"]).reshape(b, t, n_kv, head_dim)
+    v = (kv_feats @ p["wv"]).reshape(b, t, n_kv, head_dim)
+    return k, v
+
+
+def bidir_attention(p, x, n_heads, n_kv, head_dim):
+    """Encoder self-attention (Whisper encoder): full bidirectional."""
+    b, s, d = x.shape
+    q = (x @ p["wq"]).reshape(b, s, n_heads, head_dim)
+    k = (x @ p["wk"]).reshape(b, s, n_kv, head_dim)
+    v = (x @ p["wv"]).reshape(b, s, n_kv, head_dim)
+    scores = _gqa_scores(q, k, head_dim ** -0.5)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o = _gqa_out(probs, v, b, s, n_heads, head_dim)
+    return o @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# decode (single new token against a cache)
+# ---------------------------------------------------------------------------
+
+def _quantize_kv(kv):
+    """kv (B, 1, H, Dh) -> (int8 codes, (B, 1, H) f32 scale)."""
+    scale = jnp.max(jnp.abs(kv.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(kv.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decode_attention(p, x, cache_k, cache_v, pos, n_heads, n_kv, head_dim,
+                     theta, window: int = 0, use_rope: bool = True,
+                     softcap: float = 0.0, k_scale=None, v_scale=None):
+    """x (B, 1, D); cache_k/v (B, T, Hkv, Dh) with valid [0, pos);
+    returns (out (B,1,D), new_k, new_v[, new_k_scale, new_v_scale]).
+
+    ``window`` > 0 -> ring-buffer cache of size T=window (local attention).
+    ``k_scale``/``v_scale`` (B, T, Hkv) -> the cache is int8-quantized
+    per (token, head); dequantization fuses into the attention reads, so
+    cache HBM bytes halve vs bf16 (§Perf decode lever).
+    """
+    b, _, d = x.shape
+    t = cache_k.shape[1]
+    quant = k_scale is not None
+    q = (x @ p["wq"]).reshape(b, 1, n_heads, head_dim)
+    k = (x @ p["wk"]).reshape(b, 1, n_kv, head_dim)
+    v = (x @ p["wv"]).reshape(b, 1, n_kv, head_dim)
+    if "bq" in p:
+        q = q + p["bq"].reshape(1, 1, n_heads, head_dim)
+        k = k + p["bk"].reshape(1, 1, n_kv, head_dim)
+        v = v + p["bv"].reshape(1, 1, n_kv, head_dim)
+    if use_rope:
+        posv = jnp.full((b, 1), pos, jnp.int32)
+        q = rope(q, posv, theta)
+        k = rope(k, posv, theta)
+    slot = pos % t if window else pos
+    if quant:
+        k8, ks = _quantize_kv(k)
+        v8, vs = _quantize_kv(v)
+        cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k8, slot, 1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v8, slot, 1)
+        k_scale = jax.lax.dynamic_update_slice_in_dim(k_scale, ks, slot, 1)
+        v_scale = jax.lax.dynamic_update_slice_in_dim(v_scale, vs, slot, 1)
+        kf = (cache_k.astype(x.dtype)
+              * k_scale[..., None].astype(x.dtype))
+        vf = (cache_v.astype(x.dtype)
+              * v_scale[..., None].astype(x.dtype))
+    else:
+        cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, slot, 1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, slot, 1)
+        kf, vf = cache_k, cache_v
+    scores = _gqa_scores(q, kf, head_dim ** -0.5)       # (B,Hkv,G,1,T)
+    if softcap > 0:
+        scores = jnp.tanh(scores / softcap) * softcap
+    idx = jnp.arange(t)
+    valid = (idx <= slot) | (jnp.full_like(idx, bool(window))
+                             .astype(bool) & (pos >= t))
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o = _gqa_out(probs, vf, b, 1, n_heads, head_dim)
+    if quant:
+        return o @ p["wo"], cache_k, cache_v, k_scale, v_scale
+    return o @ p["wo"], cache_k, cache_v

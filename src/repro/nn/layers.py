@@ -1,0 +1,133 @@
+"""Pure-JAX NN primitives (no flax): norms, RoPE, gated MLPs, embedding.
+
+Params are plain nested dicts of jnp arrays; init functions are pure and
+can be shape-evaluated (jax.eval_shape) so the 100B+ configs never
+materialize on the dry-run host.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def he(key, shape, dtype, fan_in=None):
+    fan_in = fan_in or shape[0]
+    return (jax.random.normal(key, shape, jnp.float32)
+            * (2.0 / fan_in) ** 0.5).astype(dtype)
+
+
+def lecun(key, shape, dtype, fan_in=None):
+    fan_in = fan_in or shape[0]
+    return (jax.random.normal(key, shape, jnp.float32)
+            * (1.0 / fan_in) ** 0.5).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    """std = 1/sqrt(d): keeps tied-head logits O(1); embed_scale archs
+    (gemma family) multiply inputs back up by sqrt(d)."""
+    d = shape[-1]
+    return (jax.random.normal(key, shape, jnp.float32)
+            * d ** -0.5).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray | None,
+            eps: float = 1e-6) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * (1.0 + scale.astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+def np_layernorm(x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """Non-parametric LayerNorm (OLMo): no learned scale/bias."""
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def layernorm(x, scale, bias, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(kind: str, x, p):
+    if kind == "rms":
+        return rmsnorm(x, p["scale"])
+    if kind == "np_ln":
+        return np_layernorm(x)
+    if kind == "ln":
+        return layernorm(x, p["scale"], p["bias"])
+    raise ValueError(kind)
+
+
+def norm_params(kind: str, d: int, dtype) -> dict:
+    if kind == "rms":
+        return {"scale": jnp.zeros((d,), dtype)}
+    if kind == "np_ln":
+        return {}
+    if kind == "ln":
+        return {"scale": jnp.ones((d,), dtype),
+                "bias": jnp.zeros((d,), dtype)}
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray,
+         theta: float = 10000.0) -> jnp.ndarray:
+    """x (..., S, H, Dh), positions (..., S) -> rotated x."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                          # (...,S,1,half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# gated MLP
+# ---------------------------------------------------------------------------
+
+def mlp_params(key, d: int, f: int, act: str, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w_out": lecun(k2, (f, d), dtype)}
+    if act in ("swiglu", "geglu"):
+        p["w_gate"] = lecun(k1, (d, f), dtype)
+        p["w_in"] = lecun(k3, (d, f), dtype)
+    else:
+        p["w_in"] = lecun(k1, (d, f), dtype)
+    return p
+
+
+def mlp_apply(p: dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    if act == "swiglu":
+        g = jax.nn.silu(x @ p["w_gate"])
+        return ((g * (x @ p["w_in"])) @ p["w_out"])
+    if act == "geglu":
+        g = jax.nn.gelu(x @ p["w_gate"], approximate=True)
+        return ((g * (x @ p["w_in"])) @ p["w_out"])
+    if act == "gelu":
+        return jax.nn.gelu(x @ p["w_in"], approximate=True) @ p["w_out"]
+    raise ValueError(act)
+
+
+def mlp_flops(d: int, f: int, act: str) -> int:
+    n_mat = 3 if act in ("swiglu", "geglu") else 2
+    return 2 * n_mat * d * f

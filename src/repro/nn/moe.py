@@ -1,0 +1,116 @@
+"""Mixture-of-Experts: top-k routing, capacity-bounded scatter dispatch.
+
+Dispatch schemes (selectable; see DESIGN.md §5):
+  * ``scatter`` (default) — tokens are scatter-added into per-expert
+    capacity buffers (E, C, D) and gathered back with gate weights.
+    O(T·D) data movement, no dispatch matmul.  Under GSPMD with the expert
+    dim sharded over `model` (EP) the scatter lowers to the expected
+    all-to-all.  This is the modern TPU MoE (MaxText-style); the classic
+    GShard one-hot *einsum* dispatch costs E·C·T·D MXU flops — 100× the
+    expert FFN itself at E=128 — and is therefore not used.
+  * ``dense`` — every expert computes every token, mask-combined.  The
+    routing oracle; used by tiny smoke configs and tests.
+
+Aux: load-balance loss (Switch-style: E · Σ_e f_e · p_e).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+from .layers import lecun, mlp_apply, mlp_params
+
+
+def moe_params(key, d: int, f: int, n_experts: int, act: str, dtype,
+               shared: bool = False) -> dict:
+    kr, kg, ki, ko, ks = jax.random.split(key, 5)
+    p = {
+        "router": lecun(kr, (d, n_experts), dtype),
+        "w_in": (jax.random.normal(ki, (n_experts, d, f), jnp.float32)
+                 * (1.0 / d) ** 0.5).astype(dtype),
+        "w_out": (jax.random.normal(ko, (n_experts, f, d), jnp.float32)
+                  * (1.0 / f) ** 0.5).astype(dtype),
+    }
+    if act in ("swiglu", "geglu"):
+        p["w_gate"] = (jax.random.normal(kg, (n_experts, d, f), jnp.float32)
+                       * (1.0 / d) ** 0.5).astype(dtype)
+    if shared:
+        p["shared"] = mlp_params(ks, d, f, act, dtype)
+    return p
+
+
+def _expert_ffn(p, x, act):
+    """x (E, C, D) -> (E, C, D), per-expert gated FFN."""
+    if "w_gate" in p:
+        pre = jnp.einsum("ecd,edf->ecf", x, p["w_gate"])
+        g = jax.nn.silu(pre) if act == "swiglu" else \
+            jax.nn.gelu(pre, approximate=True)
+        h = g * jnp.einsum("ecd,edf->ecf", x, p["w_in"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", x, p["w_in"]),
+                        approximate=True)
+    return jnp.einsum("ecf,efd->ecd", h, p["w_out"])
+
+
+def _route(p, xt, n_experts, top_k):
+    logits = (xt @ p["router"]).astype(jnp.float32)        # (T, E)
+    gates = jax.nn.softmax(logits, axis=-1)
+    gate_k, idx_k = jax.lax.top_k(gates, top_k)            # (T, k)
+    gate_k = gate_k / jnp.maximum(gate_k.sum(-1, keepdims=True), 1e-9)
+    # Switch aux loss: fraction routed vs. mean gate, per expert
+    f_e = jnp.mean(jax.nn.one_hot(idx_k[:, 0], n_experts), axis=0)
+    p_e = jnp.mean(gates, axis=0)
+    aux = n_experts * jnp.sum(f_e * p_e)
+    return gate_k, idx_k, aux
+
+
+def moe_apply(p, x, n_experts: int, top_k: int, act: str,
+              capacity_factor: float = 1.25, scheme: str = "scatter",
+              shard: str = "ep"):
+    """x (B, S, D) -> (y (B, S, D), aux loss scalar)."""
+    if scheme == "dense":
+        return _moe_dense(p, x, n_experts, top_k, act)
+    b, s, d = x.shape
+    n_tok = b * s
+    xt = x.reshape(n_tok, d)
+    gate_k, idx_k, aux = _route(p, xt, n_experts, top_k)
+
+    cap = max(int(n_tok * top_k / n_experts * capacity_factor), 4)
+    # rank of each (token, k) slot within its expert queue (first-come)
+    onehot = jax.nn.one_hot(idx_k.reshape(-1), n_experts, dtype=jnp.int32)
+    pos = (jnp.cumsum(onehot, axis=0) - 1)                 # (T*k, E)
+    pos = jnp.take_along_axis(pos, idx_k.reshape(-1, 1), axis=1
+                              ).reshape(n_tok, top_k)      # (T, k)
+    keep = pos < cap
+    slot = jnp.where(keep, pos, cap)                       # cap = drop row
+
+    # scatter-dispatch into (E, C+1, D); the +1 row absorbs drops
+    buf = jnp.zeros((n_experts, cap + 1, d), x.dtype)
+    tok_rep = jnp.broadcast_to(xt[:, None, :], (n_tok, top_k, d))
+    buf = buf.at[idx_k, slot].add(tok_rep, mode="drop")
+    # EP: expert buffers live on their expert's shard (scatter -> a2a)
+    buf = constrain(buf, "tp" if shard == "ep" else None, None, None)
+    ye = _expert_ffn(p, buf[:, :cap], act)                 # (E, C, D)
+    ye = jnp.pad(ye, ((0, 0), (0, 1), (0, 0)))             # drop row = 0
+    out = ye[idx_k, slot]                                  # (T, k, D)
+    yt = jnp.sum(out * gate_k[..., None].astype(x.dtype), axis=1)
+    y = yt.reshape(b, s, d)
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], x, act)
+    return y, aux
+
+
+def _moe_dense(p, x, n_experts, top_k, act):
+    """Oracle: every expert computes every token; combine with gates."""
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    gate_k, idx_k, aux = _route(p, xt, n_experts, top_k)
+    w = jnp.zeros((xt.shape[0], n_experts), jnp.float32).at[
+        jnp.arange(xt.shape[0])[:, None], idx_k].set(gate_k)  # (T, E)
+    ye = _expert_ffn(p, jnp.broadcast_to(xt, (n_experts,) + xt.shape), act)
+    yt = jnp.einsum("te,etd->td", w.astype(xt.dtype), ye)
+    y = yt.reshape(b, s, d)
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], x, act)
+    return y, aux

@@ -1,0 +1,83 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence (diagonal, gated):
+    r_t = sigmoid(W_r x_t)            (recurrence gate)
+    i_t = sigmoid(W_i x_t)            (input gate)
+    a_t = exp(-c · softplus(Λ) · r_t) (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Training uses an associative scan (log-depth, TPU-friendly); decode is the
+O(1) step.  The full Griffin recurrent block is: linear x/gate branches,
+causal conv(4) on the x branch, RG-LRU, gated merge, output projection.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import lecun
+
+C_FACTOR = 8.0
+
+
+def rglru_params(key, d_model: int, d_rnn: int, d_conv: int, dtype) -> dict:
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    return {
+        "w_x": lecun(k1, (d_model, d_rnn), dtype),
+        "w_gate": lecun(k2, (d_model, d_rnn), dtype),
+        "conv_w": (jax.random.normal(k3, (d_conv, d_rnn), jnp.float32)
+                   * 0.1).astype(dtype),
+        "w_r": lecun(k4, (d_rnn, d_rnn), dtype),
+        "w_i": lecun(k5, (d_rnn, d_rnn), dtype),
+        # Λ init so that a ∈ (0.9, 0.999) at r=1 (Griffin appendix)
+        "lam": jnp.log(jnp.expm1(
+            -jnp.log(jnp.linspace(0.9, 0.999, d_rnn)) / C_FACTOR)),
+        "w_out": lecun(k6, (d_rnn, d_model), dtype),
+    }
+
+
+def _gates(p, x):
+    r = jax.nn.sigmoid((x @ p["w_r"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((x @ p["w_i"]).astype(jnp.float32))
+    log_a = -C_FACTOR * jax.nn.softplus(p["lam"]) * r       # (..., D)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9))
+    return a, beta * i
+
+
+def _causal_conv(x, w):
+    wlen = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (wlen - 1, 0), (0, 0)))
+    return sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+               for i in range(wlen))
+
+
+def rglru_apply(p, u):
+    """u (B, S, D) -> (B, S, D).  Griffin recurrent block, parallel scan."""
+    gate = jax.nn.gelu(u @ p["w_gate"], approximate=True)
+    x = _causal_conv(u @ p["w_x"], p["conv_w"])
+    a, bx = _gates(p, x)
+    bx = bx * x.astype(jnp.float32)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    y = (h.astype(u.dtype) * gate) @ p["w_out"]
+    return y
+
+
+def rglru_decode(p, u, state, conv_state):
+    """u (B, 1, D); state (B, D_rnn) f32; conv_state (B, W-1, D_rnn)."""
+    gate = jax.nn.gelu(u[:, 0] @ p["w_gate"], approximate=True)
+    xt = u[:, 0] @ p["w_x"]
+    w = p["conv_w"]
+    hist = jnp.concatenate([conv_state, xt[:, None, :]], axis=1)
+    x = jnp.sum(hist * w[None], axis=1)
+    new_conv_state = hist[:, 1:]
+    a, bi = _gates(p, x)
+    state = a * state + bi * x.astype(jnp.float32)
+    y = (state.astype(u.dtype) * gate) @ p["w_out"]
+    return y[:, None, :], state, new_conv_state

@@ -1,0 +1,155 @@
+"""Mamba-2 SSD (state-space duality) block [arXiv:2405.21060].
+
+Chunked SSD: within a chunk the recurrence is computed as a masked
+attention-like quadratic form (MXU); across chunks a short ``lax.scan``
+carries the (n_heads, headdim, d_state) states.  Single-token decode is the
+O(1) recurrence.  n_groups = 1 (B/C shared across heads, the released-model
+default).
+
+Layer structure (released mamba2): in_proj -> [z | x | B | C | dt],
+causal depthwise conv on (x,B,C), SSD, gated RMSNorm(z), out_proj.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+from .layers import lecun, rmsnorm
+
+
+def ssd_params(key, d_model: int, d_state: int, d_conv: int,
+               expand: int, headdim: int, dtype) -> dict:
+    d_inner = expand * d_model
+    n_heads = d_inner // headdim
+    d_proj = 2 * d_inner + 2 * d_state + n_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "in_proj": lecun(k1, (d_model, d_proj), dtype),
+        "conv_w": (jax.random.normal(k2, (d_conv, d_inner + 2 * d_state),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm_scale": jnp.zeros((d_inner,), dtype),
+        "out_proj": lecun(k4, (d_inner, d_model), dtype),
+    }
+
+
+def _split_proj(proj, d_inner, d_state, n_heads):
+    z = proj[..., :d_inner]
+    x = proj[..., d_inner:2 * d_inner]
+    B = proj[..., 2 * d_inner:2 * d_inner + d_state]
+    C = proj[..., 2 * d_inner + d_state:2 * d_inner + 2 * d_state]
+    dt = proj[..., 2 * d_inner + 2 * d_state:]
+    return z, x, B, C, dt
+
+
+def _causal_conv(x, w):
+    """x (B, S, D), w (W, D) depthwise causal conv + silu."""
+    wlen = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (wlen - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(wlen))
+    return jax.nn.silu(out)
+
+
+def ssd_apply(p, u, d_state: int, expand: int, headdim: int,
+              chunk: int = 128):
+    """u (B, S, D) -> (B, S, D).  Chunked SSD scan."""
+    bsz, s, d_model = u.shape
+    d_inner = expand * d_model
+    n_heads = d_inner // headdim
+    proj = u @ p["in_proj"]
+    z, x, B, C, dt = _split_proj(proj, d_inner, d_state, n_heads)
+    xBC = _causal_conv(jnp.concatenate([x, B, C], -1), p["conv_w"])
+    x = xBC[..., :d_inner]
+    B = xBC[..., d_inner:d_inner + d_state]
+    C = xBC[..., d_inner + d_state:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"])                    # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                # (H,)
+
+    h = n_heads
+    xh = x.reshape(bsz, s, h, headdim).astype(jnp.float32)
+    assert s % chunk == 0 or s < chunk, "seq must divide chunk"
+    q = min(chunk, s)
+    nc = s // q
+    # head-parallel over the model axis: the (nc, q, q, H) decay tensor
+    # and the chunk states shard H-fold (80 heads / 16 = 5 per device)
+    xc = constrain(xh.reshape(bsz, nc, q, h, headdim),
+                   "dp", None, None, "tp", None)
+    Bc = B.reshape(bsz, nc, q, d_state).astype(jnp.float32)
+    Cc = C.reshape(bsz, nc, q, d_state).astype(jnp.float32)
+    dtc = constrain(dt.reshape(bsz, nc, q, h), "dp", None, None, "tp")
+    dA = dtc * A[None, None, None, :]                       # (B,nc,q,H)
+    cum = jnp.cumsum(dA, axis=2)                            # in-chunk cumsum
+
+    # --- intra-chunk (quadratic, attention-like, MXU) ---------------------
+    # L[i,j] = exp(cum_i - cum_j) for i >= j
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]     # (B,nc,q,q,H)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(seg), 0.0)
+    CB = jnp.einsum("bnis,bnjs->bnij", Cc, Bc)              # (B,nc,q,q)
+    y_in = jnp.einsum("bnij,bnijh,bnjh,bnjhp->bnihp",
+                      CB, L, dtc, xc)                       # (B,nc,q,H,P)
+
+    # --- chunk states + inter-chunk scan -----------------------------------
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)         # (B,nc,q,H)
+    states = jnp.einsum("bnjs,bnjh,bnjh,bnjhp->bnhps",
+                        Bc, decay_to_end, dtc, xc)          # (B,nc,H,P,S)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                 # (B,nc,H)
+
+    def scan_fn(carry, inp):
+        st_prev = carry                                     # (B,H,P,S)
+        st_c, dec = inp
+        st = st_c + dec[..., None, None] * st_prev
+        return st, st_prev
+
+    init = jnp.zeros((bsz, h, headdim, d_state), jnp.float32)
+    _, st_before = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    st_before = jnp.moveaxis(st_before, 0, 1)               # (B,nc,H,P,S)
+
+    # contribution of carried-in state to each position
+    y_out = jnp.einsum("bnis,bnih,bnhps->bnihp",
+                       Cc, jnp.exp(cum), st_before)
+    y = (y_in + y_out).reshape(bsz, s, h, headdim)
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(bsz, s, d_inner).astype(u.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_scale"])        # gated norm
+    return y @ p["out_proj"]
+
+
+def ssd_decode(p, u, state, conv_state, d_state: int, expand: int,
+               headdim: int):
+    """Single-token decode.  u (B, 1, D); state (B, H, P, S);
+    conv_state (B, W-1, d_inner + 2*d_state).  O(1) per token."""
+    bsz, _, d_model = u.shape
+    d_inner = expand * d_model
+    n_heads = d_inner // headdim
+    proj = u @ p["in_proj"]
+    z, x, B, C, dt = _split_proj(proj[:, 0], d_inner, d_state, n_heads)
+    xBC = jnp.concatenate([x, B, C], -1)                    # (B, D')
+    w = p["conv_w"]
+    wlen = w.shape[0]
+    hist = jnp.concatenate([conv_state, xBC[:, None, :]], axis=1)
+    conv_out = jax.nn.silu(jnp.sum(hist * w[None], axis=1))
+    new_conv_state = hist[:, 1:]
+    x = conv_out[..., :d_inner]
+    B = conv_out[..., d_inner:d_inner + d_state].astype(jnp.float32)
+    C = conv_out[..., d_inner + d_state:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A[None, :])                           # (B,H)
+    xh = x.reshape(bsz, n_heads, headdim).astype(jnp.float32)
+    dBx = jnp.einsum("bh,bs,bhp->bhps", dt, B, xh)
+    state = state * dA[..., None, None] + dBx
+    y = jnp.einsum("bs,bhps->bhp", C, state)
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(bsz, d_inner).astype(u.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_scale"])
+    return (y @ p["out_proj"])[:, None, :], state, new_conv_state

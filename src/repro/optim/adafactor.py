@@ -1,0 +1,63 @@
+"""Adafactor (factored second moment) — the low-memory optimizer option
+for the 314B/400B configs: O(n+m) state per (n,m) matrix instead of
+O(n·m)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdafactorConfig:
+    lr: float = 1e-3
+    decay: float = 0.8
+    eps: float = 1e-30
+    clip: float = 1.0
+
+
+def init_state(cfg: AdafactorConfig, params):
+    def st(p):
+        if p.ndim >= 2:
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                    jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"f": jax.tree.map(st, params,
+                              is_leaf=lambda x: hasattr(x, "shape")),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def apply_updates(cfg: AdafactorConfig, params, grads, state,
+                  lr_scale=1.0):
+    step = state["step"] + 1
+    beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-cfg.decay)
+
+    def upd(p, g, s):
+        g32 = g.astype(jnp.float32)
+        g2 = g32 * g32 + cfg.eps
+        if p.ndim >= 2:
+            vr = beta * s["vr"] + (1 - beta) * g2.mean(-1)
+            vc = beta * s["vc"] + (1 - beta) * g2.mean(-2)
+            denom = (vr[..., None] * vc[..., None, :]
+                     / jnp.maximum(vr.mean(-1, keepdims=True)[..., None],
+                                   cfg.eps))
+            u = g32 / jnp.sqrt(denom + cfg.eps)
+            ns = {"vr": vr, "vc": vc}
+        else:
+            v = beta * s["v"] + (1 - beta) * g2
+            u = g32 / jnp.sqrt(v + cfg.eps)
+            ns = {"v": v}
+        rms = jnp.sqrt(jnp.mean(u * u) + cfg.eps)
+        u = u / jnp.maximum(1.0, rms / cfg.clip)
+        newp = (p.astype(jnp.float32) - cfg.lr * lr_scale * u
+                ).astype(p.dtype)
+        return newp, ns
+
+    leaves_p, tree = jax.tree.flatten(params)
+    leaves_g = jax.tree.leaves(grads)
+    leaves_s = tree.flatten_up_to(state["f"])
+    out = [upd(p, g, s) for p, g, s in zip(leaves_p, leaves_g, leaves_s)]
+    return (tree.unflatten([o[0] for o in out]),
+            {"f": tree.unflatten([o[1] for o in out]), "step": step})

@@ -1,0 +1,13 @@
+"""LR schedules (pure functions of step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, warmup: int = 1000, total: int = 100000,
+                  floor: float = 0.1):
+    s = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(s / max(warmup, 1), 1.0)
+    prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return warm * cos

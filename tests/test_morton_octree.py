@@ -1,0 +1,74 @@
+"""Morton codes + linear octree: unit and property tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import morton, octree
+
+
+@given(st.lists(st.tuples(st.integers(0, 1023), st.integers(0, 1023),
+                          st.integers(0, 1023)),
+                min_size=1, max_size=64))
+@settings(max_examples=30, deadline=None)
+def test_morton_roundtrip(ivox):
+    arr = jnp.asarray(np.array(ivox, dtype=np.uint32))
+    codes = morton.encode(arr)
+    back = morton.decode(codes)
+    np.testing.assert_array_equal(np.asarray(back), np.array(ivox))
+
+
+def test_morton_locality_order():
+    # points in the same octant at level 1 share the leading 3 bits
+    pts = jnp.asarray([[0.1, 0.1, 0.1], [0.2, 0.2, 0.2],
+                       [0.9, 0.9, 0.9]])
+    codes = morton.morton_codes(pts, lo=jnp.zeros(3), hi=jnp.ones(3))
+    k = morton.node_key(codes, 1)
+    assert int(k[0]) == int(k[1]) != int(k[2])
+
+
+def test_np_jax_morton_match():
+    rng = np.random.default_rng(0)
+    pts = rng.uniform(-1, 1, (256, 3)).astype(np.float32)
+    a = np.asarray(morton.morton_codes(jnp.asarray(pts)))
+    b = morton.np_morton_codes(pts)
+    # float32 vs float64 quantization can differ at voxel boundaries
+    assert (a == b).mean() > 0.98
+
+
+def test_octree_node_range_contains_points():
+    rng = np.random.default_rng(1)
+    pts = jnp.asarray(rng.uniform(-1, 1, (512, 3)).astype(np.float32))
+    tree = octree.build(pts)
+    level = 2
+    keys = tree.node_keys(level)
+    k0 = keys[0]
+    start, end = tree.node_range(k0, level)
+    inside = keys[int(start):int(end)]
+    assert bool((inside == k0).all())
+    # points outside the range have different keys
+    if int(end) < 512:
+        assert int(keys[int(end)]) != int(k0)
+
+
+def test_octree_contains():
+    rng = np.random.default_rng(2)
+    pts = jnp.asarray(rng.uniform(-1, 1, (128, 3)).astype(np.float32))
+    tree = octree.build(pts)
+    hit, idx = tree.contains(tree.codes[10:20])
+    assert bool(hit.all())
+    # a code guaranteed absent
+    absent = jnp.asarray([0x3FFFFFFF], jnp.uint32)
+    hit2, idx2 = tree.contains(absent)
+    if not bool((tree.codes == absent[0]).any()):
+        assert not bool(hit2[0])
+        assert int(idx2[0]) == -1
+
+
+def test_adjacent_node_keys_are_neighbors():
+    keys = jnp.asarray([0], jnp.uint32)  # corner voxel at level 2
+    nk = octree.adjacent_node_keys(keys, 2)
+    xyz = morton.decode(nk[0])
+    # all neighbors within +-1 of (0,0,0), clipped to >= 0
+    assert int(xyz.max()) <= 1
+    assert nk.shape == (1, 27)

@@ -1,0 +1,86 @@
+"""L-PCN FC vs traditional FC: exactness (block_end + linear comp, paper
+§VI-E) and bounded approximation (per_layer)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import LPCNConfig, init_mlp, lpcn_block
+from repro.core.workload import analyze
+from repro.data.synthetic import make_cloud
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cloud(n=512, seed=0):
+    rng = np.random.default_rng(seed)
+    xyz = jnp.asarray(make_cloud(rng, n))
+    return xyz, xyz
+
+
+@pytest.mark.parametrize("kind,dims,sampler,k", [
+    ("sa", [6, 32, 64], "fps", 16),
+    ("edge", [6, 48], "all", 12),
+])
+def test_exact_when_block_end_linear(kind, dims, sampler, k):
+    xyz, feats = _cloud()
+    n_centers = 256 if sampler == "fps" else xyz.shape[0]
+    mlp = init_mlp(KEY, dims, activation="block_end")
+    c_l = LPCNConfig(n_centers=n_centers, k=k, sampler=sampler,
+                     block_kind=kind, mode="lpcn", compensation="linear")
+    c_t = LPCNConfig(n_centers=n_centers, k=k, sampler=sampler,
+                     block_kind=kind, mode="traditional")
+    o_l = lpcn_block(c_l, mlp, xyz, feats, KEY)
+    o_t = lpcn_block(c_t, mlp, xyz, feats, KEY)
+    np.testing.assert_allclose(np.asarray(o_l.features),
+                               np.asarray(o_t.features),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_approx_bounded_when_per_layer():
+    xyz, feats = _cloud(seed=1)
+    mlp = init_mlp(KEY, [6, 32, 64], activation="per_layer")
+    c_l = LPCNConfig(n_centers=256, k=16, mode="lpcn",
+                     compensation="linear")
+    c_t = LPCNConfig(n_centers=256, k=16, mode="traditional")
+    o_l = lpcn_block(c_l, mlp, xyz, feats, KEY)
+    o_t = lpcn_block(c_t, mlp, xyz, feats, KEY)
+    ref = np.abs(np.asarray(o_t.features)).mean()
+    err = np.abs(np.asarray(o_l.features)
+                 - np.asarray(o_t.features)).mean()
+    assert err / ref < 0.5   # approximation, but not garbage
+
+
+def test_mlp_compensation_mode_runs():
+    xyz, feats = _cloud(seed=2)
+    mlp = init_mlp(KEY, [6, 32, 64], activation="per_layer")
+    c_m = LPCNConfig(n_centers=128, k=16, mode="lpcn",
+                     compensation="mlp")
+    o = lpcn_block(c_m, mlp, xyz, feats, KEY)
+    assert o.features.shape == (128, 64)
+    assert bool(jnp.isfinite(o.features).all())
+
+
+def test_workload_report_bounds():
+    xyz, feats = _cloud(seed=3)
+    mlp = init_mlp(KEY, [6, 32, 64], activation="block_end")
+    cfg = LPCNConfig(n_centers=256, k=16, mode="lpcn")
+    o = lpcn_block(cfg, mlp, xyz, feats, KEY, with_report=True)
+    r = o.report.concrete()
+    assert 0 < r.lpcn_fetches <= r.baseline_fetches
+    # delta-comp overhead adds at most one eval per subset
+    assert r.lpcn_mlp_evals <= r.baseline_mlp_evals + r.n_subsets
+    assert 0.0 <= r.fetch_saving < 1.0
+
+
+def test_mesorasi_exact_for_linear_mlp():
+    from repro.core.pipeline import data_structuring, fc_traditional
+    from repro.models.baselines import mesorasi_fc
+    xyz, feats = _cloud(seed=4)
+    mlp = init_mlp(KEY, [6, 64], activation="block_end")
+    cfg = LPCNConfig(n_centers=128, k=16)
+    cidx, nbr = data_structuring(cfg, xyz, KEY)
+    t = fc_traditional(mlp, xyz, feats, nbr, xyz[cidx], feats[cidx], "sa")
+    m = mesorasi_fc(mlp, xyz, feats, nbr, xyz[cidx], feats[cidx], "sa")
+    np.testing.assert_allclose(np.asarray(t), np.asarray(m),
+                               rtol=1e-4, atol=1e-4)

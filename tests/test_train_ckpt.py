@@ -1,0 +1,55 @@
+"""Fault-tolerance integration: the training driver saves atomically and
+resumes bit-exactly (same losses as an uninterrupted run)."""
+import os
+import shutil
+
+import pytest
+
+from repro.launch import train as train_mod
+
+
+@pytest.fixture()
+def ckpt_dir(tmp_path):
+    d = str(tmp_path / "ckpt")
+    yield d
+    shutil.rmtree(d, ignore_errors=True)
+
+
+def test_resume_bit_exact(ckpt_dir):
+    argv_base = ["--arch", "olmo-1b", "--reduced", "--batch", "2",
+                 "--seq", "32", "--ckpt-every", "2"]
+    # uninterrupted reference
+    ref = train_mod.main(argv_base + ["--steps", "6",
+                                      "--ckpt", ckpt_dir + "_ref"])
+    # interrupted at step 3, then resumed
+    part1 = train_mod.main(argv_base + ["--steps", "3",
+                                        "--ckpt", ckpt_dir])
+    part2 = train_mod.main(argv_base + ["--steps", "6",
+                                        "--ckpt", ckpt_dir])
+    assert len(part1) == 3
+    # resumed run starts at step 3 (2 ckpt-every -> saved at 2? final save
+    # at step 3 exists because steps==3 triggers the final save)
+    combined = part1 + part2
+    assert len(combined) == 6
+    for a, b in zip(ref, combined):
+        assert abs(a - b) < 1e-6, (ref, combined)
+
+
+def test_elastic_restore_reshard(tmp_path):
+    """Checkpoint written under one sharding restores under another
+    (device-count-independent layout)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.ckpt.manager import CheckpointManager
+    mgr = CheckpointManager(str(tmp_path))
+    params = {"w": jnp.asarray(np.arange(64, dtype=np.float32
+                                         ).reshape(8, 8))}
+    opt = {"m": {"w": jnp.zeros((8, 8))}}
+    mgr.save(1, params, opt, {"seed": 0, "step": 1})
+    # restore with explicit (trivial) shardings for the current devices
+    sh = jax.sharding.SingleDeviceSharding(jax.devices()[0])
+    shardings = {"params": {"w": sh}, "opt": {"m": {"w": sh}}}
+    step, p2, o2, _ = mgr.restore(params, opt, shardings=shardings)
+    np.testing.assert_array_equal(np.asarray(p2["w"]),
+                                  np.asarray(params["w"]))
