@@ -16,8 +16,10 @@ import time
 import numpy as np
 
 
-def _emit(rows, name, us, derived):
-    rows.append((name, us, derived))
+def _emit(rows, name, us, derived, **meta):
+    """meta (e.g. backend=..., batch=...) is recorded in the JSON output
+    alongside the CSV fields."""
+    rows.append((name, us, derived, meta))
     print(f"{name},{us:.1f},{derived}", flush=True)
 
 
@@ -161,7 +163,47 @@ def bench_sensitivity(rows, quick: bool):
                   f"speedup={s['speedup']:.2f}")
 
 
+# ---- engine: batched serving path (repro.engine), per FC backend -----------
+
+def bench_engine(rows, quick: bool):
+    """Wall-clock of the jitted batch-first engine on pointnet2_c:
+    compile once, then time steady-state batches per backend x mode."""
+    import jax
+    import jax.numpy as jnp
+    from functools import partial
+    from dataclasses import replace as _replace
+    from repro import engine
+    from repro.data.synthetic import make_cloud
+    from repro.models import MODEL_ZOO
+
+    _, spec = MODEL_ZOO["pointnet2_c"]
+    batch, n = (2, 256) if quick else (4, 1024)
+    if quick:
+        from repro.models.common import BlockSpec
+        spec = _replace(spec, blocks=(
+            BlockSpec(64, 16, (32, 64)), BlockSpec(16, 16, (64, 128))))
+    params = engine.init(jax.random.PRNGKey(0), spec)
+    rng = np.random.default_rng(0)
+    xyz = jnp.asarray(np.stack([make_cloud(rng, n) for _ in range(batch)]))
+    batch_in = engine.Batch.make(xyz, key=jax.random.PRNGKey(1))
+    for backend in ("reference", "pallas"):
+        for mode in ("traditional", "lpcn"):
+            f = jax.jit(partial(engine.apply, spec=spec, mode=mode,
+                                fc_backend=backend))
+            f(params, batch_in).block_until_ready()      # compile
+            reps = 2 if quick else 5
+            t0 = time.time()
+            for _ in range(reps):
+                out = f(params, batch_in)
+            out.block_until_ready()
+            us = (time.time() - t0) / reps * 1e6
+            _emit(rows, f"engine_{spec.name}_{mode}_{backend}", us,
+                  f"clouds_per_s={batch / (us / 1e6):.1f}",
+                  backend=backend, batch=batch, mode=mode, n_points=n)
+
+
 SECTIONS = {
+    "engine": bench_engine,
     "overlap": bench_overlap_study,
     "workload": bench_workload_reduction,
     "speedup": bench_speedup_baselines,
@@ -185,7 +227,8 @@ def main(argv=None) -> None:
             continue
         fn(rows, args.quick)
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
-    json.dump([{"name": n, "us": u, "derived": d} for n, u, d in rows],
+    json.dump([{"name": n, "us": u, "derived": d, **meta}
+               for n, u, d, meta in rows],
               open(args.out, "w"), indent=1)
 
 

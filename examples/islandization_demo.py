@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import build_schedule, islandize
+from repro.core import SAMPLERS, build_schedule, islandize
 from repro.core.pipeline import LPCNConfig, data_structuring
 from repro.data.synthetic import make_cloud
 
@@ -20,7 +20,11 @@ def main():
     rng = np.random.default_rng(3)
     xyz = jnp.asarray(make_cloud(rng, 512))
     key = jax.random.PRNGKey(0)
-    cfg = LPCNConfig(n_centers=128, k=16, island_size=16)
+    # samplers / neighbor methods are registry-resolved by name — swap
+    # any of them (or register your own via repro.engine.register_sampler)
+    print(f"registered samplers: {SAMPLERS.names()}")
+    cfg = LPCNConfig(n_centers=128, k=16, island_size=16,
+                     sampler="fps", neighbor="pointacc")
     cidx, nbr = data_structuring(cfg, xyz, key)
     centers = xyz[cidx]
 

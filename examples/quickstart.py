@@ -1,48 +1,79 @@
-"""Quickstart: one L-PCN building block, end to end.
+"""Quickstart: the batched engine API, end to end.
 
-Shows the paper's full story on one cloud: DS -> Octree-based
-Islandization -> Hub-based Scheduling -> islandized Feature Computation,
-with the workload report and the exactness check against the
-traditional path.
+Shows the paper's full story through ``repro.engine``: a padded batch of
+clouds runs DS -> Octree-based Islandization -> Hub-based Scheduling ->
+islandized Feature Computation -> logits in ONE jitted executable, with
+swappable FC backends ("reference" jnp oracle vs "pallas" TPU kernels)
+and the workload report + exactness check against the traditional path.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import sys
 sys.path.insert(0, "src")
 
+from functools import partial
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import LPCNConfig, init_mlp, lpcn_block
+from repro import engine
 from repro.data.synthetic import make_cloud
+
+# DGCNN(c)-style single block: activation at block end -> exact reuse
+SPEC = engine.PCNSpec(
+    name="dgcnn_quickstart",
+    blocks=(engine.BlockSpec(1024, 32, (64, 128), kind="edge",
+                             sampler="all"),),
+    head_dims=(64,),
+    n_classes=10,
+    activation="block_end",
+)
 
 
 def main():
     rng = np.random.default_rng(0)
-    xyz = jnp.asarray(make_cloud(rng, 1024))
+    xyz = jnp.asarray(np.stack([make_cloud(rng, 1024) for _ in range(4)]))
     key = jax.random.PRNGKey(0)
 
-    # DGCNN(c)-style block: activation at block end -> exact reuse
-    mlp = init_mlp(key, [3 + 3, 64, 128], activation="block_end")
-    cfg = LPCNConfig(n_centers=512, k=32, mode="lpcn",
-                     island_size=32, cache_capacity_x=2.0,
-                     compensation="linear")
+    params = engine.init(key, SPEC)                    # typed pytree
+    batch = engine.Batch.make(xyz, key=key)
+    isl_kw = dict(island_size=32, cache_capacity_x=2.0)
 
-    out = lpcn_block(cfg, mlp, xyz, xyz, key, with_report=True)
-    r = out.report.concrete()
-    print(f"islands used:        {r.n_islands_used}")
-    print(f"feature fetches:     {r.lpcn_fetches} / {r.baseline_fetches} "
-          f"(saving {r.fetch_saving:.1%})")
-    print(f"MLP point-evals:     {r.lpcn_mlp_evals} / "
-          f"{r.baseline_mlp_evals} (saving {r.compute_saving:.1%})")
+    # one compiled executable per (spec, mode, backend) — the serving path
+    run = {
+        ("traditional", "reference"): jax.jit(partial(
+            engine.apply, spec=SPEC, mode="traditional",
+            fc_backend="reference", isl_kw=isl_kw)),
+        ("lpcn", "pallas"): jax.jit(partial(
+            engine.apply, spec=SPEC, mode="lpcn", fc_backend="pallas",
+            isl_kw=isl_kw)),
+    }
+
+    # lpcn/reference logits + workload report (stacked over the batch)
+    logits, rep = engine.apply_with_reports(params, batch, spec=SPEC,
+                                            isl_kw=isl_kw)
+    print(f"batched logits: {tuple(logits.shape)}  (B clouds -> B logits)")
+    fetches = int(rep.lpcn_fetches.sum())
+    base = int(rep.baseline_fetches.sum())
+    evals = int(rep.lpcn_mlp_evals.sum())
+    base_e = int(rep.baseline_mlp_evals.sum())
+    print(f"feature fetches:     {fetches} / {base} "
+          f"(saving {1 - fetches / base:.1%})")
+    print(f"MLP point-evals:     {evals} / {base_e} "
+          f"(saving {1 - evals / base_e:.1%})")
 
     # exactness vs the traditional path (paper §VI-E, block-end case)
-    cfg_t = LPCNConfig(n_centers=512, k=32, mode="traditional")
-    ref = lpcn_block(cfg_t, mlp, xyz, xyz, key)
-    err = float(jnp.abs(out.features - ref.features).max())
+    ref = run["traditional", "reference"](params, batch)
+    err = float(jnp.abs(logits - ref).max())
     print(f"max |islandized - traditional| = {err:.2e}  (exact reuse)")
     assert err < 1e-3
+
+    # backend agreement: pallas kernels vs the jnp oracle
+    pal = run["lpcn", "pallas"](params, batch)
+    kerr = float(jnp.abs(logits - pal).max())
+    print(f"max |pallas - reference|       = {kerr:.2e}")
+    assert kerr < 1e-4
 
 
 if __name__ == "__main__":

@@ -9,6 +9,7 @@ import argparse
 import sys
 import time
 sys.path.insert(0, "src")
+sys.path.insert(0, ".")          # for `benchmarks` when run from the root
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Tier-1 verification + a ~30s engine smoke benchmark.
+#
+#   bash scripts/ci.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== engine smoke benchmark =="
+python -m benchmarks.run --quick --only engine --out results/engine_smoke.json
+python - <<'EOF'
+import json
+rows = json.load(open("results/engine_smoke.json"))
+assert rows, "engine smoke produced no rows"
+for r in rows:
+    assert "backend" in r and "batch" in r, r
+print(f"engine smoke ok: {len(rows)} rows "
+      f"(backends: {sorted({r['backend'] for r in rows})})")
+EOF

@@ -8,12 +8,18 @@ building block (pipeline.py).
 """
 from .islandize import Islands, islandize
 from .hub_schedule import Schedule, build_schedule
-from .pipeline import LPCNConfig, lpcn_block, fc_traditional, fc_lpcn
+from .pipeline import (FCBackend, LPCNConfig, lpcn_block, fc_traditional,
+                       fc_lpcn)
+from .registry import (FC_BACKENDS, NEIGHBORS, SAMPLERS, Registry,
+                       register_fc_backend, register_neighbor,
+                       register_sampler)
 from .workload import WorkloadReport, analyze, overlap_histogram
 from .mlp import MLP, init_mlp, apply_mlp
 
 __all__ = [
     "Islands", "islandize", "Schedule", "build_schedule", "LPCNConfig",
-    "lpcn_block", "fc_traditional", "fc_lpcn", "WorkloadReport", "analyze",
+    "lpcn_block", "fc_traditional", "fc_lpcn", "FCBackend", "Registry",
+    "SAMPLERS", "NEIGHBORS", "FC_BACKENDS", "register_sampler",
+    "register_neighbor", "register_fc_backend", "WorkloadReport", "analyze",
     "overlap_histogram", "MLP", "init_mlp", "apply_mlp",
 ]

@@ -22,19 +22,20 @@ default CPU path.
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
-from . import neighbor as nb
 from . import octree as oct
 from .delta_comp import compensation
 from .hub_schedule import Schedule, build_schedule
 from .islandize import Islands, islandize
 from .mlp import MLP, apply_mlp, post_pool_activation
-from .sampling import (farthest_point_sampling, morton_strided_sampling,
-                       random_sampling)
+from .registry import FC_BACKENDS, NEIGHBORS, SAMPLERS, get_fc_backend
 from .workload import WorkloadReport, analyze
+
+BIG = 3.4e38
 
 
 @dataclass(frozen=True)
@@ -42,8 +43,8 @@ class LPCNConfig:
     """Hyper-parameters of one building block (paper defaults)."""
     n_centers: int = 512
     k: int = 32
-    sampler: str = "fps"              # fps | random | morton | all
-    neighbor: str = "pointacc"        # pointacc|hgpcn|edgepc|crescent|ball
+    sampler: str = "fps"              # any registered sampler
+    neighbor: str = "pointacc"        # any registered neighbor method
     radius: float = 0.2               # ball query radius
     mode: str = "lpcn"                # traditional | lpcn
     block_kind: str = "sa"            # sa | edge
@@ -54,45 +55,44 @@ class LPCNConfig:
     octree_level: int = 4
     hub_select: str = "random"
     overflow_frac: float = 0.5        # compact overflow buffer / (M*K)
+    fc_backend: str = "reference"     # any registered FC backend
 
     @property
     def cache_capacity(self) -> int:
         return int(self.cache_capacity_x * self.k)
 
 
+@dataclass(frozen=True)
+class FCBackend:
+    """A Feature-Computation dataflow implementation (the paper's FCU).
+
+    ``dense`` is the traditional path — subset-normalize, MLP, max-pool —
+    returning (S, F_out) pooled pre-activation features.  ``reuse`` is the
+    Islandization Unit's pool-MLP + compensated reuse-gather returning
+    (H, M, F_out) per-subset pooled reuse partials, ``-BIG`` where a subset
+    has no cached position.  Both must be jit/vmap-safe; the "reference"
+    backend is pure jnp, the "pallas" backend (repro.engine.fc) routes the
+    same dataflows through the kernels in repro.kernels.
+
+    dense(mlp, kind, xyz, feats, nbr_idx, centers_xyz, center_feats)
+    reuse(mlp, pool_in, slot, comp)
+    """
+    name: str
+    dense: Callable
+    reuse: Callable
+
+
 def data_structuring(cfg: LPCNConfig, xyz: jnp.ndarray,
                      key: jax.Array) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """DS step: sample centers, gather neighbors.  Returns
-    (center_idx (S,), nbr_idx (S, K))."""
+    """DS step: sample centers, gather neighbors (both registry-resolved).
+    Returns (center_idx (S,), nbr_idx (S, K))."""
     tree = oct.build(xyz)
-    if cfg.sampler == "fps":
-        cidx = farthest_point_sampling(xyz, cfg.n_centers)
-    elif cfg.sampler == "random":
-        cidx = random_sampling(key, xyz.shape[0], cfg.n_centers)
-    elif cfg.sampler == "morton":
-        cidx = morton_strided_sampling(tree.order, cfg.n_centers)
-    elif cfg.sampler == "all":        # DGCCN: every point is a center
-        cidx = jnp.arange(xyz.shape[0], dtype=jnp.int32)
-    else:
-        raise ValueError(cfg.sampler)
+    cidx = SAMPLERS.get(cfg.sampler)(
+        xyz, tree=tree, n_centers=cfg.n_centers, key=key)
     centers = xyz[cidx]
-    if cfg.neighbor == "pointacc":
-        nbr = nb.knn_bruteforce(xyz, centers, cfg.k)
-    elif cfg.neighbor == "hgpcn":
-        # density-adaptive narrowing level: expected >= k points within
-        # the 27-voxel neighborhood (keeps HgPCN in the accurate class)
-        import math
-        lvl = max(1, min(cfg.octree_level,
-                         int(math.log(max(xyz.shape[0] / cfg.k, 2), 8))))
-        nbr = nb.knn_octree(tree, xyz, centers, cfg.k, level=lvl)
-    elif cfg.neighbor == "edgepc":
-        nbr = nb.knn_morton_window(tree, xyz, centers, cfg.k)
-    elif cfg.neighbor == "crescent":
-        nbr = nb.knn_kdtree_approx(xyz, centers, cfg.k)
-    elif cfg.neighbor == "ball":
-        nbr = nb.ball_query(xyz, centers, cfg.radius, cfg.k)
-    else:
-        raise ValueError(cfg.neighbor)
+    nbr = NEIGHBORS.get(cfg.neighbor)(
+        xyz, centers, tree=tree, k=cfg.k, radius=cfg.radius,
+        octree_level=cfg.octree_level)
     return cidx, nbr
 
 
@@ -121,22 +121,53 @@ def _subset_inputs(kind, xyz, feats, nbr_idx, centers_xyz, center_feats):
     return _point_inputs(kind, xyz, feats, nbr_idx, cv[:, None, :])
 
 
-def fc_traditional(mlp: MLP, xyz, feats, nbr_idx, centers_xyz,
-                   center_feats=None, kind: str = "sa"):
-    """Baseline FC: full MLP on all S*K gathered points, then max-pool."""
+def _dense_reference(mlp: MLP, kind, xyz, feats, nbr_idx, centers_xyz,
+                     center_feats=None):
+    """jnp oracle of the dense FC dataflow (kernels/gather_mlp)."""
     x = _subset_inputs(kind, xyz, feats, nbr_idx, centers_xyz, center_feats)
-    h = apply_mlp(mlp, x)                                 # (S, K, Fout)
-    pooled = h.max(axis=1)
+    return apply_mlp(mlp, x).max(axis=1)                  # (S, Fout)
+
+
+def _reuse_reference(mlp: MLP, pool_in, slot, comp):
+    """jnp oracle of the reuse dataflow (kernels/hub_reuse): pool MLP,
+    slot-gather, + comp, masked max over K.  -> (H, M, Fout), -BIG where a
+    subset has no cached position."""
+    C = pool_in.shape[1]
+    y = apply_mlp(mlp, pool_in)                           # (H, C, Fout)
+    safe = jnp.clip(slot, 0, C - 1)
+    g = jnp.take_along_axis(
+        y, safe.reshape(y.shape[0], -1, 1), axis=1
+    ).reshape(slot.shape + (y.shape[-1],))                # (H, M, K, Fout)
+    g = g + comp[:, :, None, :]
+    g = jnp.where((slot >= 0)[..., None], g, -BIG)
+    return jnp.max(g, axis=2)
+
+
+FC_BACKENDS.register("reference", FCBackend(
+    name="reference", dense=_dense_reference, reuse=_reuse_reference))
+
+
+def fc_traditional(mlp: MLP, xyz, feats, nbr_idx, centers_xyz,
+                   center_feats=None, kind: str = "sa",
+                   backend: FCBackend | None = None):
+    """Baseline FC: full MLP on all S*K gathered points, then max-pool."""
+    backend = backend or FC_BACKENDS.get("reference")
+    pooled = backend.dense(mlp, kind, xyz, feats, nbr_idx, centers_xyz,
+                           center_feats)
     return post_pool_activation(mlp, pooled)
 
 
 def fc_lpcn(mlp: MLP, xyz, feats, nbr_idx, centers_xyz,
             islands: Islands, sched: Schedule, cfg: LPCNConfig,
-            center_feats=None):
+            center_feats=None, backend: FCBackend | None = None):
     """Islandized FC: pool-MLP + compensated reuse + compact overflow.
 
-    Returns (S, Fout) center features — same contract as fc_traditional.
+    The two MXU-heavy dataflows — the dense path and the pool-MLP +
+    reuse-gather — go through ``backend``; overflow/fallback bookkeeping
+    is shared jnp.  Returns (S, Fout) center features — same contract as
+    fc_traditional.
     """
+    backend = backend or get_fc_backend(cfg.fc_backend)
     S, K = nbr_idx.shape
     H, M = islands.members.shape
     C = sched.pool_ids.shape[1]
@@ -146,10 +177,9 @@ def fc_lpcn(mlp: MLP, xyz, feats, nbr_idx, centers_xyz,
     cvec = _center_vec(kind, centers_xyz, center_feats)   # (S, Dc)
     hub_vec = cvec[islands.hub]                           # (H, Dc)
 
-    # --- pool MLP (hub-relative), one eval per cached unique point -------
+    # --- pool inputs (hub-relative), one eval per cached unique point ----
     pids = jnp.clip(sched.pool_ids, 0, xyz.shape[0] - 1)  # (H, C)
     pool_in = _point_inputs(kind, xyz, feats, pids, hub_vec[:, None, :])
-    pool_out = apply_mlp(mlp, pool_in)                    # (H, C, Fout)
     pool_live = sched.pool_ids >= 0
 
     # --- per-subset compensation (one Δ per non-hub subset) --------------
@@ -158,12 +188,10 @@ def fc_lpcn(mlp: MLP, xyz, feats, nbr_idx, centers_xyz,
     delta = hub_vec[:, None, :] - sub_vec                 # (H, M, Dc)
     comp = compensation(mlp, delta, cfg.compensation, kind)  # (H, M, Fout)
 
-    # --- reuse gather ------------------------------------------------------
+    # --- pool MLP + compensated reuse-gather + masked pool (backend) -----
     slot = sched.reuse_slot                               # (H, M, K)
+    reuse_pooled = backend.reuse(mlp, pool_in, slot, comp)   # (H, M, Fout)
     safe_slot = jnp.clip(slot, 0, C - 1)
-    reused = jnp.take_along_axis(
-        pool_out, safe_slot.reshape(H, M * K, 1), axis=1
-    ).reshape(H, M, K, Fout) + comp[:, :, None, :]
     reuse_ok = (slot >= 0) & jnp.take_along_axis(
         pool_live, safe_slot.reshape(H, M * K), axis=1).reshape(H, M, K)
 
@@ -187,13 +215,15 @@ def fc_lpcn(mlp: MLP, xyz, feats, nbr_idx, centers_xyz,
         need, ids_hmk, sub_vec)                           # (H,B),(H,B),(H,B,fin)
     o_out = apply_mlp(mlp, ox)                            # (H, B, Fout)
 
-    # scatter overflow results back into (H, M*K, Fout)
-    full = jnp.where(reuse_ok[..., None], reused, -jnp.inf
-                     ).reshape(H, M * K, Fout)
+    # scatter overflow results into their own (H, M*K, Fout) canvas and
+    # pool; max-pool commutes, so max(reuse_pooled, overflow_pooled) equals
+    # pooling the combined position set
+    over = jnp.full((H, M * K, Fout), -BIG, o_out.dtype)
     oidx = jnp.where(taken, takepos, M * K)               # drop untaken
-    full = full.at[jnp.arange(H)[:, None], oidx].set(
-        jnp.where(taken[..., None], o_out, -jnp.inf), mode="drop")
-    full = full.reshape(H, M, K, Fout)
+    over = over.at[jnp.arange(H)[:, None], oidx].set(
+        jnp.where(taken[..., None], o_out, -BIG), mode="drop")
+    over_pooled = over.reshape(H, M, K, Fout).max(axis=2)
+    pooled = jnp.maximum(reuse_pooled, over_pooled)       # (H, M, Fout)
 
     # rows whose overflow exceeded the budget fall back to the dense path
     covered = jnp.zeros((H, M * K), bool)
@@ -201,8 +231,7 @@ def fc_lpcn(mlp: MLP, xyz, feats, nbr_idx, centers_xyz,
     uncovered_row = (need.reshape(H, M * K) & ~covered
                      ).reshape(H, M, K).any(-1)           # (H, M)
 
-    # --- max-pool per subset, scatter to center order ---------------------
-    pooled = full.max(axis=2)                             # (H, M, Fout)
+    # --- scatter per-subset results to center order -----------------------
     out = jnp.zeros((S, Fout), pooled.dtype)
     rows_ok = sched.subset_valid
     tgt = jnp.where(rows_ok, islands.members, S)
@@ -212,9 +241,8 @@ def fc_lpcn(mlp: MLP, xyz, feats, nbr_idx, centers_xyz,
     solo = islands.solo
     fb = jnp.zeros((S,), bool).at[tgt.reshape(-1)].set(
         uncovered_row.reshape(-1), mode="drop") | solo
-    x_dense = _subset_inputs(kind, xyz, feats, nbr_idx, centers_xyz,
-                             center_feats)
-    h_dense = apply_mlp(mlp, x_dense).max(axis=1)
+    h_dense = backend.dense(mlp, kind, xyz, feats, nbr_idx, centers_xyz,
+                            center_feats)
     out = jnp.where(fb[:, None], h_dense, out)
     return post_pool_activation(mlp, out)
 
@@ -235,12 +263,13 @@ def lpcn_block(cfg: LPCNConfig, mlp: MLP, xyz: jnp.ndarray,
                with_report: bool = False) -> BlockOutput:
     """One full building block on a single cloud (N,3)/(N,F)."""
     kds, kisl = jax.random.split(key)
+    backend = get_fc_backend(cfg.fc_backend)
     cidx, nbr = data_structuring(cfg, xyz, kds)
     centers_xyz = xyz[cidx]
     center_feats = feats[cidx]
     if cfg.mode == "traditional":
         f = fc_traditional(mlp, xyz, feats, nbr, centers_xyz, center_feats,
-                           cfg.block_kind)
+                           cfg.block_kind, backend=backend)
         return BlockOutput(cidx, centers_xyz, f, None, None, nbr)
     n_hubs = max(int(cidx.shape[0]) // cfg.island_size, 1)
     isl = islandize(centers_xyz, n_hubs, level=cfg.octree_level,
@@ -248,6 +277,6 @@ def lpcn_block(cfg: LPCNConfig, mlp: MLP, xyz: jnp.ndarray,
                     hub_select=cfg.hub_select, key=kisl)
     sched = build_schedule(isl, nbr, cfg.cache_capacity)
     f = fc_lpcn(mlp, xyz, feats, nbr, centers_xyz, isl, sched, cfg,
-                center_feats)
+                center_feats, backend=backend)
     report = analyze(isl, sched, cfg.k) if with_report else None
     return BlockOutput(cidx, centers_xyz, f, isl, sched, nbr, report)

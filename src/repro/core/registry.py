@@ -1,0 +1,159 @@
+"""Named-component registries — the engine's plug-in mechanism.
+
+The paper's claim is that the Islandization Unit is a *plug-in* for any
+PCN accelerator workflow; the software equivalent is that every swappable
+stage of the building block — the sampler, the neighbor-search method and
+the Feature-Computation backend — is resolved by name through a registry
+instead of an ``if/elif`` chain.  Third-party code extends the engine with
+
+    from repro.engine import register_sampler
+
+    @register_sampler("my_sampler")
+    def my_sampler(xyz, *, tree, n_centers, key):
+        ...
+
+Interfaces (all jit/vmap-safe, static shapes):
+
+  sampler(xyz, *, tree, n_centers, key)          -> (n_centers,) int32
+  neighbor(xyz, centers, *, tree, k, radius,
+           octree_level)                          -> (S, K) int32
+  fc backend: an :class:`FCBackend` (see core.pipeline) with ``dense`` and
+  ``reuse`` callables — registered by ``core.pipeline`` ("reference") and
+  ``repro.engine.fc`` ("pallas").
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import neighbor as nb
+from . import sampling
+
+
+class Registry:
+    """A small name -> component table with clear failure modes."""
+
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._entries: dict = {}
+
+    def register(self, name: str, value=None):
+        """Register ``value`` under ``name``; usable as a decorator."""
+        def _add(v):
+            if name in self._entries:
+                raise ValueError(
+                    f"duplicate {self.kind} {name!r}: already registered; "
+                    f"pick a distinct name or remove the old entry first")
+            self._entries[name] = v
+            return v
+        return _add if value is None else _add(value)
+
+    def get(self, name: str):
+        try:
+            return self._entries[name]
+        except KeyError:
+            known = ", ".join(sorted(self._entries)) or "<none>"
+            raise KeyError(
+                f"unknown {self.kind} {name!r}; registered {self.kind}s: "
+                f"{known}") from None
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._entries
+
+    def names(self) -> tuple:
+        return tuple(sorted(self._entries))
+
+
+SAMPLERS = Registry("sampler")
+NEIGHBORS = Registry("neighbor")
+FC_BACKENDS = Registry("fc_backend")
+
+
+def register_sampler(name: str, fn=None):
+    return SAMPLERS.register(name, fn)
+
+
+def register_neighbor(name: str, fn=None):
+    return NEIGHBORS.register(name, fn)
+
+
+def register_fc_backend(name: str, backend=None):
+    return FC_BACKENDS.register(name, backend)
+
+
+# ---- default samplers (paper Fig. 6) ---------------------------------------
+
+@register_sampler("fps")
+def _fps(xyz, *, tree, n_centers, key):
+    del tree, key
+    return sampling.farthest_point_sampling(xyz, n_centers)
+
+
+@register_sampler("random")
+def _random(xyz, *, tree, n_centers, key):
+    del tree
+    return sampling.random_sampling(key, xyz.shape[0], n_centers)
+
+
+@register_sampler("morton")
+def _morton(xyz, *, tree, n_centers, key):
+    del key
+    return sampling.morton_strided_sampling(tree.order, n_centers)
+
+
+@register_sampler("all")
+def _all(xyz, *, tree, n_centers, key):
+    """DGCNN: every point is a center."""
+    del tree, key
+    return jnp.arange(xyz.shape[0], dtype=jnp.int32)
+
+
+# ---- default neighbor methods (the four DS baselines + ball query) ---------
+
+@register_neighbor("pointacc")
+def _pointacc(xyz, centers, *, tree, k, radius, octree_level):
+    del tree, radius, octree_level
+    return nb.knn_bruteforce(xyz, centers, k)
+
+
+@register_neighbor("hgpcn")
+def _hgpcn(xyz, centers, *, tree, k, radius, octree_level):
+    del radius
+    # density-adaptive narrowing level: expected >= k points within the
+    # 27-voxel neighborhood (keeps HgPCN in the accurate class)
+    lvl = max(1, min(octree_level,
+                     int(math.log(max(xyz.shape[0] / k, 2), 8))))
+    return nb.knn_octree(tree, xyz, centers, k, level=lvl)
+
+
+@register_neighbor("edgepc")
+def _edgepc(xyz, centers, *, tree, k, radius, octree_level):
+    del radius, octree_level
+    return nb.knn_morton_window(tree, xyz, centers, k)
+
+
+@register_neighbor("crescent")
+def _crescent(xyz, centers, *, tree, k, radius, octree_level):
+    del tree, radius, octree_level
+    return nb.knn_kdtree_approx(xyz, centers, k)
+
+
+@register_neighbor("ball")
+def _ball(xyz, centers, *, tree, k, radius, octree_level):
+    del tree, octree_level
+    return nb.ball_query(xyz, centers, radius, k)
+
+
+def get_fc_backend(name: str):
+    """Resolve an FC backend, loading the kernel-backed ones on demand
+    (``repro.engine.fc`` registers "pallas" on import)."""
+    if name not in FC_BACKENDS:
+        try:
+            import repro.engine.fc  # noqa: F401  (registers backends)
+        except ImportError as e:
+            raise ImportError(
+                f"fc_backend {name!r} is not registered and the kernel "
+                f"backends (repro.engine.fc) failed to import: {e}") from e
+    return FC_BACKENDS.get(name)

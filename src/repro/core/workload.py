@@ -31,8 +31,20 @@ from .hub_schedule import Schedule
 from .islandize import Islands
 
 
+def _at_least_one(v):
+    """max(v, 1) that also works on (B,)-shaped jnp/numpy counters."""
+    if isinstance(v, (int, float)):
+        return max(v, 1)
+    return jnp.maximum(v, 1)
+
+
+@jax.tree_util.register_pytree_node_class
 @dataclass
 class WorkloadReport:
+    """Counter fields are jnp scalars as produced by ``analyze`` (batched
+    (B,) arrays under vmap — registered as a pytree so engine runs can
+    return stacked per-cloud reports); call ``.concrete()`` for python
+    ints."""
     baseline_fetches: int
     lpcn_fetches: int
     baseline_mlp_evals: int
@@ -41,13 +53,23 @@ class WorkloadReport:
     n_islands_used: int
     k: int
 
+    def tree_flatten(self):
+        return ((self.baseline_fetches, self.lpcn_fetches,
+                 self.baseline_mlp_evals, self.lpcn_mlp_evals,
+                 self.n_subsets, self.n_islands_used), (self.k,))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, aux[0])
+
     @property
     def fetch_saving(self) -> float:
-        return 1.0 - self.lpcn_fetches / max(self.baseline_fetches, 1)
+        return 1.0 - self.lpcn_fetches / _at_least_one(self.baseline_fetches)
 
     @property
     def compute_saving(self) -> float:
-        return 1.0 - self.lpcn_mlp_evals / max(self.baseline_mlp_evals, 1)
+        return 1.0 - self.lpcn_mlp_evals / _at_least_one(
+            self.baseline_mlp_evals)
 
     def memory_saving(self, feat_bytes: int, weight_bytes: int,
                       tile_rows: int = 16) -> float:
@@ -60,7 +82,7 @@ class WorkloadReport:
             return fetches * feat_bytes + wpasses * weight_bytes
         base = total(self.baseline_fetches)
         ours = total(self.lpcn_fetches)
-        return 1.0 - ours / max(base, 1)
+        return 1.0 - ours / _at_least_one(base)
 
     def scaled(self, mlp_flops_per_point: int) -> dict:
         return dict(
@@ -69,24 +91,35 @@ class WorkloadReport:
         )
 
     def concrete(self) -> "WorkloadReport":
-        """Materialize jnp counters into python ints."""
-        g = lambda v: int(v) if hasattr(v, "item") else v
+        """Materialize jnp counters: python ints for scalars, numpy arrays
+        for batched (B,) reports."""
+        import numpy as np
+
+        def g(v):
+            if not hasattr(v, "item"):
+                return v
+            arr = np.asarray(v)
+            return int(arr) if arr.ndim == 0 else arr
         return WorkloadReport(
             g(self.baseline_fetches), g(self.lpcn_fetches),
             g(self.baseline_mlp_evals), g(self.lpcn_mlp_evals),
             g(self.n_subsets), g(self.n_islands_used), self.k)
 
+    @classmethod
+    def sum_counters(cls, reports) -> "WorkloadReport":
+        """Trace-safe aggregation: sum the pytree counter children;
+        layers may differ in k (aux), the first layer's is kept."""
+        flats = [r.tree_flatten()[0] for r in reports]
+        return cls.tree_unflatten(
+            (reports[0].k,), [sum(xs) for xs in zip(*flats)])
+
     @staticmethod
     def total(reports: list["WorkloadReport"]) -> "WorkloadReport":
         """Aggregate layer reports into a whole-network report."""
-        rs = [r.concrete() for r in reports]
-        return WorkloadReport(
-            sum(r.baseline_fetches for r in rs),
-            sum(r.lpcn_fetches for r in rs),
-            sum(r.baseline_mlp_evals for r in rs),
-            sum(r.lpcn_mlp_evals for r in rs),
-            sum(r.n_subsets for r in rs),
-            sum(r.n_islands_used for r in rs), rs[0].k if rs else 0)
+        if not reports:
+            return WorkloadReport(0, 0, 0, 0, 0, 0, 0)
+        return WorkloadReport.sum_counters(
+            [r.concrete() for r in reports])
 
 
 def analyze(islands: Islands, sched: Schedule, k: int) -> WorkloadReport:
@@ -115,7 +148,7 @@ def analyze(islands: Islands, sched: Schedule, k: int) -> WorkloadReport:
         baseline_fetches=base, lpcn_fetches=lpcn_fetch,
         baseline_mlp_evals=base, lpcn_mlp_evals=lpcn_mlp,
         n_subsets=n_subsets,
-        n_islands_used=int((valid.any(-1)).sum()), k=k)
+        n_islands_used=(valid.any(-1)).sum(), k=k)
 
 
 def overlap_histogram(nbr_idx: jnp.ndarray, centers: jnp.ndarray,

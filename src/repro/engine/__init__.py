@@ -1,0 +1,42 @@
+"""Batched, backend-pluggable PCN engine — the public API.
+
+One jit-able entry point from a padded cloud batch to logits, with every
+swappable stage (sampler, neighbor search, FC backend, architecture
+family) resolved by name through registries — the software form of the
+paper's claim that the Islandization Unit plugs into any PCN
+accelerator's workflow.
+
+    from repro import engine
+
+    params = engine.init(key, spec)                       # typed pytree
+    logits = engine.apply(params, batch, spec=spec)       # (B, ...) logits
+    eng = engine.PCNEngine(spec, fc_backend="pallas")     # serving handle
+
+Extension points: :func:`register_sampler`, :func:`register_neighbor`,
+:func:`register_fc_backend` (backends: "reference" jnp oracle, "pallas"
+TPU kernels).
+"""
+from repro.core.registry import (FC_BACKENDS, NEIGHBORS, SAMPLERS, Registry,
+                                 register_fc_backend, register_neighbor,
+                                 register_sampler)
+
+from . import params as params_mod
+from .archs import ARCHS, Arch, EngineCtx, feature_propagation, get_arch
+from .engine import (PCNEngine, apply, apply_single, apply_with_reports,
+                     init)
+from .fc import two_layer_form
+from .params import Batch, PCNParams, as_batch, from_legacy, to_legacy
+from .spec import BlockSpec, PCNSpec, arch_of, block_in_dim
+
+# legacy-style alias so call sites can write `engine.params.from_legacy`
+params = params_mod
+
+__all__ = [
+    "PCNEngine", "init", "apply", "apply_single", "apply_with_reports",
+    "Batch", "PCNParams", "as_batch", "from_legacy", "to_legacy",
+    "BlockSpec", "PCNSpec", "arch_of", "block_in_dim",
+    "Registry", "SAMPLERS", "NEIGHBORS", "FC_BACKENDS", "ARCHS", "Arch",
+    "EngineCtx", "register_sampler", "register_neighbor",
+    "register_fc_backend", "get_arch", "feature_propagation",
+    "two_layer_form",
+]

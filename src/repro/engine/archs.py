@@ -1,0 +1,267 @@
+"""Architecture families: typed init + single-cloud forward per family.
+
+Each family is registered under the leading token of ``spec.name``
+("pointnet2", "dgcnn", "pointnext", "pointvector"); unknown names fall
+back to the generic SA-stack family.  Every gather/MLP block routes
+through ``core.pipeline.lpcn_block`` — the Islandization Unit plugs into
+each architecture uniformly (the paper's "seamlessly integrated" claim) —
+and the FC backend, sampler and neighbor method are all registry-resolved.
+
+Forwards operate on ONE cloud; ``engine.apply`` vmaps them over a padded
+:class:`~repro.engine.params.Batch`.  The RNG key-split sequences mirror
+the legacy ``repro.models`` code exactly, so the compatibility shims are
+bit-identical to the old path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mlp import MLP, apply_mlp, init_mlp
+from repro.core.pipeline import LPCNConfig, lpcn_block
+from repro.core.registry import Registry
+from repro.core.workload import WorkloadReport
+
+from .params import PCNParams
+from .spec import BlockSpec, PCNSpec, arch_of, block_in_dim
+
+ARCHS = Registry("arch")
+
+
+@dataclass(frozen=True)
+class Arch:
+    """One architecture family: init(key, spec) -> PCNParams and
+    forward(params, spec, xyz, feats, key, ctx) -> (logits, report)."""
+    name: str
+    init: callable
+    forward: callable
+
+
+@dataclass(frozen=True)
+class EngineCtx:
+    """Per-call static execution context (lifted out of the traced args)."""
+    mode: str = "lpcn"
+    fc_backend: str = "reference"
+    isl_kw: tuple = ()            # sorted (key, value) pairs — hashable
+    with_report: bool = False
+
+    @staticmethod
+    def make(mode="lpcn", fc_backend="reference", isl_kw=None,
+             with_report=False) -> "EngineCtx":
+        return EngineCtx(mode=mode, fc_backend=fc_backend,
+                         isl_kw=tuple(sorted((isl_kw or {}).items())),
+                         with_report=with_report)
+
+
+def get_arch(spec: PCNSpec) -> Arch:
+    name = arch_of(spec)
+    return ARCHS.get(name if name in ARCHS else "pointnet2")
+
+
+def block_cfg(b: BlockSpec, ctx: EngineCtx) -> LPCNConfig:
+    return LPCNConfig(n_centers=b.n_centers, k=b.k, sampler=b.sampler,
+                      neighbor=b.neighbor, radius=b.radius, mode=ctx.mode,
+                      block_kind=b.kind, fc_backend=ctx.fc_backend,
+                      **dict(ctx.isl_kw))
+
+
+def _total(reports):
+    if not reports:
+        return None
+    if len(reports) == 1:
+        return reports[0]
+    return WorkloadReport.sum_counters(reports)
+
+
+def feature_propagation(xyz_dst, xyz_src, f_src, k: int = 3):
+    """PointNet++ FP layer: inverse-distance 3-NN interpolation of source
+    center features onto destination points (segmentation upsampling)."""
+    d = jnp.sum((xyz_dst[:, None, :] - xyz_src[None, :, :]) ** 2, -1)
+    neg, idx = jax.lax.top_k(-d, k)
+    w = 1.0 / jnp.maximum(-neg, 1e-8)
+    w = w / w.sum(-1, keepdims=True)
+    return (f_src[idx] * w[..., None]).sum(axis=1)
+
+
+def _run_blocks(params: PCNParams, spec: PCNSpec, xyz, feats, key,
+                ctx: EngineCtx):
+    """SA block stack on one cloud -> (cx, cf, reports, saved)."""
+    reports, saved = [], []
+    cur_xyz, cur_f = xyz, feats
+    for b, mlp in zip(spec.blocks, params.blocks):
+        key, sub = jax.random.split(key)
+        out = lpcn_block(block_cfg(b, ctx), mlp, cur_xyz, cur_f, sub,
+                         with_report=ctx.with_report)
+        saved.append((cur_xyz, cur_f, out))
+        cur_xyz, cur_f = out.center_xyz, out.features
+        if ctx.with_report and out.report is not None:
+            reports.append(out.report)
+    return cur_xyz, cur_f, reports, saved
+
+
+def _global_pool(params: PCNParams, center_xyz, center_f):
+    """Final global SA: one subset containing every remaining center —
+    the paper's example of a no-overlap layer (processed traditionally)."""
+    if params.global_mlp is None:
+        return center_f.max(axis=0)
+    centroid = center_xyz.mean(axis=0)
+    x = jnp.concatenate([center_xyz - centroid, center_f], axis=-1)
+    return apply_mlp(params.global_mlp, x).max(axis=0)
+
+
+# ---- generic SA stack (PointNet++ and ad-hoc specs) -------------------------
+
+def _init_pointnet2(key, spec: PCNSpec) -> PCNParams:
+    blocks = []
+    f = spec.in_feats
+    for b in spec.blocks:
+        key, sub = jax.random.split(key)
+        dims = [block_in_dim(b.kind, f), *b.mlp_dims]
+        blocks.append(init_mlp(sub, dims, spec.activation))
+        f = b.mlp_dims[-1]
+    global_mlp = None
+    if spec.task == "cls":
+        key, sub = jax.random.split(key)
+        if spec.global_mlp:
+            global_mlp = init_mlp(sub, [3 + f, *spec.global_mlp],
+                                  spec.activation)
+            f = spec.global_mlp[-1]
+    key, sub = jax.random.split(key)
+    head = init_mlp(sub, [f, *spec.head_dims, spec.n_classes], "per_layer")
+    return PCNParams(blocks=tuple(blocks), head=head, global_mlp=global_mlp)
+
+
+def _fwd_pointnet2(params: PCNParams, spec: PCNSpec, xyz, feats, key,
+                   ctx: EngineCtx):
+    cx, cf, reports, saved = _run_blocks(params, spec, xyz, feats, key, ctx)
+    if spec.task == "cls":
+        g = _global_pool(params, cx, cf)
+        return apply_mlp(params.head, g), _total(reports)
+    # segmentation: FP decoder back up the saved pyramid
+    f = cf
+    xyz_levels = [s[0] for s in saved] + [cx]
+    for lvl in range(len(saved) - 1, -1, -1):
+        f = feature_propagation(xyz_levels[lvl], xyz_levels[lvl + 1], f)
+    return apply_mlp(params.head, f), _total(reports)
+
+
+ARCHS.register("pointnet2", Arch("pointnet2", _init_pointnet2,
+                                 _fwd_pointnet2))
+
+
+# ---- DGCNN (EdgeConv; every point a center) ---------------------------------
+
+def _init_dgcnn(key, spec: PCNSpec) -> PCNParams:
+    # head input is the concat of every EdgeConv output (cls) or that plus
+    # a broadcast global vector (seg) — rebuild the head accordingly
+    p = _init_pointnet2(key, spec)
+    cat_dim = sum(b.mlp_dims[-1] for b in spec.blocks)
+    head_in = cat_dim if spec.task == "cls" else 2 * cat_dim
+    key, sub = jax.random.split(key)
+    head = init_mlp(sub, [head_in, *spec.head_dims, spec.n_classes],
+                    "per_layer")
+    return PCNParams(blocks=p.blocks, head=head, global_mlp=None)
+
+
+def _fwd_dgcnn(params: PCNParams, spec: PCNSpec, xyz, feats, key,
+               ctx: EngineCtx):
+    """EdgeConv stack; every layer keeps all N points (no downsampling)."""
+    reports, per_layer = [], []
+    f = feats
+    for b, mlp in zip(spec.blocks, params.blocks):
+        key, sub = jax.random.split(key)
+        out = lpcn_block(block_cfg(b, ctx), mlp, xyz, f, sub,
+                         with_report=ctx.with_report)
+        f = out.features
+        per_layer.append(f)
+        if ctx.with_report and out.report is not None:
+            reports.append(out.report)
+    cat = jnp.concatenate(per_layer, axis=-1)
+    if spec.task == "cls":
+        return apply_mlp(params.head, cat.max(axis=0)), _total(reports)
+    g = cat.max(axis=0, keepdims=True)
+    per_point = jnp.concatenate(
+        [cat, jnp.broadcast_to(g, cat.shape[:1] + g.shape[1:])], axis=-1)
+    return apply_mlp(params.head, per_point), _total(reports)
+
+
+ARCHS.register("dgcnn", Arch("dgcnn", _init_dgcnn, _fwd_dgcnn))
+
+
+# ---- PointNeXt (stem + SA stages with InvResMLP residuals) ------------------
+
+def _init_pointnext(key, spec: PCNSpec, stem_dim: int = 32) -> PCNParams:
+    key, sub = jax.random.split(key)
+    stem = init_mlp(sub, [spec.in_feats, stem_dim], "per_layer")
+    blocks, extras = [], []
+    f = stem_dim
+    for b in spec.blocks:
+        key, s1, s2 = jax.random.split(key, 3)
+        blocks.append(init_mlp(s1, [3 + f, *b.mlp_dims], spec.activation))
+        f = b.mlp_dims[-1]
+        # InvResMLP: pointwise expansion x4 + projection, residual
+        extras.append(init_mlp(s2, [f, 4 * f, f], "per_layer"))
+    key, sub = jax.random.split(key)
+    head = init_mlp(sub, [f, *spec.head_dims, spec.n_classes], "per_layer")
+    return PCNParams(blocks=tuple(blocks), head=head, stem=stem,
+                     extras=tuple(extras))
+
+
+def _fwd_stem_stack(params, spec, xyz, feats, key, ctx, combine):
+    """Shared stem + SA stack + FP decoder used by PointNeXt/PointVector;
+    ``combine(extra_mlp, block_features)`` is the per-stage residual."""
+    reports = []
+    f = apply_mlp(params.stem, feats)
+    cur_xyz = xyz
+    xyz_levels = [xyz]
+    for b, mlp, extra in zip(spec.blocks, params.blocks, params.extras):
+        key, sub = jax.random.split(key)
+        out = lpcn_block(block_cfg(b, ctx), mlp, cur_xyz, f, sub,
+                         with_report=ctx.with_report)
+        f = combine(extra, out.features)
+        cur_xyz = out.center_xyz
+        xyz_levels.append(cur_xyz)
+        if ctx.with_report and out.report is not None:
+            reports.append(out.report)
+    for lvl in range(len(spec.blocks) - 1, -1, -1):
+        f = feature_propagation(xyz_levels[lvl], xyz_levels[lvl + 1], f)
+    return apply_mlp(params.head, f), _total(reports)
+
+
+def _fwd_pointnext(params, spec, xyz, feats, key, ctx):
+    return _fwd_stem_stack(params, spec, xyz, feats, key, ctx,
+                           lambda inv, h: h + apply_mlp(inv, h))
+
+
+ARCHS.register("pointnext", Arch("pointnext", _init_pointnext,
+                                 _fwd_pointnext))
+
+
+# ---- PointVector (stem + SA stages with vector recombination) ---------------
+
+def _init_pointvector(key, spec: PCNSpec, stem_dim: int = 64) -> PCNParams:
+    key, sub = jax.random.split(key)
+    stem = init_mlp(sub, [spec.in_feats, stem_dim], "per_layer")
+    blocks, extras = [], []
+    f = stem_dim
+    for b in spec.blocks:
+        key, s1, s2 = jax.random.split(key, 3)
+        blocks.append(init_mlp(s1, [3 + f, *b.mlp_dims], spec.activation))
+        f = b.mlp_dims[-1]
+        # vector branch: per-center linear recombination post-pooling
+        extras.append(init_mlp(s2, [f, f], "per_layer"))
+    key, sub = jax.random.split(key)
+    head = init_mlp(sub, [f, *spec.head_dims, spec.n_classes], "per_layer")
+    return PCNParams(blocks=tuple(blocks), head=head, stem=stem,
+                     extras=tuple(extras))
+
+
+def _fwd_pointvector(params, spec, xyz, feats, key, ctx):
+    return _fwd_stem_stack(params, spec, xyz, feats, key, ctx,
+                           lambda vec, h: jax.nn.relu(apply_mlp(vec, h)))
+
+
+ARCHS.register("pointvector", Arch("pointvector", _init_pointvector,
+                                   _fwd_pointvector))

@@ -1,0 +1,131 @@
+"""The engine: one jit-able entry point from a cloud batch to logits.
+
+Functional API (module-level, used with ``jax.jit``/``partial``):
+
+    from functools import partial
+    import jax
+    from repro import engine
+    from repro.models.pointnet2 import POINTNET2_C
+
+    params = engine.init(jax.random.PRNGKey(0), POINTNET2_C)
+    run = jax.jit(partial(engine.apply, spec=POINTNET2_C, mode="lpcn",
+                          fc_backend="pallas"))
+    logits = run(params, xyz_batch)          # (B, N, 3) -> (B, 40)
+
+``spec``/``mode``/``fc_backend`` are static (closed over), so ONE compiled
+executable serves every batch of the same shape — the serving path.  The
+object API wraps the same functions with a cached jit per engine:
+
+    eng = engine.PCNEngine(POINTNET2_C, mode="lpcn", fc_backend="pallas")
+    params = eng.init(jax.random.PRNGKey(0))
+    logits = eng.apply(params, batch)
+
+Everything vmaps over the whole block stack (DS → islandize →
+hub-schedule → FC → head), per cloud, with per-cloud PRNG keys.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import fc as _fc                     # noqa: F401  registers "pallas"
+from .archs import EngineCtx, get_arch
+from .params import Batch, PCNParams, as_batch, from_legacy
+from .spec import PCNSpec
+
+
+def init(key: jax.Array, spec: PCNSpec) -> PCNParams:
+    """Initialize typed params for ``spec`` (arch-dispatched)."""
+    return get_arch(spec).init(key, spec)
+
+
+def apply_single(params, xyz, feats, key, *, spec: PCNSpec,
+                 mode: str = "lpcn", fc_backend: str = "reference",
+                 isl_kw: dict | None = None, with_report: bool = False):
+    """One cloud (N, 3)/(N, F) -> (logits, WorkloadReport | None).
+
+    cls: (n_classes,) logits.  seg: (N, n_classes) per-point logits.
+    Accepts legacy param dicts as well as :class:`PCNParams`.
+    """
+    params = from_legacy(params)
+    ctx = EngineCtx.make(mode=mode, fc_backend=fc_backend, isl_kw=isl_kw,
+                         with_report=with_report)
+    return get_arch(spec).forward(params, spec, xyz, feats, key, ctx)
+
+
+def apply(params, batch, *, spec: PCNSpec, mode: str = "lpcn",
+          fc_backend: str = "reference", isl_kw: dict | None = None):
+    """Padded batch -> logits, fully jit/vmap-compiled.
+
+    ``batch`` is a :class:`Batch` or a raw (B, N, 3) array.  Returns
+    (B, n_classes) for cls specs, (B, N, n_classes) for seg specs.
+    """
+    params = from_legacy(params)
+    b = as_batch(batch)
+
+    def one(xyz, feats, key):
+        logits, _ = apply_single(params, xyz, feats, key, spec=spec,
+                                 mode=mode, fc_backend=fc_backend,
+                                 isl_kw=isl_kw, with_report=False)
+        return logits
+
+    return jax.vmap(one)(b.xyz, b.feats, b.keys)
+
+
+def apply_with_reports(params, batch, *, spec: PCNSpec, mode: str = "lpcn",
+                       fc_backend: str = "reference",
+                       isl_kw: dict | None = None):
+    """Like :func:`apply` but also returns the stacked per-cloud
+    :class:`WorkloadReport` (counter fields have a leading (B,) axis);
+    None in traditional mode."""
+    params = from_legacy(params)
+    b = as_batch(batch)
+
+    def one(xyz, feats, key):
+        return apply_single(params, xyz, feats, key, spec=spec, mode=mode,
+                            fc_backend=fc_backend, isl_kw=isl_kw,
+                            with_report=(mode != "traditional"))
+
+    return jax.vmap(one)(b.xyz, b.feats, b.keys)
+
+
+class PCNEngine:
+    """A spec bound to an execution configuration, with a cached jit.
+
+    The engine object is the serving handle: construct once, ``init`` (or
+    load) params, then ``apply`` on padded batches — recompilation happens
+    only when the batch shape changes.
+    """
+
+    def __init__(self, spec: PCNSpec, *, mode: str = "lpcn",
+                 fc_backend: str = "reference",
+                 isl_kw: dict | None = None):
+        self.spec = spec
+        self.mode = mode
+        self.fc_backend = fc_backend
+        self.isl_kw = dict(isl_kw or {})
+        self._japply = jax.jit(partial(
+            apply, spec=spec, mode=mode, fc_backend=fc_backend,
+            isl_kw=self.isl_kw))
+
+    def init(self, key: jax.Array) -> PCNParams:
+        return init(key, self.spec)
+
+    def apply(self, params, batch) -> jnp.ndarray:
+        """Padded batch (Batch or (B, N, 3) array) -> logits."""
+        return self._japply(from_legacy(params), as_batch(batch))
+
+    def apply_single(self, params, xyz, feats=None, key=None, *,
+                     with_report: bool = False):
+        """Eager single-cloud path (keeps the legacy per-cloud contract)."""
+        feats = xyz if feats is None else feats
+        key = jax.random.PRNGKey(0) if key is None else key
+        return apply_single(params, xyz, feats, key, spec=self.spec,
+                            mode=self.mode, fc_backend=self.fc_backend,
+                            isl_kw=self.isl_kw, with_report=with_report)
+
+    def __repr__(self):
+        return (f"PCNEngine({self.spec.name}, mode={self.mode!r}, "
+                f"fc_backend={self.fc_backend!r})")

@@ -1,0 +1,116 @@
+"""The "pallas" FC backend: the building block's two MXU dataflows routed
+through the TPU kernels (CPU: interpret mode; TPU: Mosaic-compiled).
+
+  dense  -> kernels/gather_mlp   fused normalize → MLP → max-pool
+  reuse  -> kernels/hub_reuse    pool-MLP → one-hot reuse-gather → Δ-comp
+                                 → masked max-pool
+
+Both kernels are fixed two-layer (W1, relu, W2) pipelines — the shape of
+the paper's systolic FCU.  General point-MLPs are lowered to that form
+exactly:
+
+  * ``block_end`` (all layers linear): compose every layer into ONE linear
+    map, then embed it as relu(x·[W,−W]+[b,−b])·[I;−I] — exact, because
+    relu(a) − relu(−a) = a.
+  * ``per_layer`` with 2 layers: direct.
+  * ``per_layer`` with 1 layer: the same split-sign embedding.
+  * ``per_layer`` with >2 layers: the leading layers run as a jnp prologue
+    (they are the cheap narrow layers); the last two — the wide ones that
+    dominate FLOPs — run fused in the kernel.
+
+Registered as ``"pallas"`` in ``repro.core.registry.FC_BACKENDS``; the
+pure-jnp oracle is the ``"reference"`` backend in ``core.pipeline``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mlp import MLP
+from repro.core.pipeline import FCBackend, _subset_inputs
+from repro.core.registry import FC_BACKENDS
+from repro.kernels.gather_mlp.ops import gather_mlp
+from repro.kernels.hub_reuse.ops import hub_reuse
+
+
+def _split_sign(w, b):
+    """Embed the linear map x·w+b as a relu pair: since
+    relu(a) − relu(−a) = a, relu(x·[w,−w]+[b,−b])·[I;−I] is exact."""
+    f = w.shape[1]
+    eye = jnp.eye(f, dtype=w.dtype)
+    w1 = jnp.concatenate([w, -w], axis=1)
+    b1 = jnp.concatenate([b, -b], axis=0)
+    w2 = jnp.concatenate([eye, -eye], axis=0)
+    return w1, b1, w2, jnp.zeros((f,), w.dtype)
+
+
+def two_layer_form(mlp: MLP):
+    """Lower an arbitrary point-MLP to the kernels' fixed
+    relu-sandwich form.  Returns (prologue | None, (w1, b1, w2, b2));
+    the prologue (if any) is applied with jnp before the kernel call."""
+    layers = mlp.layers
+    if mlp.activation == "block_end":
+        w, b = layers[0].w, layers[0].b
+        for l in layers[1:]:
+            b = b @ l.w + l.b
+            w = w @ l.w
+        return None, _split_sign(w, b)
+    if len(layers) == 1:
+        return None, _split_sign(layers[0].w, layers[0].b)
+    if len(layers) == 2:
+        return None, (layers[0].w, layers[0].b, layers[1].w, layers[1].b)
+
+    def prologue(x):
+        # every prologue layer is followed by relu (none of them is the
+        # network's final layer)
+        for l in layers[:-2]:
+            x = jax.nn.relu(x @ l.w + l.b)
+        return x
+
+    return prologue, (layers[-2].w, layers[-2].b, layers[-1].w, layers[-1].b)
+
+
+def _with_dummy_lane(raw, w1):
+    """The kernel requires >= 1 center lane; when normalization already
+    happened in a prologue, prepend a zero lane (and a zero row in W1) so
+    the in-kernel subtract is a no-op."""
+    zeros = jnp.zeros(raw.shape[:-1] + (1,), raw.dtype)
+    raw = jnp.concatenate([zeros, raw], axis=-1)
+    w1 = jnp.concatenate([jnp.zeros((1, w1.shape[1]), w1.dtype), w1], axis=0)
+    ctr = jnp.zeros((raw.shape[0], 1), raw.dtype)
+    return raw, ctr, w1
+
+
+def _dense_pallas(mlp: MLP, kind, xyz, feats, nbr_idx, centers_xyz,
+                  center_feats=None):
+    """Dense FC through the fused gather_mlp kernel.  -> (S, Fout)."""
+    prologue, (w1, b1, w2, b2) = two_layer_form(mlp)
+    if prologue is None:
+        if kind == "sa":
+            # kernel computes [xyz_j − c, f_j]: raw carries the gathered
+            # lanes, the center is subtracted from the leading 3 in-kernel
+            raw = jnp.concatenate([xyz[nbr_idx], feats[nbr_idx]], axis=-1)
+            ctr = centers_xyz
+        else:
+            # edge input is [f_j − c, c]: write it as a subtract over all
+            # 2F lanes of [f_j, 0] with the center vector [c, −c]
+            fj = feats[nbr_idx]
+            raw = jnp.concatenate([fj, jnp.zeros_like(fj)], axis=-1)
+            cv = center_feats
+            ctr = jnp.concatenate([cv, -cv], axis=-1)
+    else:
+        x = _subset_inputs(kind, xyz, feats, nbr_idx, centers_xyz,
+                           center_feats)
+        raw, ctr, w1 = _with_dummy_lane(prologue(x), w1)
+    return gather_mlp(raw, ctr, w1, b1, w2, b2)
+
+
+def _reuse_pallas(mlp: MLP, pool_in, slot, comp):
+    """Reuse dataflow through the hub_reuse kernel.  -> (H, M, Fout)."""
+    prologue, (w1, b1, w2, b2) = two_layer_form(mlp)
+    x = pool_in if prologue is None else prologue(pool_in)
+    return hub_reuse(x, slot, comp, w1, b1, w2, b2)
+
+
+FC_BACKENDS.register("pallas", FCBackend(
+    name="pallas", dense=_dense_pallas, reuse=_reuse_pallas))

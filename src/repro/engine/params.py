@@ -1,0 +1,159 @@
+"""Typed, pytree-registered containers for the engine API.
+
+:class:`PCNParams` replaces the per-model ``{"blocks": [...], ...}`` dicts:
+one frozen dataclass covering every architecture family (SA stacks, DGCNN,
+PointNeXt, PointVector), registered as a JAX pytree so whole-model params
+flow through ``jit`` / ``vmap`` / ``grad`` / optimizers untouched.
+
+:class:`Batch` is the batched input container: padded (B, N, 3) clouds with
+per-cloud features, PRNG keys and valid-point counts.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mlp import MLP
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class PCNParams:
+    """All parameters of one PCN.
+
+    blocks:      one MLP per building block (the FC-step point MLPs).
+    head:        classifier / per-point head MLP.
+    global_mlp:  final global-SA MLP (cls models; None otherwise).
+    stem:        per-point input embedding (PointNeXt/PointVector; None
+                 otherwise).
+    extras:      per-block side branches — InvResMLP (PointNeXt) or the
+                 vector-recombination MLPs (PointVector); empty otherwise.
+    """
+    blocks: tuple
+    head: MLP
+    global_mlp: MLP | None = None
+    stem: MLP | None = None
+    extras: tuple = ()
+
+    def tree_flatten(self):
+        return ((self.blocks, self.head, self.global_mlp, self.stem,
+                 self.extras), ())
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def from_legacy(params) -> PCNParams:
+    """Convert a legacy per-model param dict to :class:`PCNParams`.
+
+    Accepts the three historical dict layouts ({"blocks","global","head"},
+    {"stem","blocks","invres","head"}, {"stem","blocks","vector","head"});
+    a PCNParams passes through unchanged.
+    """
+    if isinstance(params, PCNParams):
+        return params
+    extras = params.get("invres") or params.get("vector") or ()
+    return PCNParams(
+        blocks=tuple(params["blocks"]),
+        head=params["head"],
+        global_mlp=params.get("global"),
+        stem=params.get("stem"),
+        extras=tuple(extras),
+    )
+
+
+def to_legacy(params: PCNParams, arch: str) -> dict:
+    """Render :class:`PCNParams` in the legacy dict layout of ``arch``
+    (for old call sites that index ``params["blocks"]`` etc.)."""
+    if arch == "pointnext":
+        return {"stem": params.stem, "blocks": list(params.blocks),
+                "invres": list(params.extras), "head": params.head}
+    if arch == "pointvector":
+        return {"stem": params.stem, "blocks": list(params.blocks),
+                "vector": list(params.extras), "head": params.head}
+    return {"blocks": list(params.blocks), "global": params.global_mlp,
+            "head": params.head}
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class Batch:
+    """A padded batch of point clouds.
+
+    xyz:     (B, N, 3) coordinates; clouds shorter than N are padded by
+             repeating their last point (padded rows take part in DS/FC —
+             a bounded approximation; mask per-point outputs by n_valid).
+    feats:   (B, N, F) per-point input features (xyz for plain geometry).
+    keys:    (B, 2) uint32 — one PRNG key per cloud (drives random
+             sampling / hub selection independently per cloud).
+    n_valid: (B,) int32 — true point count per cloud before padding.
+    """
+    xyz: jnp.ndarray
+    feats: jnp.ndarray
+    keys: jnp.ndarray
+    n_valid: jnp.ndarray
+
+    def tree_flatten(self):
+        return ((self.xyz, self.feats, self.keys, self.n_valid), ())
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def batch_size(self) -> int:
+        return self.xyz.shape[0]
+
+    @staticmethod
+    def make(xyz, feats=None, key=None, n_valid=None) -> "Batch":
+        """Wrap pre-stacked (B, N, 3)/(B, N, F) arrays.  ``key`` may be a
+        single PRNG key (split per cloud) or (B, 2) per-cloud keys."""
+        xyz = jnp.asarray(xyz)
+        b, n = xyz.shape[0], xyz.shape[1]
+        feats = xyz if feats is None else jnp.asarray(feats)
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        # a single key is ndim-1 raw uint32 or ndim-0 typed; anything with
+        # one more axis is already per-cloud
+        typed = jax.dtypes.issubdtype(key.dtype, jax.dtypes.prng_key)
+        single = key.ndim == (0 if typed else 1)
+        keys = jax.random.split(key, b) if single else key
+        if n_valid is None:
+            n_valid = jnp.full((b,), n, jnp.int32)
+        return Batch(xyz=xyz, feats=feats, keys=keys,
+                     n_valid=jnp.asarray(n_valid, jnp.int32))
+
+    @staticmethod
+    def from_clouds(clouds, feats=None, key=None) -> "Batch":
+        """Stack variable-size clouds, padding to the longest by repeating
+        each cloud's last point."""
+        clouds = [np.asarray(c) for c in clouds]
+        n = max(c.shape[0] for c in clouds)
+        n_valid = np.array([c.shape[0] for c in clouds], np.int32)
+
+        def pad(c):
+            return np.concatenate(
+                [c, np.repeat(c[-1:], n - c.shape[0], axis=0)]) \
+                if c.shape[0] < n else c
+
+        xyz = jnp.asarray(np.stack([pad(c) for c in clouds]))
+        f = None if feats is None else jnp.asarray(
+            np.stack([pad(np.asarray(x)) for x in feats]))
+        return Batch.make(xyz, f, key, n_valid)
+
+
+def as_batch(batch) -> Batch:
+    """Coerce engine.apply input: a Batch passes through; a raw (B, N, 3)
+    array becomes a geometry-only batch with default keys."""
+    if isinstance(batch, Batch):
+        return batch
+    arr = jnp.asarray(batch) if not hasattr(batch, "ndim") else batch
+    if arr.ndim != 3:
+        raise TypeError(
+            f"engine.apply expects a Batch or a (B, N, 3) array; got "
+            f"shape {getattr(arr, 'shape', None)}")
+    return Batch.make(arr)

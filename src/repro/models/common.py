@@ -1,70 +1,27 @@
-"""Shared PCN model machinery: block stacks, feature propagation, heads.
+"""Shared PCN model machinery — DEPRECATED compatibility layer.
 
-A model is (init(key, spec) -> params, apply(params, xyz, feats, key,
-mode) -> (logits, reports)).  Every gather/MLP block routes through
-``core.pipeline.lpcn_block`` so the Islandization Unit plugs into each
-model uniformly (the paper's "seamlessly integrated" claim).
+The typed, batch-first API lives in :mod:`repro.engine`; this module
+re-exports the spec types from there and keeps the historical dict-based
+helpers as thin shims so old call sites keep working.  New code should
+use ``engine.init`` / ``engine.apply`` / ``engine.PCNEngine``.
 """
 from __future__ import annotations
-
-from dataclasses import dataclass, field, replace
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.mlp import MLP, Dense, apply_mlp, init_mlp
+from repro.core.mlp import apply_mlp
 from repro.core.pipeline import LPCNConfig, lpcn_block
 from repro.core.workload import WorkloadReport
-
-
-@dataclass(frozen=True)
-class BlockSpec:
-    """One building block (SA or EdgeConv) of a PCN."""
-    n_centers: int
-    k: int
-    mlp_dims: tuple            # hidden+out dims, input inferred
-    radius: float = 0.2
-    kind: str = "sa"           # sa | edge
-    sampler: str = "fps"
-    neighbor: str = "pointacc"
-
-
-@dataclass(frozen=True)
-class PCNSpec:
-    """A whole point-cloud network."""
-    name: str
-    blocks: tuple              # tuple[BlockSpec]
-    head_dims: tuple           # classifier / per-point head
-    n_classes: int
-    in_feats: int = 3          # input feature dim (xyz counts as features)
-    task: str = "cls"          # cls | seg
-    global_mlp: tuple = ()     # final global SA mlp (cls only)
-    activation: str = "per_layer"   # per_layer | block_end (paper §VI-E)
-
-
-def block_in_dim(kind: str, f_prev: int) -> int:
-    return (3 + f_prev) if kind == "sa" else (2 * f_prev)
+from repro.engine.spec import BlockSpec, PCNSpec, block_in_dim  # noqa: F401
 
 
 def init_model(key: jax.Array, spec: PCNSpec):
-    """-> params dict: per-block MLPs + global MLP + head."""
-    params = {"blocks": [], "global": None, "head": None}
-    f = spec.in_feats
-    for b in spec.blocks:
-        key, sub = jax.random.split(key)
-        dims = [block_in_dim(b.kind, f), *b.mlp_dims]
-        params["blocks"].append(init_mlp(sub, dims, spec.activation))
-        f = b.mlp_dims[-1]
-    if spec.task == "cls":
-        key, sub = jax.random.split(key)
-        gdims = [3 + f, *spec.global_mlp] if spec.global_mlp else None
-        if gdims:
-            params["global"] = init_mlp(sub, gdims, spec.activation)
-            f = spec.global_mlp[-1]
-    key, sub = jax.random.split(key)
-    params["head"] = init_mlp(sub, [f, *spec.head_dims, spec.n_classes],
-                              "per_layer")
-    return params
+    """DEPRECATED: legacy dict-layout init; routes through
+    ``repro.engine`` (generic SA-stack family) and converts back."""
+    from repro import engine
+    from repro.engine.archs import _init_pointnet2
+    return engine.to_legacy(_init_pointnet2(key, spec), "pointnet2")
 
 
 def lpcn_cfg_for(b: BlockSpec, mode: str, isl_kw: dict) -> LPCNConfig:
@@ -75,8 +32,8 @@ def lpcn_cfg_for(b: BlockSpec, mode: str, isl_kw: dict) -> LPCNConfig:
 
 def run_blocks(params, spec: PCNSpec, xyz, feats, key, mode: str,
                isl_kw: dict | None = None, with_report: bool = False):
-    """Run the block stack on ONE cloud.  Returns (center_xyz, center_f,
-    reports, per_block_outputs)."""
+    """DEPRECATED (use ``repro.engine``): run the block stack on ONE
+    cloud.  Returns (center_xyz, center_f, reports, per_block_outputs)."""
     isl_kw = isl_kw or {}
     reports, saved = [], []
     cur_xyz, cur_f = xyz, feats
@@ -104,13 +61,9 @@ def global_pool(params, spec: PCNSpec, center_xyz, center_f):
 
 
 def feature_propagation(xyz_dst, xyz_src, f_src, k: int = 3):
-    """PointNet++ FP layer: inverse-distance 3-NN interpolation of source
-    center features onto destination points (segmentation upsampling)."""
-    d = jnp.sum((xyz_dst[:, None, :] - xyz_src[None, :, :]) ** 2, -1)
-    neg, idx = jax.lax.top_k(-d, k)
-    w = 1.0 / jnp.maximum(-neg, 1e-8)
-    w = w / w.sum(-1, keepdims=True)
-    return (f_src[idx] * w[..., None]).sum(axis=1)
+    """DEPRECATED alias of :func:`repro.engine.feature_propagation`."""
+    from repro.engine.archs import feature_propagation as fp
+    return fp(xyz_dst, xyz_src, f_src, k)
 
 
 def apply_head(params, f):

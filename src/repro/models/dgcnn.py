@@ -9,12 +9,7 @@ delta compensation exact (paper §VI-E).
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
-from .common import (BlockSpec, PCNSpec, apply_head, init_model,
-                     run_blocks, total_report)
-from repro.core.mlp import apply_mlp
+from .common import BlockSpec, PCNSpec, init_model
 
 DGCNN_C = PCNSpec(
     name="dgcnn_c",
@@ -53,43 +48,28 @@ def with_points(spec: PCNSpec, n: int) -> PCNSpec:
 
 
 def init(key, spec=DGCNN_C):
+    """DEPRECATED shim: legacy dict params with the generic head (use
+    ``init_for_task`` / ``repro.engine.init`` for the correct head)."""
     return init_model(key, spec)
 
 
 def apply(params, spec, xyz, feats, key, mode: str = "lpcn",
           isl_kw: dict | None = None, with_report: bool = False):
-    """EdgeConv stack; every layer keeps all N points (no downsampling)."""
-    reports = []
-    f = feats
-    per_layer = []
-    for b, mlp in zip(spec.blocks, params["blocks"]):
-        key, sub = jax.random.split(key)
-        from .common import lpcn_cfg_for
-        from repro.core.pipeline import lpcn_block
-        cfg = lpcn_cfg_for(b, mode, isl_kw or {})
-        out = lpcn_block(cfg, mlp, xyz, f, sub, with_report=with_report)
-        f = out.features
-        per_layer.append(f)
-        if with_report and out.report is not None:
-            reports.append(out.report)
-    cat = jnp.concatenate(per_layer, axis=-1)
-    if spec.task == "cls":
-        g = cat.max(axis=0)
-        return apply_head(params, g), total_report(reports)
-    g = cat.max(axis=0, keepdims=True)
-    per_point = jnp.concatenate(
-        [cat, jnp.broadcast_to(g, cat.shape[:1] + g.shape[1:])], axis=-1)
-    return apply_head(params, per_point), total_report(reports)
+    """EdgeConv stack; every layer keeps all N points (no downsampling).
+
+    DEPRECATED shim: routes through ``repro.engine.apply_single``.
+    """
+    from repro import engine
+    return engine.apply_single(params, xyz, feats, key, spec=spec,
+                               mode=mode, isl_kw=isl_kw,
+                               with_report=with_report)
 
 
 def init_for_task(key, spec):
     """Head input dim differs from the generic initializer (concat of all
-    EdgeConv outputs [+ global]), so rebuild the head accordingly."""
-    from repro.core.mlp import init_mlp
-    params = init_model(key, spec)
-    cat_dim = sum(b.mlp_dims[-1] for b in spec.blocks)
-    head_in = cat_dim if spec.task == "cls" else 2 * cat_dim
-    key, sub = jax.random.split(key)
-    params["head"] = init_mlp(sub, [head_in, *spec.head_dims,
-                                    spec.n_classes], "per_layer")
-    return params
+    EdgeConv outputs [+ global]), so rebuild the head accordingly.
+
+    DEPRECATED shim: equals ``repro.engine.init`` in legacy dict form.
+    """
+    from repro import engine
+    return engine.to_legacy(engine.init(key, spec), "dgcnn")

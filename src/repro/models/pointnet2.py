@@ -8,11 +8,7 @@ Block shapes follow the original SSG configs (and paper Fig. 4a).
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
-from .common import (BlockSpec, PCNSpec, apply_head, feature_propagation,
-                     global_pool, init_model, run_blocks, total_report)
+from .common import BlockSpec, PCNSpec, init_model
 
 POINTNET2_C = PCNSpec(
     name="pointnet2_c",
@@ -51,6 +47,7 @@ POINTNET2_S = PCNSpec(
 
 
 def init(key, spec=POINTNET2_C):
+    """DEPRECATED shim: legacy dict params (use ``repro.engine.init``)."""
     return init_model(key, spec)
 
 
@@ -59,17 +56,11 @@ def apply(params, spec, xyz, feats, key, mode: str = "lpcn",
     """One cloud -> (logits, total WorkloadReport | None).
 
     cls:  (n_classes,) logits.   seg: (N, n_classes) per-point logits.
+
+    DEPRECATED shim: routes through ``repro.engine.apply_single``; prefer
+    the batched ``repro.engine.apply`` for anything beyond one cloud.
     """
-    cx, cf, reports, saved = run_blocks(params, spec, xyz, feats, key,
-                                        mode, isl_kw, with_report)
-    if spec.task == "cls":
-        g = global_pool(params, spec, cx, cf)
-        return apply_head(params, g), total_report(reports)
-    # segmentation: FP decoder back up the saved pyramid
-    f = cf
-    xyz_levels = [s[0] for s in saved] + [cx]
-    for lvl in range(len(saved) - 1, -1, -1):
-        src_xyz = xyz_levels[lvl + 1]
-        dst_xyz = xyz_levels[lvl]
-        f = feature_propagation(dst_xyz, src_xyz, f)
-    return apply_head(params, f), total_report(reports)
+    from repro import engine
+    return engine.apply_single(params, xyz, feats, key, spec=spec,
+                               mode=mode, isl_kw=isl_kw,
+                               with_report=with_report)

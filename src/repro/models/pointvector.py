@@ -8,13 +8,7 @@ exactly: CONV(A−B) = CONV(A) − CONV(B).
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
-from repro.core.mlp import apply_mlp, init_mlp
-from repro.core.pipeline import lpcn_block
-from .common import (BlockSpec, PCNSpec, apply_head, feature_propagation,
-                     lpcn_cfg_for, total_report)
+from .common import BlockSpec, PCNSpec
 
 POINTVECTOR_L = PCNSpec(
     name="pointvector_l",
@@ -33,38 +27,17 @@ POINTVECTOR_L = PCNSpec(
 
 
 def init(key, spec=POINTVECTOR_L, stem_dim: int = 64):
-    params = {"stem": None, "blocks": [], "vector": [], "head": None}
-    key, sub = jax.random.split(key)
-    params["stem"] = init_mlp(sub, [spec.in_feats, stem_dim], "per_layer")
-    f = stem_dim
-    for b in spec.blocks:
-        key, s1, s2 = jax.random.split(key, 3)
-        params["blocks"].append(
-            init_mlp(s1, [3 + f, *b.mlp_dims], spec.activation))
-        f = b.mlp_dims[-1]
-        # vector branch: per-center linear recombination post-pooling
-        params["vector"].append(init_mlp(s2, [f, f], "per_layer"))
-    key, sub = jax.random.split(key)
-    params["head"] = init_mlp(sub, [f, *spec.head_dims, spec.n_classes],
-                              "per_layer")
-    return params
+    """DEPRECATED shim: legacy dict params (use ``repro.engine.init``)."""
+    from repro import engine
+    from repro.engine.archs import _init_pointvector
+    return engine.to_legacy(_init_pointvector(key, spec, stem_dim),
+                            "pointvector")
 
 
 def apply(params, spec, xyz, feats, key, mode: str = "lpcn",
           isl_kw: dict | None = None, with_report: bool = False):
-    reports = []
-    f = apply_mlp(params["stem"], feats)
-    cur_xyz = xyz
-    xyz_levels = [xyz]
-    for b, mlp, vec in zip(spec.blocks, params["blocks"], params["vector"]):
-        key, sub = jax.random.split(key)
-        cfg = lpcn_cfg_for(b, mode, isl_kw or {})
-        out = lpcn_block(cfg, mlp, cur_xyz, f, sub, with_report=with_report)
-        f = jax.nn.relu(apply_mlp(vec, out.features))   # vector recombine
-        cur_xyz = out.center_xyz
-        xyz_levels.append(cur_xyz)
-        if with_report and out.report is not None:
-            reports.append(out.report)
-    for lvl in range(len(spec.blocks) - 1, -1, -1):
-        f = feature_propagation(xyz_levels[lvl], xyz_levels[lvl + 1], f)
-    return apply_head(params, f), total_report(reports)
+    """DEPRECATED shim: routes through ``repro.engine.apply_single``."""
+    from repro import engine
+    return engine.apply_single(params, xyz, feats, key, spec=spec,
+                               mode=mode, isl_kw=isl_kw,
+                               with_report=with_report)

@@ -1,0 +1,71 @@
+"""Minimal deterministic stand-in for ``hypothesis`` (fallback only).
+
+The property tests in this suite use a tiny slice of the hypothesis API:
+``@given(st.integers(...), ...)``, ``@settings(max_examples=, deadline=)``
+and the ``integers`` / ``tuples`` / ``lists`` strategies.  On environments
+without hypothesis installed we degrade to a fixed-seed sampler that runs
+each property over ``max_examples`` deterministic draws, so the whole
+suite still collects and the invariants are still exercised.
+
+Install the real thing (``pip install -e .[test]``) for shrinking and
+real randomized search.
+"""
+from __future__ import annotations
+
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+class strategies:  # mirrors `from hypothesis import strategies as st`
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: int(rng.integers(min_value,
+                                                      max_value + 1)))
+
+    @staticmethod
+    def tuples(*elems: _Strategy) -> _Strategy:
+        return _Strategy(lambda rng: tuple(e.draw(rng) for e in elems))
+
+    @staticmethod
+    def lists(elem: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elem.draw(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+
+def settings(max_examples: int = 10, deadline=None, **_ignored):
+    def deco(fn):
+        fn._hyp_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        def runner():
+            # read at call time: with `@settings` ABOVE `@given` the
+            # attribute lands on runner, below it lands on fn
+            n = getattr(runner, "_hyp_max_examples",
+                        getattr(fn, "_hyp_max_examples", 10))
+            rng = np.random.default_rng(0)
+            for _ in range(n):
+                fn(*(s.draw(rng) for s in strats))
+        # NOT functools.wraps: pytest would re-read the wrapped signature
+        # and treat the strategy arguments as fixtures.
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        return runner
+    return deco
+
+
+st = strategies

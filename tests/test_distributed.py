@@ -8,6 +8,9 @@ import pytest
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 
+pytest.importorskip(
+    "repro.dist", reason="repro.dist (sharding subsystem) not present")
+
 
 def _run(code: str, n_dev: int = 8):
     env = dict(os.environ)

@@ -5,6 +5,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytest.importorskip(
+    "repro.dist", reason="repro.dist (sharding subsystem) not present")
+
 from repro.configs import ARCH_IDS, get_config
 from repro.lm import model_zoo as zoo
 from repro.lm import steps as steps_mod

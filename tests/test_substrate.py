@@ -7,6 +7,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytest.importorskip(
+    "repro.dist", reason="repro.dist (sharding subsystem) not present")
+
 from repro.data.loader import TokenStream
 from repro.dist import compress
 from repro.dist.sharding import fit_spec, param_spec

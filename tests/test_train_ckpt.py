@@ -5,6 +5,9 @@ import shutil
 
 import pytest
 
+pytest.importorskip(
+    "repro.dist", reason="repro.dist (sharding subsystem) not present")
+
 from repro.launch import train as train_mod
 
 
