@@ -167,7 +167,9 @@ def bench_sensitivity(rows, quick: bool):
 
 def bench_engine(rows, quick: bool):
     """Wall-clock of the jitted batch-first engine on pointnet2_c:
-    compile once, then time steady-state batches per backend x mode."""
+    compile once, then time steady-state batches per backend x mode, on a
+    full batch AND a ragged (padded, n_valid-masked) batch — the delta is
+    the masking overhead later perf PRs track."""
     import jax
     import jax.numpy as jnp
     from functools import partial
@@ -185,21 +187,36 @@ def bench_engine(rows, quick: bool):
     params = engine.init(jax.random.PRNGKey(0), spec)
     rng = np.random.default_rng(0)
     xyz = jnp.asarray(np.stack([make_cloud(rng, n) for _ in range(batch)]))
+    # ragged config: clouds at 100% / ~75% / ~60% ... of n, cycled over
+    # the batch (padding content = repeated rows; fully masked)
+    ragged_sizes = [max(int(n * frac), 1) for frac, _ in
+                    zip((1.0, 0.75, 0.6, 0.9) * batch, range(batch))]
+    ragged_in = engine.Batch.make(
+        xyz, key=jax.random.PRNGKey(2),
+        n_valid=jnp.asarray(ragged_sizes, jnp.int32))
     batch_in = engine.Batch.make(xyz, key=jax.random.PRNGKey(1))
+    configs = [("full", batch_in, [n] * batch),
+               ("ragged", ragged_in, ragged_sizes)]
     for backend in ("reference", "pallas"):
         for mode in ("traditional", "lpcn"):
             f = jax.jit(partial(engine.apply, spec=spec, mode=mode,
                                 fc_backend=backend))
-            f(params, batch_in).block_until_ready()      # compile
-            reps = 2 if quick else 5
-            t0 = time.time()
-            for _ in range(reps):
-                out = f(params, batch_in)
-            out.block_until_ready()
-            us = (time.time() - t0) / reps * 1e6
-            _emit(rows, f"engine_{spec.name}_{mode}_{backend}", us,
-                  f"clouds_per_s={batch / (us / 1e6):.1f}",
-                  backend=backend, batch=batch, mode=mode, n_points=n)
+            for tag, b_in, sizes in configs:
+                f(params, b_in).block_until_ready()      # compile
+                reps = 2 if quick else 5
+                t0 = time.time()
+                for _ in range(reps):
+                    out = f(params, b_in)
+                out.block_until_ready()
+                us = (time.time() - t0) / reps * 1e6
+                _emit(rows, f"engine_{spec.name}_{mode}_{backend}_{tag}",
+                      us, f"clouds_per_s={batch / (us / 1e6):.1f}",
+                      backend=backend, batch=batch, mode=mode, n_points=n,
+                      ragged=(tag == "ragged"),
+                      n_valid={"sizes": sizes,
+                               "mean": float(np.mean(sizes)),
+                               "min": int(min(sizes)),
+                               "max": int(max(sizes))})
 
 
 SECTIONS = {

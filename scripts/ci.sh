@@ -1,5 +1,7 @@
 #!/usr/bin/env bash
-# Tier-1 verification + a ~30s engine smoke benchmark.
+# Tier-1 verification + a ~30s engine smoke benchmark + a padding-
+# equivalence smoke (the ragged-batch contract, see tests/test_padding.py
+# for the full oracle).
 #
 #   bash scripts/ci.sh
 set -euo pipefail
@@ -10,6 +12,33 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1 tests =="
 python -m pytest -x -q
 
+echo "== padding-equivalence smoke =="
+python - <<'EOF'
+import numpy as np, jax, jax.numpy as jnp
+from dataclasses import replace
+from repro import engine
+from repro.data.synthetic import make_cloud
+from repro.engine import Batch, BlockSpec
+from repro.models import pointnet2
+
+spec = replace(pointnet2.POINTNET2_C, blocks=(
+    BlockSpec(48, 8, (16, 32)), BlockSpec(16, 8, (32, 48))))
+params = engine.init(jax.random.PRNGKey(0), spec)
+rng = np.random.default_rng(0)
+clouds = [np.asarray(make_cloud(rng, n), np.float32) for n in (96, 72, 60)]
+keys = jax.random.split(jax.random.PRNGKey(1), 3)
+batch = Batch.from_clouds(clouds, key=keys)
+for mode in ("traditional", "lpcn"):
+    out = engine.apply(params, batch, spec=spec, mode=mode)
+    for i, c in enumerate(clouds):
+        ref, _ = engine.apply_single(params, jnp.asarray(c), jnp.asarray(c),
+                                     keys[i], spec=spec, mode=mode)
+        np.testing.assert_allclose(np.asarray(out[i]), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+print("padding smoke ok: padded ragged batch == per-cloud unpadded "
+      "(traditional + lpcn)")
+EOF
+
 echo "== engine smoke benchmark =="
 python -m benchmarks.run --quick --only engine --out results/engine_smoke.json
 python - <<'EOF'
@@ -18,6 +47,11 @@ rows = json.load(open("results/engine_smoke.json"))
 assert rows, "engine smoke produced no rows"
 for r in rows:
     assert "backend" in r and "batch" in r, r
+ragged = [r for r in rows if r.get("ragged")]
+assert ragged, "engine smoke missing the ragged-batch configuration"
+for r in ragged:
+    assert "n_valid" in r and "sizes" in r["n_valid"], r
 print(f"engine smoke ok: {len(rows)} rows "
-      f"(backends: {sorted({r['backend'] for r in rows})})")
+      f"(backends: {sorted({r['backend'] for r in rows})}, "
+      f"{len(ragged)} ragged)")
 EOF

@@ -44,15 +44,22 @@ class Schedule:
                 point in the island sequence (it *fills* its slot rather
                 than hitting it; FLOP-counted as a compute, not a reuse).
     subset_valid: (H, M) bool — island-list row is a real subset.
+    pos_live:   (H, M, K) bool — position holds a real gathered point (the
+                row is a real subset AND the neighbor slot was filled with
+                a valid point, i.e. its id >= 0).  Padding rows and
+                unfillable ragged-batch slots are False: they never occupy
+                cache slots, are never computed, and are excluded from
+                workload counters.
     """
     pool_ids: jnp.ndarray
     reuse_slot: jnp.ndarray
     is_first: jnp.ndarray
     subset_valid: jnp.ndarray
+    pos_live: jnp.ndarray
 
     def tree_flatten(self):
         return ((self.pool_ids, self.reuse_slot, self.is_first,
-                 self.subset_valid), ())
+                 self.subset_valid, self.pos_live), ())
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -116,4 +123,4 @@ def build_schedule(islands: Islands, nbr_idx: jnp.ndarray,
 
     pool, reuse, first = jax.vmap(per_island)(ids)
     return Schedule(pool_ids=pool, reuse_slot=reuse, is_first=first,
-                    subset_valid=valid_row)
+                    subset_valid=valid_row, pos_live=ids >= 0)

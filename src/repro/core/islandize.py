@@ -36,7 +36,7 @@ import jax.numpy as jnp
 
 from . import morton
 from .octree import adjacent_node_keys
-from .sampling import farthest_point_sampling
+from .sampling import farthest_point_sampling, index_uniform
 
 UINT32_SENTINEL = jnp.uint32(0xFFFFFFFF)
 
@@ -81,19 +81,38 @@ class Islands:
 def islandize(centers: jnp.ndarray, n_hubs: int, *, level: int = 4,
               capacity: int = 64, hub_select: str = "random",
               max_rounds: int = 32,
-              key: jax.Array | None = None) -> Islands:
+              key: jax.Array | None = None,
+              center_valid: jnp.ndarray | None = None,
+              n_hubs_valid=None) -> Islands:
     """Partition ``centers`` (S, 3) into ``n_hubs`` islands.
 
     ``capacity`` = max subsets per island (paper default: 32; we default to
     2x for headroom).  Returns :class:`Islands`.
+
+    Ragged-batch contract: ``center_valid`` (S,) bool marks padding
+    centers — they occupy no voxel, join no island and are never solo, so
+    islands, schedules and workload counters on a padded cloud are
+    identical to the unpadded run.  ``n_hubs_valid`` (traced count <=
+    ``n_hubs``) keeps hub slots beyond the valid-center budget inert
+    (no BFS seed, excluded from the nearest-hub fallback): a padded cloud
+    grows exactly as many islands as its unpadded twin, with the
+    remaining rows of ``members`` empty.  Hub selection is shape-stable
+    (per-index scores / masked FPS), so the first ``n_hubs_valid`` hubs
+    match the unpadded run's hubs one for one.
     """
     S = centers.shape[0]
     if key is None:
         key = jax.random.PRNGKey(0)
+    hub_ok = (None if n_hubs_valid is None
+              else jnp.arange(n_hubs) < n_hubs_valid)
 
     # ---- voxelization of the Sampled Octree at `level` -------------------
-    codes = morton.morton_codes(centers, morton.MAX_DEPTH)
+    clo, chi = morton.masked_bounds(centers, center_valid)
+    codes = morton.morton_codes(centers, morton.MAX_DEPTH, lo=clo, hi=chi)
     ckeys = morton.node_key(codes, level, morton.MAX_DEPTH)        # (S,)
+    if center_valid is not None:
+        # padding centers never occupy a voxel
+        ckeys = jnp.where(center_valid, ckeys, UINT32_SENTINEL)
 
     # unique occupied voxels, padded to S with UINT32_SENTINEL sentinels
     sort_keys = jnp.sort(ckeys)
@@ -109,9 +128,8 @@ def islandize(centers: jnp.ndarray, n_hubs: int, *, level: int = 4,
     side = 1 << level
     vxyz = morton.decode(jnp.where(ukeys == UINT32_SENTINEL, jnp.uint32(0),
                                    ukeys)).astype(jnp.float32)
-    lo = centers.min(0)
-    extent = jnp.maximum(jnp.max(centers.max(0) - lo), 1e-9)
-    vcenter = lo + (vxyz + 0.5) / side * extent                      # (S, 3)
+    extent = jnp.maximum(jnp.max(chi - clo), 1e-9)
+    vcenter = clo + (vxyz + 0.5) / side * extent                     # (S, 3)
 
     # 27-neighborhood voxel ids (exact match into ukeys, else -1)
     nkeys = adjacent_node_keys(ukeys, level, morton.MAX_DEPTH)       # (S,27)
@@ -122,18 +140,26 @@ def islandize(centers: jnp.ndarray, n_hubs: int, *, level: int = 4,
 
     # ---- Step 1: hub selection -------------------------------------------
     if hub_select == "fps":
-        hub_idx = farthest_point_sampling(centers, n_hubs)
-    else:  # random (paper default)
-        hub_idx = jax.random.choice(key, S, (n_hubs,), replace=False)
+        hub_idx = farthest_point_sampling(centers, n_hubs,
+                                          valid=center_valid)
+    else:  # random (paper default), via shape-stable per-index scores so
+        # a padded cloud selects the same hubs as its unpadded twin
+        scores = index_uniform(key, S)
+        if center_valid is not None:
+            scores = jnp.where(center_valid, scores, jnp.inf)
+        hub_idx = jnp.argsort(scores)[:n_hubs]
     hub_idx = hub_idx.astype(jnp.int32)                              # (H,)
     hub_xyz = centers[hub_idx]                                       # (H, 3)
     hub_vox = vox_of_center[hub_idx]                                 # (H,)
+    # inert hub slots scatter out of bounds (dropped)
+    hub_tgt = hub_vox if hub_ok is None else jnp.where(hub_ok, hub_vox, S)
 
     # ---- Step 2: multi-source BFS over occupied voxels ---------------
     INF = jnp.float32(jnp.inf)
     assign0 = jnp.full((S,), -1, jnp.int32)
     # seed: hub voxels (later hub wins ties on the same voxel — rare)
-    assign0 = assign0.at[hub_vox].set(jnp.arange(n_hubs, dtype=jnp.int32))
+    assign0 = assign0.at[hub_tgt].set(jnp.arange(n_hubs, dtype=jnp.int32),
+                                      mode="drop")
     round0 = jnp.where(assign0 >= 0, 0, jnp.iinfo(jnp.int32).max)
     valid_vox = ukeys != UINT32_SENTINEL
 
@@ -158,9 +184,11 @@ def islandize(centers: jnp.ndarray, n_hubs: int, *, level: int = 4,
     assign, vrnd = jax.lax.fori_loop(1, max_rounds + 1, bfs_round,
                                      (assign0, round0))
 
-    # fallback: disconnected voxels -> globally nearest hub
+    # fallback: disconnected voxels -> globally nearest (real) hub
     unassigned = (assign < 0) & valid_vox
     d_all = jnp.sum((vcenter[:, None, :] - hub_xyz[None, :, :]) ** 2, -1)
+    if hub_ok is not None:
+        d_all = jnp.where(hub_ok[None, :], d_all, INF)
     nearest = jnp.argmin(d_all, axis=-1).astype(jnp.int32)
     assign = jnp.where(unassigned, nearest, assign)
     vrnd = jnp.where(unassigned, max_rounds + 1, vrnd)
@@ -168,10 +196,15 @@ def islandize(centers: jnp.ndarray, n_hubs: int, *, level: int = 4,
     # ---- Step 3: per-center island id ------------------------------------
     island_of = assign[vox_of_center]                                # (S,)
     round_of = vrnd[vox_of_center].astype(jnp.int32)                 # (S,)
+    if center_valid is not None:
+        # padding centers route to the drop row of the member scatter
+        island_of = jnp.where(center_valid, island_of, n_hubs)
 
     # ---- Step 4: Island Lists (hub first, then round order) --------------
-    d_to_hub = jnp.sum((centers - hub_xyz[island_of]) ** 2, -1)
-    is_hub = jnp.zeros((S,), bool).at[hub_idx].set(True)
+    d_to_hub = jnp.sum((centers - hub_xyz[jnp.clip(island_of, 0, n_hubs - 1)]
+                        ) ** 2, -1)
+    hub_idx_tgt = hub_idx if hub_ok is None else jnp.where(hub_ok, hub_idx, S)
+    is_hub = jnp.zeros((S,), bool).at[hub_idx_tgt].set(True, mode="drop")
     # sort key: (island, hub-first, round, distance)
     ordr = jnp.lexsort((d_to_hub, round_of.astype(jnp.float32),
                         (~is_hub).astype(jnp.int32), island_of))
@@ -186,6 +219,9 @@ def islandize(centers: jnp.ndarray, n_hubs: int, *, level: int = 4,
                          jnp.clip(pos_in_isl, 0, M - 1)].set(
         ordr.astype(jnp.int32), mode="drop")
     solo = jnp.zeros((S,), bool).at[ordr].set(~fits)
+    if center_valid is not None:
+        # padding centers are neither members nor solo
+        solo &= center_valid
 
     return Islands(members=members, hub=hub_idx, solo=solo,
                    round_of=round_of)

@@ -44,6 +44,18 @@ def _compact1by2(x: jnp.ndarray) -> jnp.ndarray:
     return x
 
 
+def masked_bounds(points: jnp.ndarray, valid: jnp.ndarray | None = None):
+    """(lo, hi) bounding box over the rows where ``valid`` is True (bool
+    mask; None = all rows).  The padding-safe bbox every masked Morton
+    quantization shares: excluded rows cannot shift the box, so codes of
+    valid points are identical with and without padding."""
+    if valid is None:
+        return points.min(0), points.max(0)
+    ok = valid[:, None]
+    return (jnp.where(ok, points, jnp.inf).min(0),
+            jnp.where(ok, points, -jnp.inf).max(0))
+
+
 def quantize(points: jnp.ndarray, depth: int = MAX_DEPTH,
              lo: jnp.ndarray | None = None,
              hi: jnp.ndarray | None = None) -> jnp.ndarray:

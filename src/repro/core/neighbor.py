@@ -5,6 +5,16 @@ The four baseline accelerators differ only in this step (paper §VI-A):
   * approximate: EdgePC (Morton-window), Crescent (tree-approximate)
 All four are implemented so the Islandization Unit can be benchmarked as a
 plug-in on top of each, exactly as the paper does.
+
+Ragged-batch contract: every method takes an optional ``n_valid`` count
+and then never returns a padding row as a neighbor.  The accurate
+methods mark slots they cannot fill with valid points as ``-1`` (e.g.
+k > n_valid, or a ball query whose radius holds no valid point); the
+window/bucket approximations degrade to repeating valid candidates.
+Downstream (hub scheduling, both FC dataflows) treats ``-1`` as an empty
+slot that is excluded from caches, pools and workload counters.  Like the
+samplers, all methods are shape-stable: the result on a padded cloud with
+``n_valid = n`` equals the result on the unpadded (n, 3) prefix.
 """
 from __future__ import annotations
 
@@ -22,47 +32,84 @@ def pairwise_sqdist(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     return jnp.sum((a[:, None, :] - b[None, :, :]) ** 2, axis=-1)
 
 
-@partial(jax.jit, static_argnames=("k",))
-def knn_bruteforce(points: jnp.ndarray, centers: jnp.ndarray, k: int
-                   ) -> jnp.ndarray:
-    """Accurate KNN (PointACC's ranking kernel): (S, k) int32 indices into
-    ``points``, nearest first."""
+def masked_sqdist(centers: jnp.ndarray, points: jnp.ndarray,
+                  n_valid=None) -> jnp.ndarray:
+    """(S, N) squared distances with padding columns pinned to +inf so no
+    rank/top-k ever selects an invalid point."""
     d = pairwise_sqdist(centers, points)
-    _, idx = jax.lax.top_k(-d, k)
-    return idx.astype(jnp.int32)
+    if n_valid is None:
+        return d
+    col_ok = jnp.arange(points.shape[0])[None, :] < n_valid
+    return jnp.where(col_ok, d, jnp.inf)
+
+
+def masked_bounds(points: jnp.ndarray, n_valid=None):
+    """Bounding box of the valid prefix (padding rows excluded, so
+    arbitrary padding content cannot shift Morton quantization)."""
+    valid = None if n_valid is None else \
+        jnp.arange(points.shape[0]) < n_valid
+    return morton.masked_bounds(points, valid)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def knn_bruteforce(points: jnp.ndarray, centers: jnp.ndarray, k: int,
+                   n_valid=None) -> jnp.ndarray:
+    """Accurate KNN (PointACC's ranking kernel): (S, k) int32 indices into
+    ``points``, nearest first; ``-1`` for slots beyond the valid count."""
+    d = masked_sqdist(centers, points, n_valid)
+    neg, idx = jax.lax.top_k(-d, k)
+    idx = idx.astype(jnp.int32)
+    if n_valid is not None:
+        idx = jnp.where(jnp.isfinite(neg), idx, -1)
+    return idx
 
 
 @partial(jax.jit, static_argnames=("k",))
 def ball_query(points: jnp.ndarray, centers: jnp.ndarray, radius: float,
-               k: int) -> jnp.ndarray:
+               k: int, n_valid=None) -> jnp.ndarray:
     """PointNet++ Ball Query: first k points within ``radius``; slots past
     the in-radius count repeat the first in-radius point (reference
-    semantics of the original CUDA kernel)."""
+    semantics of the original CUDA kernel, including the empty-radius
+    fallback to point 0 when unmasked).  With ``n_valid``, padding rows
+    never count as in-radius and a center whose radius contains zero
+    *valid* points gets an all ``-1`` row (the FC pools zero-fill such
+    subsets)."""
     d = pairwise_sqdist(centers, points)  # (S, N)
     inb = d <= radius * radius
+    if n_valid is not None:
+        inb &= jnp.arange(points.shape[0])[None, :] < n_valid
     # rank in-radius points by original index order (first-k semantics)
     big = jnp.asarray(points.shape[0], jnp.int32)
     ranked = jnp.where(inb, jnp.arange(points.shape[0], dtype=jnp.int32)[None, :], big)
     idx = jnp.argsort(ranked, axis=-1)[:, :k].astype(jnp.int32)
     got = jnp.take_along_axis(ranked, idx, axis=-1) < big
     first = idx[:, :1]
+    if n_valid is not None:
+        first = jnp.where(got[:, :1], first, -1)
     return jnp.where(got, idx, first)
 
 
 @partial(jax.jit, static_argnames=("k", "window"))
 def knn_morton_window(tree: LinearOctree, points: jnp.ndarray,
-                      centers: jnp.ndarray, k: int, window: int = 128
-                      ) -> jnp.ndarray:
+                      centers: jnp.ndarray, k: int, window: int = 128,
+                      n_valid=None) -> jnp.ndarray:
     """EdgePC-style approximate KNN: candidates = a window of ``window``
     points around the center's position in Morton order; exact KNN within
-    the window.  (S, k) indices into ``points``."""
+    the window.  (S, k) indices into ``points``.
+
+    With ``n_valid`` the window slides over the valid prefix of a
+    valid-first tree (``octree.build(..., n_valid=...)`` sorts padding to
+    the back with sentinel codes), so candidates are always valid; a
+    short prefix degrades to repeated candidates, never to padding.
+    """
     n = tree.codes.shape[0]
-    ccodes = morton.morton_codes(centers, tree.depth,
-                                 lo=points.min(0), hi=points.max(0))
+    lo, hi = masked_bounds(points, n_valid)
+    ccodes = morton.morton_codes(centers, tree.depth, lo=lo, hi=hi)
     pos = jnp.searchsorted(tree.codes, ccodes)
-    start = jnp.clip(pos - window // 2, 0, max(n - window, 0))
+    count = n if n_valid is None else n_valid
+    start = jnp.clip(pos - window // 2, 0, jnp.maximum(count - window, 0))
     cand_sorted = start[:, None] + jnp.arange(window)[None, :]   # (S, W)
-    cand = tree.order[jnp.clip(cand_sorted, 0, n - 1)]           # (S, W)
+    cand = tree.order[jnp.clip(cand_sorted, 0, count - 1)]       # (S, W)
     cpts = points[cand]                                          # (S, W, 3)
     d = jnp.sum((cpts - centers[:, None, :]) ** 2, axis=-1)
     _, j = jax.lax.top_k(-d, k)
@@ -71,48 +118,67 @@ def knn_morton_window(tree: LinearOctree, points: jnp.ndarray,
 
 @partial(jax.jit, static_argnames=("k", "level"))
 def knn_octree(tree: LinearOctree, points: jnp.ndarray,
-               centers: jnp.ndarray, k: int, level: int = 6
-               ) -> jnp.ndarray:
+               centers: jnp.ndarray, k: int, level: int = 6,
+               n_valid=None) -> jnp.ndarray:
     """HgPCN-style accurate-with-narrowing KNN: candidates = the center's
     octree node + its 26 neighbors at ``level`` (guaranteed superset for
     radius < voxel side); exact rank within.  Falls back to global top-k
-    distance through masking (non-candidates get +inf)."""
-    ccodes = morton.morton_codes(centers, tree.depth,
-                                 lo=points.min(0), hi=points.max(0))
+    distance through masking (non-candidates get +inf).  Padding rows are
+    pinned to +inf in both the narrowed and fallback distance arrays;
+    unfillable slots return ``-1``."""
+    n = tree.codes.shape[0]
+    lo, hi = masked_bounds(points, n_valid)
+    ccodes = morton.morton_codes(centers, tree.depth, lo=lo, hi=hi)
     ckeys = morton.node_key(ccodes, level, tree.depth)
     from .octree import adjacent_node_keys
     nkeys = adjacent_node_keys(ckeys, level, tree.depth)         # (S, 27)
     shift = jnp.uint32(3 * (tree.depth - level))
     pkeys = tree.codes >> shift                                  # (N,)
-    # mask: point belongs to one of the 27 candidate nodes
+    # mask: point belongs to one of the 27 candidate nodes (padding rows
+    # carry sentinel codes whose shifted key exceeds every real node key)
     member = (pkeys[None, :, None] == nkeys[:, None, :]).any(-1)  # (S, N)
-    d = pairwise_sqdist(centers, points[tree.order])
-    d = jnp.where(member, d, jnp.inf)
-    # fall back to true distance where fewer than k candidates exist
+    d_true = pairwise_sqdist(centers, points[tree.order])
+    if n_valid is not None:
+        sorted_ok = jnp.arange(n)[None, :] < n_valid
+        member &= sorted_ok
+        d_true = jnp.where(sorted_ok, d_true, jnp.inf)
+    d = jnp.where(member, d_true, jnp.inf)
+    # fall back to true distance where fewer than k valid candidates exist
     enough = member.sum(-1, keepdims=True) >= k
-    d = jnp.where(enough, d, pairwise_sqdist(centers, points[tree.order]))
-    _, j = jax.lax.top_k(-d, k)
-    return tree.order[j].astype(jnp.int32)
+    d = jnp.where(enough, d, d_true)
+    neg, j = jax.lax.top_k(-d, k)
+    out = tree.order[j].astype(jnp.int32)
+    if n_valid is not None:
+        out = jnp.where(jnp.isfinite(neg), out, -1)
+    return out
 
 
 @partial(jax.jit, static_argnames=("k", "leaf"))
 def knn_kdtree_approx(points: jnp.ndarray, centers: jnp.ndarray, k: int,
-                      leaf: int = 64) -> jnp.ndarray:
+                      leaf: int = 64, n_valid=None) -> jnp.ndarray:
     """Crescent-style approximate KNN: median-split KD buckets (built by
     recursive argsort at trace time -> a static permutation), search only
-    the center's bucket and the adjacent bucket.  Approximate by design."""
+    the center's bucket and the adjacent bucket.  Approximate by design.
+    Padding rows sort to the back with sentinel codes and the buckets
+    cover only the valid prefix."""
     n = points.shape[0]
     # Build a balanced KD ordering with numpy-free lax: we emulate with
     # Morton order as the bucketization (Crescent's delta-approximation of
     # tree search maps to locality-preserving bucketing on TPU).
-    codes = morton.morton_codes(points)
+    lo, hi = masked_bounds(points, n_valid)
+    codes = morton.morton_codes(points, lo=lo, hi=hi)
+    if n_valid is not None:
+        codes = jnp.where(jnp.arange(n) < n_valid, codes,
+                          jnp.uint32(morton.SENTINEL))
     order = jnp.argsort(codes)
-    ccodes = morton.morton_codes(centers, lo=points.min(0), hi=points.max(0))
+    ccodes = morton.morton_codes(centers, lo=lo, hi=hi)
     pos = jnp.searchsorted(codes[order], ccodes)
-    bucket = jnp.clip(pos // leaf, 0, max(n // leaf - 1, 0))
-    start = jnp.clip(bucket * leaf - leaf // 2, 0, max(n - 2 * leaf, 0))
+    count = n if n_valid is None else n_valid
+    bucket = jnp.clip(pos // leaf, 0, jnp.maximum(count // leaf - 1, 0))
+    start = jnp.clip(bucket * leaf - leaf // 2, 0,
+                     jnp.maximum(count - 2 * leaf, 0))
     cand_sorted = start[:, None] + jnp.arange(2 * leaf)[None, :]
-    cand = order[jnp.clip(cand_sorted, 0, n - 1)]
+    cand = order[jnp.clip(cand_sorted, 0, count - 1)]
     d = jnp.sum((points[cand] - centers[:, None, :]) ** 2, axis=-1)
     _, j = jax.lax.top_k(-d, k)
     return jnp.take_along_axis(cand, j, axis=-1).astype(jnp.int32)

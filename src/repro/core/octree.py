@@ -73,9 +73,22 @@ class LinearOctree:
 
 
 def build(points: jnp.ndarray, depth: int = morton.MAX_DEPTH,
-          lo=None, hi=None) -> LinearOctree:
-    """Build the linear octree for a point cloud (N, 3)."""
+          lo=None, hi=None, n_valid=None) -> LinearOctree:
+    """Build the linear octree for a point cloud (N, 3).
+
+    ``n_valid`` marks rows >= n_valid as padding: their codes become the
+    uint32 sentinel (larger than any 30-bit Morton code), so the sorted
+    order is *valid-first* — ``order[:n_valid]`` equals the order built
+    on the unpadded prefix — and the quantization box is computed from
+    valid rows only (arbitrary padding content cannot shift it).
+    """
+    if n_valid is not None and lo is None and hi is None:
+        lo, hi = morton.masked_bounds(
+            points, jnp.arange(points.shape[0]) < n_valid)
     codes = morton.morton_codes(points, depth, lo, hi)
+    if n_valid is not None:
+        codes = jnp.where(jnp.arange(points.shape[0]) < n_valid, codes,
+                          jnp.uint32(morton.SENTINEL))
     order = jnp.argsort(codes)
     return LinearOctree(codes=codes[order], order=order.astype(jnp.int32),
                         depth=depth)

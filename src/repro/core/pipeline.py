@@ -74,8 +74,15 @@ class FCBackend:
     backend is pure jnp, the "pallas" backend (repro.engine.fc) routes the
     same dataflows through the kernels in repro.kernels.
 
-    dense(mlp, kind, xyz, feats, nbr_idx, centers_xyz, center_feats)
-    reuse(mlp, pool_in, slot, comp)
+    dense(mlp, kind, xyz, feats, nbr_idx, centers_xyz, center_feats,
+          nbr_valid)
+    reuse(mlp, pool_in, slot, comp, live)
+
+    Ragged-batch contract: ``nbr_valid`` (S, K) bool (None = all valid)
+    masks neighbor slots out of the max-pool (-> -BIG before the pool);
+    a subset with zero valid slots yields an all-zero feature row, never
+    -BIG/NaN.  ``reuse`` treats ``slot < 0`` as empty and additionally
+    ANDs the optional ``live`` (H, M, K) mask (cache-slot liveness).
     """
     name: str
     dense: Callable
@@ -83,16 +90,44 @@ class FCBackend:
 
 
 def data_structuring(cfg: LPCNConfig, xyz: jnp.ndarray,
-                     key: jax.Array) -> tuple[jnp.ndarray, jnp.ndarray]:
+                     key: jax.Array, n_valid=None
+                     ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """DS step: sample centers, gather neighbors (both registry-resolved).
-    Returns (center_idx (S,), nbr_idx (S, K))."""
-    tree = oct.build(xyz)
-    cidx = SAMPLERS.get(cfg.sampler)(
-        xyz, tree=tree, n_centers=cfg.n_centers, key=key)
+    Returns (center_idx (S,), nbr_idx (S, K)).
+
+    ``n_valid`` (traced count or None) marks rows >= n_valid of ``xyz``
+    as padding: the octree sorts them last, samplers never select them
+    and neighbor methods never return them (unfillable slots are -1).
+    The kwarg is forwarded to the registered components only when set;
+    note the batched engine always sets it (a traced per-cloud count), so
+    components registered for use through ``engine.apply`` must accept
+    ``n_valid`` — a clear TypeError points at the offender otherwise.
+    """
+    tree = oct.build(xyz, n_valid=n_valid)
+    kw = {} if n_valid is None else {"n_valid": n_valid}
+    try:
+        cidx = SAMPLERS.get(cfg.sampler)(
+            xyz, tree=tree, n_centers=cfg.n_centers, key=key, **kw)
+    except TypeError as e:
+        if kw and "n_valid" in str(e):
+            raise TypeError(
+                f"sampler {cfg.sampler!r} does not accept n_valid, which "
+                f"the batched engine always passes; add n_valid=None to "
+                f"its signature (see core.registry docstring)") from e
+        raise
     centers = xyz[cidx]
-    nbr = NEIGHBORS.get(cfg.neighbor)(
-        xyz, centers, tree=tree, k=cfg.k, radius=cfg.radius,
-        octree_level=cfg.octree_level)
+    try:
+        nbr = NEIGHBORS.get(cfg.neighbor)(
+            xyz, centers, tree=tree, k=cfg.k, radius=cfg.radius,
+            octree_level=cfg.octree_level, **kw)
+    except TypeError as e:
+        if kw and "n_valid" in str(e):
+            raise TypeError(
+                f"neighbor {cfg.neighbor!r} does not accept n_valid, "
+                f"which the batched engine always passes; add "
+                f"n_valid=None to its signature (see core.registry "
+                f"docstring)") from e
+        raise
     return cidx, nbr
 
 
@@ -122,16 +157,24 @@ def _subset_inputs(kind, xyz, feats, nbr_idx, centers_xyz, center_feats):
 
 
 def _dense_reference(mlp: MLP, kind, xyz, feats, nbr_idx, centers_xyz,
-                     center_feats=None):
-    """jnp oracle of the dense FC dataflow (kernels/gather_mlp)."""
-    x = _subset_inputs(kind, xyz, feats, nbr_idx, centers_xyz, center_feats)
-    return apply_mlp(mlp, x).max(axis=1)                  # (S, Fout)
+                     center_feats=None, nbr_valid=None):
+    """jnp oracle of the dense FC dataflow (kernels/gather_mlp).  Invalid
+    neighbor slots are -BIG before the pool; fully-empty subsets pool to
+    an all-zero row."""
+    ids = nbr_idx if nbr_valid is None else jnp.where(nbr_valid, nbr_idx, 0)
+    x = _subset_inputs(kind, xyz, feats, ids, centers_xyz, center_feats)
+    y = apply_mlp(mlp, x)                                 # (S, K, Fout)
+    if nbr_valid is None:
+        return y.max(axis=1)                              # (S, Fout)
+    pooled = jnp.where(nbr_valid[..., None], y, -BIG).max(axis=1)
+    return jnp.where(nbr_valid.any(axis=1)[:, None], pooled, 0.0)
 
 
-def _reuse_reference(mlp: MLP, pool_in, slot, comp):
+def _reuse_reference(mlp: MLP, pool_in, slot, comp, live=None):
     """jnp oracle of the reuse dataflow (kernels/hub_reuse): pool MLP,
     slot-gather, + comp, masked max over K.  -> (H, M, Fout), -BIG where a
-    subset has no cached position."""
+    subset has no cached position.  ``live`` (H, M, K) further masks
+    positions whose cache slot is not actually resident."""
     C = pool_in.shape[1]
     y = apply_mlp(mlp, pool_in)                           # (H, C, Fout)
     safe = jnp.clip(slot, 0, C - 1)
@@ -139,7 +182,8 @@ def _reuse_reference(mlp: MLP, pool_in, slot, comp):
         y, safe.reshape(y.shape[0], -1, 1), axis=1
     ).reshape(slot.shape + (y.shape[-1],))                # (H, M, K, Fout)
     g = g + comp[:, :, None, :]
-    g = jnp.where((slot >= 0)[..., None], g, -BIG)
+    ok = slot >= 0 if live is None else (slot >= 0) & live
+    g = jnp.where(ok[..., None], g, -BIG)
     return jnp.max(g, axis=2)
 
 
@@ -149,23 +193,28 @@ FC_BACKENDS.register("reference", FCBackend(
 
 def fc_traditional(mlp: MLP, xyz, feats, nbr_idx, centers_xyz,
                    center_feats=None, kind: str = "sa",
-                   backend: FCBackend | None = None):
-    """Baseline FC: full MLP on all S*K gathered points, then max-pool."""
+                   backend: FCBackend | None = None, nbr_valid=None):
+    """Baseline FC: full MLP on all S*K gathered points, then max-pool.
+    ``nbr_valid`` (S, K) bool masks ragged-batch -1 neighbor slots out of
+    the pool (empty subsets become zero rows)."""
     backend = backend or FC_BACKENDS.get("reference")
     pooled = backend.dense(mlp, kind, xyz, feats, nbr_idx, centers_xyz,
-                           center_feats)
+                           center_feats, nbr_valid)
     return post_pool_activation(mlp, pooled)
 
 
 def fc_lpcn(mlp: MLP, xyz, feats, nbr_idx, centers_xyz,
             islands: Islands, sched: Schedule, cfg: LPCNConfig,
-            center_feats=None, backend: FCBackend | None = None):
+            center_feats=None, backend: FCBackend | None = None,
+            nbr_valid=None):
     """Islandized FC: pool-MLP + compensated reuse + compact overflow.
 
     The two MXU-heavy dataflows — the dense path and the pool-MLP +
     reuse-gather — go through ``backend``; overflow/fallback bookkeeping
     is shared jnp.  Returns (S, Fout) center features — same contract as
-    fc_traditional.
+    fc_traditional.  Ragged-batch slots (``sched.pos_live`` False) are
+    neither reused nor computed; a subset with zero live positions pools
+    to a zero row.
     """
     backend = backend or get_fc_backend(cfg.fc_backend)
     S, K = nbr_idx.shape
@@ -190,14 +239,18 @@ def fc_lpcn(mlp: MLP, xyz, feats, nbr_idx, centers_xyz,
 
     # --- pool MLP + compensated reuse-gather + masked pool (backend) -----
     slot = sched.reuse_slot                               # (H, M, K)
-    reuse_pooled = backend.reuse(mlp, pool_in, slot, comp)   # (H, M, Fout)
     safe_slot = jnp.clip(slot, 0, C - 1)
-    reuse_ok = (slot >= 0) & jnp.take_along_axis(
+    slot_live = jnp.take_along_axis(
         pool_live, safe_slot.reshape(H, M * K), axis=1).reshape(H, M, K)
+    reuse_pooled = backend.reuse(mlp, pool_in, slot, comp,
+                                 slot_live)               # (H, M, Fout)
+    reuse_ok = (slot >= 0) & slot_live
 
     # --- compact overflow compute (never-cached positions) ---------------
     B = max(int(cfg.overflow_frac * M * K), K)            # overflow budget
-    need = (~reuse_ok) & sched.subset_valid[..., None]    # (H, M, K)
+    # only live positions (real subset row AND a valid gathered point)
+    # are ever computed — ragged -1 slots stay out of the overflow queue
+    need = (~reuse_ok) & sched.pos_live                   # (H, M, K)
 
     def island_overflow(need_h, ids_h, sub_vec_h):
         flatneed = need_h.reshape(-1)
@@ -210,7 +263,7 @@ def fc_lpcn(mlp: MLP, xyz, feats, nbr_idx, centers_xyz,
         x = _point_inputs(kind, xyz, feats, ids, sub_vec_h[row])
         return takepos, taken, x
 
-    ids_hmk = jnp.where(mem[..., None] >= 0, nbr_idx[mem], 0)
+    ids_hmk = jnp.where(sched.pos_live, nbr_idx[mem], 0)
     takepos, taken, ox = jax.vmap(island_overflow)(
         need, ids_hmk, sub_vec)                           # (H,B),(H,B),(H,B,fin)
     o_out = apply_mlp(mlp, ox)                            # (H, B, Fout)
@@ -224,6 +277,9 @@ def fc_lpcn(mlp: MLP, xyz, feats, nbr_idx, centers_xyz,
         jnp.where(taken[..., None], o_out, -BIG), mode="drop")
     over_pooled = over.reshape(H, M, K, Fout).max(axis=2)
     pooled = jnp.maximum(reuse_pooled, over_pooled)       # (H, M, Fout)
+    # a subset with no live position at all (e.g. an empty ball query on a
+    # nearly-empty ragged cloud) pools to a zero row, not -BIG
+    pooled = jnp.where(sched.pos_live.any(-1)[..., None], pooled, 0.0)
 
     # rows whose overflow exceeded the budget fall back to the dense path
     covered = jnp.zeros((H, M * K), bool)
@@ -242,7 +298,7 @@ def fc_lpcn(mlp: MLP, xyz, feats, nbr_idx, centers_xyz,
     fb = jnp.zeros((S,), bool).at[tgt.reshape(-1)].set(
         uncovered_row.reshape(-1), mode="drop") | solo
     h_dense = backend.dense(mlp, kind, xyz, feats, nbr_idx, centers_xyz,
-                            center_feats)
+                            center_feats, nbr_valid)
     out = jnp.where(fb[:, None], h_dense, out)
     return post_pool_activation(mlp, out)
 
@@ -256,27 +312,51 @@ class BlockOutput:
     schedule: Schedule | None
     nbr_idx: jnp.ndarray
     report: WorkloadReport | None = None
+    center_valid: jnp.ndarray | None = None   # (S,) bool; None = all valid
 
 
 def lpcn_block(cfg: LPCNConfig, mlp: MLP, xyz: jnp.ndarray,
                feats: jnp.ndarray, key: jax.Array,
-               with_report: bool = False) -> BlockOutput:
-    """One full building block on a single cloud (N,3)/(N,F)."""
+               with_report: bool = False, n_valid=None) -> BlockOutput:
+    """One full building block on a single cloud (N,3)/(N,F).
+
+    ``n_valid`` (traced count or None) marks rows >= n_valid as padding.
+    With it set, the block is numerically equivalent to running the
+    unpadded (n_valid, ·) prefix: padding is never sampled, gathered,
+    islandized, cached or pooled, its feature rows come back zeroed
+    (``center_valid`` marks them), and the workload report counts only
+    real work.
+    """
     kds, kisl = jax.random.split(key)
     backend = get_fc_backend(cfg.fc_backend)
-    cidx, nbr = data_structuring(cfg, xyz, kds)
+    cidx, nbr = data_structuring(cfg, xyz, kds, n_valid=n_valid)
     centers_xyz = xyz[cidx]
     center_feats = feats[cidx]
+    center_valid = None if n_valid is None else cidx < n_valid
+    nbr_valid = None if n_valid is None else nbr >= 0
     if cfg.mode == "traditional":
         f = fc_traditional(mlp, xyz, feats, nbr, centers_xyz, center_feats,
-                           cfg.block_kind, backend=backend)
-        return BlockOutput(cidx, centers_xyz, f, None, None, nbr)
+                           cfg.block_kind, backend=backend,
+                           nbr_valid=nbr_valid)
+        if center_valid is not None:
+            f = jnp.where(center_valid[:, None], f, 0.0)
+        return BlockOutput(cidx, centers_xyz, f, None, None, nbr,
+                           center_valid=center_valid)
     n_hubs = max(int(cidx.shape[0]) // cfg.island_size, 1)
+    if center_valid is None:
+        n_hubs_valid = None
+    else:
+        n_hubs_valid = jnp.maximum(
+            center_valid.sum() // cfg.island_size, 1)
     isl = islandize(centers_xyz, n_hubs, level=cfg.octree_level,
                     capacity=cfg.island_capacity,
-                    hub_select=cfg.hub_select, key=kisl)
+                    hub_select=cfg.hub_select, key=kisl,
+                    center_valid=center_valid, n_hubs_valid=n_hubs_valid)
     sched = build_schedule(isl, nbr, cfg.cache_capacity)
     f = fc_lpcn(mlp, xyz, feats, nbr, centers_xyz, isl, sched, cfg,
-                center_feats, backend=backend)
+                center_feats, backend=backend, nbr_valid=nbr_valid)
+    if center_valid is not None:
+        f = jnp.where(center_valid[:, None], f, 0.0)
     report = analyze(isl, sched, cfg.k) if with_report else None
-    return BlockOutput(cidx, centers_xyz, f, isl, sched, nbr, report)
+    return BlockOutput(cidx, centers_xyz, f, isl, sched, nbr, report,
+                       center_valid=center_valid)

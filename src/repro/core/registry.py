@@ -14,12 +14,22 @@ instead of an ``if/elif`` chain.  Third-party code extends the engine with
 
 Interfaces (all jit/vmap-safe, static shapes):
 
-  sampler(xyz, *, tree, n_centers, key)          -> (n_centers,) int32
+  sampler(xyz, *, tree, n_centers, key, n_valid)  -> (n_centers,) int32
   neighbor(xyz, centers, *, tree, k, radius,
-           octree_level)                          -> (S, K) int32
+           octree_level, n_valid)                 -> (S, K) int32
   fc backend: an :class:`FCBackend` (see core.pipeline) with ``dense`` and
   ``reuse`` callables — registered by ``core.pipeline`` ("reference") and
   ``repro.engine.fc`` ("pallas").
+
+Ragged-batch contract: ``n_valid`` (None or a traced count) marks rows
+>= n_valid of ``xyz`` as padding.  Samplers must never select them;
+neighbor methods must never return them (slots that cannot be filled
+with valid points are ``-1``, which the FC pools treat as empty).  The
+batched engine (``engine.apply`` and friends) always passes ``n_valid``
+— it is a traced per-cloud value there, even for full batches — so
+components used through it MUST accept the kwarg; only the eager
+per-cloud paths (``apply_single`` / ``lpcn_block`` without ``n_valid``)
+omit it, keeping pre-ragged third-party components usable there.
 """
 from __future__ import annotations
 
@@ -86,64 +96,66 @@ def register_fc_backend(name: str, backend=None):
 # ---- default samplers (paper Fig. 6) ---------------------------------------
 
 @register_sampler("fps")
-def _fps(xyz, *, tree, n_centers, key):
+def _fps(xyz, *, tree, n_centers, key, n_valid=None):
     del tree, key
-    return sampling.farthest_point_sampling(xyz, n_centers)
+    valid = None if n_valid is None else jnp.arange(xyz.shape[0]) < n_valid
+    return sampling.farthest_point_sampling(xyz, n_centers, valid=valid)
 
 
 @register_sampler("random")
-def _random(xyz, *, tree, n_centers, key):
+def _random(xyz, *, tree, n_centers, key, n_valid=None):
     del tree
-    return sampling.random_sampling(key, xyz.shape[0], n_centers)
+    return sampling.random_sampling(key, xyz.shape[0], n_centers, n_valid)
 
 
 @register_sampler("morton")
-def _morton(xyz, *, tree, n_centers, key):
+def _morton(xyz, *, tree, n_centers, key, n_valid=None):
     del key
-    return sampling.morton_strided_sampling(tree.order, n_centers)
+    return sampling.morton_strided_sampling(tree.order, n_centers, n_valid)
 
 
 @register_sampler("all")
-def _all(xyz, *, tree, n_centers, key):
-    """DGCNN: every point is a center."""
-    del tree, key
+def _all(xyz, *, tree, n_centers, key, n_valid=None):
+    """DGCNN: every point is a center.  Padding rows stay in the center
+    list (static shape) — the block masks them via ``center_valid``."""
+    del tree, key, n_valid
     return jnp.arange(xyz.shape[0], dtype=jnp.int32)
 
 
 # ---- default neighbor methods (the four DS baselines + ball query) ---------
 
 @register_neighbor("pointacc")
-def _pointacc(xyz, centers, *, tree, k, radius, octree_level):
+def _pointacc(xyz, centers, *, tree, k, radius, octree_level, n_valid=None):
     del tree, radius, octree_level
-    return nb.knn_bruteforce(xyz, centers, k)
+    return nb.knn_bruteforce(xyz, centers, k, n_valid)
 
 
 @register_neighbor("hgpcn")
-def _hgpcn(xyz, centers, *, tree, k, radius, octree_level):
+def _hgpcn(xyz, centers, *, tree, k, radius, octree_level, n_valid=None):
     del radius
     # density-adaptive narrowing level: expected >= k points within the
     # 27-voxel neighborhood (keeps HgPCN in the accurate class)
     lvl = max(1, min(octree_level,
                      int(math.log(max(xyz.shape[0] / k, 2), 8))))
-    return nb.knn_octree(tree, xyz, centers, k, level=lvl)
+    return nb.knn_octree(tree, xyz, centers, k, level=lvl, n_valid=n_valid)
 
 
 @register_neighbor("edgepc")
-def _edgepc(xyz, centers, *, tree, k, radius, octree_level):
+def _edgepc(xyz, centers, *, tree, k, radius, octree_level, n_valid=None):
     del radius, octree_level
-    return nb.knn_morton_window(tree, xyz, centers, k)
+    return nb.knn_morton_window(tree, xyz, centers, k, n_valid=n_valid)
 
 
 @register_neighbor("crescent")
-def _crescent(xyz, centers, *, tree, k, radius, octree_level):
+def _crescent(xyz, centers, *, tree, k, radius, octree_level, n_valid=None):
     del tree, radius, octree_level
-    return nb.knn_kdtree_approx(xyz, centers, k)
+    return nb.knn_kdtree_approx(xyz, centers, k, n_valid=n_valid)
 
 
 @register_neighbor("ball")
-def _ball(xyz, centers, *, tree, k, radius, octree_level):
+def _ball(xyz, centers, *, tree, k, radius, octree_level, n_valid=None):
     del tree, octree_level
-    return nb.ball_query(xyz, centers, radius, k)
+    return nb.ball_query(xyz, centers, radius, k, n_valid)
 
 
 def get_fc_backend(name: str):

@@ -4,6 +4,15 @@ Farthest Point Sampling is the standard PCN sampler (and the reason the
 default PCN processing order is spatially *distant*, which L-PCN's
 islandization undoes — paper §III-A).  Also provides random and grid
 (Morton-strided) sampling used by the approximate-DS baselines.
+
+Ragged-batch contract: every sampler takes an optional validity argument
+(``valid`` mask / ``n_valid`` count) and then selects **only valid
+points**.  Selection is *shape-stable*: running a sampler on a padded
+(N, 3) cloud with ``n_valid = n`` picks exactly the same indices as
+running it on the unpadded (n, 3) prefix — the property the engine's
+padded-batch == per-cloud oracle rests on.  Randomized selection uses
+:func:`index_uniform` (per-index scores independent of N) instead of
+``jax.random.choice`` (whose stream depends on the array length).
 """
 from __future__ import annotations
 
@@ -13,16 +22,38 @@ import jax
 import jax.numpy as jnp
 
 
+def index_uniform(key: jax.Array, n: int) -> jnp.ndarray:
+    """(n,) uniform scores where score i depends only on ``(key, i)``.
+
+    Unlike ``jax.random.uniform(key, (n,))`` — whose threefry counter
+    layout couples every element to the total length — the score of index
+    i here is identical for every array length, so masked top-k selection
+    over a padded array matches the same selection on the unpadded prefix
+    bit-for-bit.
+    """
+    keys = jax.vmap(partial(jax.random.fold_in, key))(jnp.arange(n))
+    return jax.vmap(lambda k: jax.random.uniform(k, ()))(keys)
+
+
 @partial(jax.jit, static_argnames=("n_samples",))
 def farthest_point_sampling(points: jnp.ndarray, n_samples: int,
-                            start: int = 0) -> jnp.ndarray:
+                            start: int = 0,
+                            valid: jnp.ndarray | None = None) -> jnp.ndarray:
     """FPS over (N, 3) points -> (n_samples,) int32 indices.
 
     O(N * n_samples), the classic iterative algorithm: keep per-point
     distance-to-selected-set; each round pick the argmax and relax.
+
+    ``valid`` (N,) bool masks padding rows out of the argmax (their
+    distance is pinned at −inf, so they can never be selected); the seed
+    ``start`` must index a valid point (0 always is — padding is a
+    suffix).  If more samples than valid points are requested the argmax
+    saturates and valid indices repeat.
     """
     n = points.shape[0]
     min_d = jnp.full((n,), jnp.inf, dtype=points.dtype)
+    if valid is not None:
+        min_d = jnp.where(valid, min_d, -jnp.inf)
 
     def body(i, state):
         min_d, idx, last = state
@@ -38,17 +69,36 @@ def farthest_point_sampling(points: jnp.ndarray, n_samples: int,
     return idx
 
 
-def random_sampling(key: jax.Array, n_points: int, n_samples: int
-                    ) -> jnp.ndarray:
-    """Uniform sample without replacement -> (n_samples,) int32 indices."""
-    return jax.random.choice(key, n_points, (n_samples,),
-                             replace=False).astype(jnp.int32)
+def random_sampling(key: jax.Array, n_points: int, n_samples: int,
+                    n_valid=None) -> jnp.ndarray:
+    """Uniform sample without replacement -> (n_samples,) int32 indices.
+
+    Implemented as top-``n_samples`` of per-index iid uniform scores
+    (:func:`index_uniform`), which is a uniform draw without replacement
+    AND shape-stable under padding: only indices < ``n_valid`` can be
+    picked, and the picks match the unpadded run.  If ``n_samples``
+    exceeds the valid count, the surplus slots repeat the first pick.
+    """
+    scores = index_uniform(key, n_points)
+    if n_valid is not None:
+        scores = jnp.where(jnp.arange(n_points) < n_valid, scores, jnp.inf)
+    pick = jnp.argsort(scores)[:n_samples].astype(jnp.int32)
+    if n_valid is not None:
+        ok = jnp.arange(n_samples) < n_valid
+        pick = jnp.where(ok, pick, pick[0])
+    return pick
 
 
-def morton_strided_sampling(sorted_order: jnp.ndarray, n_samples: int
-                            ) -> jnp.ndarray:
+def morton_strided_sampling(sorted_order: jnp.ndarray, n_samples: int,
+                            n_valid=None) -> jnp.ndarray:
     """EdgePC-style approximate sampler: stride the Morton-sorted order
-    (uniform coverage of space at near-zero cost)."""
+    (uniform coverage of space at near-zero cost).
+
+    With ``n_valid`` the stride runs over the valid prefix of a
+    valid-first order (see ``octree.build(..., n_valid=...)``, which
+    sorts padding rows to the back), never touching padding.
+    """
     n = sorted_order.shape[0]
-    pos = (jnp.arange(n_samples) * n) // n_samples
-    return sorted_order[pos].astype(jnp.int32)
+    count = n if n_valid is None else n_valid
+    pos = (jnp.arange(n_samples) * count) // n_samples
+    return sorted_order[jnp.clip(pos, 0, n - 1)].astype(jnp.int32)

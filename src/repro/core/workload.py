@@ -129,7 +129,9 @@ def analyze(islands: Islands, sched: Schedule, k: int) -> WorkloadReport:
     live = sched.reuse_slot >= 0        # (H, M, K) cached positions
     first = sched.is_first              # fills (computed once)
     valid = sched.subset_valid          # (H, M)
-    pos_valid = valid[..., None] & jnp.ones_like(first)
+    # positions holding a real point (excludes ragged-batch -1 slots, so
+    # padding never inflates fetch/eval counters)
+    pos_valid = valid[..., None] & sched.pos_live
 
     n_rows = valid.sum()
     n_solo = islands.solo.sum()

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.mlp import MLP, apply_mlp, init_mlp
+from repro.core.pipeline import BIG as _BIG
 from repro.core.pipeline import LPCNConfig, lpcn_block
 from repro.core.registry import Registry
 from repro.core.workload import WorkloadReport
@@ -33,7 +34,10 @@ ARCHS = Registry("arch")
 @dataclass(frozen=True)
 class Arch:
     """One architecture family: init(key, spec) -> PCNParams and
-    forward(params, spec, xyz, feats, key, ctx) -> (logits, report)."""
+    forward(params, spec, xyz, feats, key, ctx, n_valid) ->
+    (logits, report).  ``n_valid`` (traced count or None) marks rows
+    >= n_valid of the cloud as padding; forwards must mask them out of
+    sampling, pooling and per-point (seg) logits."""
     name: str
     init: callable
     forward: callable
@@ -75,40 +79,72 @@ def _total(reports):
     return WorkloadReport.sum_counters(reports)
 
 
-def feature_propagation(xyz_dst, xyz_src, f_src, k: int = 3):
+def feature_propagation(xyz_dst, xyz_src, f_src, k: int = 3,
+                        src_n_valid=None):
     """PointNet++ FP layer: inverse-distance 3-NN interpolation of source
-    center features onto destination points (segmentation upsampling)."""
+    center features onto destination points (segmentation upsampling).
+    ``src_n_valid`` masks padding source rows out of the 3-NN (their
+    distance is pinned to +inf, so their weight is exactly zero)."""
     d = jnp.sum((xyz_dst[:, None, :] - xyz_src[None, :, :]) ** 2, -1)
+    if src_n_valid is not None:
+        src_ok = jnp.arange(xyz_src.shape[0])[None, :] < src_n_valid
+        d = jnp.where(src_ok, d, jnp.inf)
     neg, idx = jax.lax.top_k(-d, k)
     w = 1.0 / jnp.maximum(-neg, 1e-8)
-    w = w / w.sum(-1, keepdims=True)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-12)
     return (f_src[idx] * w[..., None]).sum(axis=1)
 
 
+def _mask_rows(x, n_valid, fill=0.0):
+    """Zero (or ``fill``) rows >= n_valid of a per-point array."""
+    if n_valid is None:
+        return x
+    ok = jnp.arange(x.shape[0]) < n_valid
+    return jnp.where(ok[:, None], x, fill)
+
+
 def _run_blocks(params: PCNParams, spec: PCNSpec, xyz, feats, key,
-                ctx: EngineCtx):
-    """SA block stack on one cloud -> (cx, cf, reports, saved)."""
+                ctx: EngineCtx, n_valid=None):
+    """SA block stack on one cloud -> (cx, cf, reports, saved).
+
+    ``n_valid`` masks the first block's input padding.  Downsampling
+    samplers pick only valid points, so deeper blocks see fully-valid
+    center sets; the "all" sampler keeps every row, so padding (and its
+    count) propagates unchanged.
+    """
     reports, saved = [], []
     cur_xyz, cur_f = xyz, feats
+    cur_nv = n_valid
+    nv_levels = [n_valid]
     for b, mlp in zip(spec.blocks, params.blocks):
         key, sub = jax.random.split(key)
         out = lpcn_block(block_cfg(b, ctx), mlp, cur_xyz, cur_f, sub,
-                         with_report=ctx.with_report)
+                         with_report=ctx.with_report, n_valid=cur_nv)
         saved.append((cur_xyz, cur_f, out))
         cur_xyz, cur_f = out.center_xyz, out.features
+        cur_nv = cur_nv if b.sampler == "all" else None
+        nv_levels.append(cur_nv)
         if ctx.with_report and out.report is not None:
             reports.append(out.report)
-    return cur_xyz, cur_f, reports, saved
+    return cur_xyz, cur_f, reports, saved, nv_levels
 
 
-def _global_pool(params: PCNParams, center_xyz, center_f):
+def _global_pool(params: PCNParams, center_xyz, center_f, n_valid=None):
     """Final global SA: one subset containing every remaining center —
-    the paper's example of a no-overlap layer (processed traditionally)."""
+    the paper's example of a no-overlap layer (processed traditionally).
+    ``n_valid`` masks padding centers (possible when every block uses the
+    "all" sampler) out of the centroid and the global max."""
     if params.global_mlp is None:
-        return center_f.max(axis=0)
-    centroid = center_xyz.mean(axis=0)
+        return _mask_rows(center_f, n_valid, fill=-_BIG).max(axis=0)
+    if n_valid is None:
+        centroid = center_xyz.mean(axis=0)
+    else:
+        ok = (jnp.arange(center_xyz.shape[0]) < n_valid)[:, None]
+        centroid = jnp.where(ok, center_xyz, 0.0).sum(axis=0) \
+            / jnp.maximum(n_valid, 1)
     x = jnp.concatenate([center_xyz - centroid, center_f], axis=-1)
-    return apply_mlp(params.global_mlp, x).max(axis=0)
+    return _mask_rows(apply_mlp(params.global_mlp, x), n_valid,
+                      fill=-_BIG).max(axis=0)
 
 
 # ---- generic SA stack (PointNet++ and ad-hoc specs) -------------------------
@@ -134,17 +170,20 @@ def _init_pointnet2(key, spec: PCNSpec) -> PCNParams:
 
 
 def _fwd_pointnet2(params: PCNParams, spec: PCNSpec, xyz, feats, key,
-                   ctx: EngineCtx):
-    cx, cf, reports, saved = _run_blocks(params, spec, xyz, feats, key, ctx)
+                   ctx: EngineCtx, n_valid=None):
+    cx, cf, reports, saved, nv_levels = _run_blocks(params, spec, xyz,
+                                                    feats, key, ctx, n_valid)
     if spec.task == "cls":
-        g = _global_pool(params, cx, cf)
+        g = _global_pool(params, cx, cf, n_valid=nv_levels[-1])
         return apply_mlp(params.head, g), _total(reports)
     # segmentation: FP decoder back up the saved pyramid
     f = cf
     xyz_levels = [s[0] for s in saved] + [cx]
     for lvl in range(len(saved) - 1, -1, -1):
-        f = feature_propagation(xyz_levels[lvl], xyz_levels[lvl + 1], f)
-    return apply_mlp(params.head, f), _total(reports)
+        f = feature_propagation(xyz_levels[lvl], xyz_levels[lvl + 1], f,
+                                src_n_valid=nv_levels[lvl + 1])
+    # per-point logits of padding rows are zeroed (ragged contract)
+    return _mask_rows(apply_mlp(params.head, f), n_valid), _total(reports)
 
 
 ARCHS.register("pointnet2", Arch("pointnet2", _init_pointnet2,
@@ -166,25 +205,29 @@ def _init_dgcnn(key, spec: PCNSpec) -> PCNParams:
 
 
 def _fwd_dgcnn(params: PCNParams, spec: PCNSpec, xyz, feats, key,
-               ctx: EngineCtx):
-    """EdgeConv stack; every layer keeps all N points (no downsampling)."""
+               ctx: EngineCtx, n_valid=None):
+    """EdgeConv stack; every layer keeps all N points (no downsampling).
+    Padding rows stay in every layer (static shapes) but are excluded
+    from neighbor sets, islands and the global max-pool."""
     reports, per_layer = [], []
     f = feats
     for b, mlp in zip(spec.blocks, params.blocks):
         key, sub = jax.random.split(key)
         out = lpcn_block(block_cfg(b, ctx), mlp, xyz, f, sub,
-                         with_report=ctx.with_report)
+                         with_report=ctx.with_report, n_valid=n_valid)
         f = out.features
         per_layer.append(f)
         if ctx.with_report and out.report is not None:
             reports.append(out.report)
     cat = jnp.concatenate(per_layer, axis=-1)
+    gmax = _mask_rows(cat, n_valid, fill=-_BIG).max(axis=0)
     if spec.task == "cls":
-        return apply_mlp(params.head, cat.max(axis=0)), _total(reports)
-    g = cat.max(axis=0, keepdims=True)
+        return apply_mlp(params.head, gmax), _total(reports)
     per_point = jnp.concatenate(
-        [cat, jnp.broadcast_to(g, cat.shape[:1] + g.shape[1:])], axis=-1)
-    return apply_mlp(params.head, per_point), _total(reports)
+        [cat, jnp.broadcast_to(gmax[None], cat.shape[:1] + gmax.shape)],
+        axis=-1)
+    return _mask_rows(apply_mlp(params.head, per_point), n_valid), \
+        _total(reports)
 
 
 ARCHS.register("dgcnn", Arch("dgcnn", _init_dgcnn, _fwd_dgcnn))
@@ -209,30 +252,38 @@ def _init_pointnext(key, spec: PCNSpec, stem_dim: int = 32) -> PCNParams:
                      extras=tuple(extras))
 
 
-def _fwd_stem_stack(params, spec, xyz, feats, key, ctx, combine):
+def _fwd_stem_stack(params, spec, xyz, feats, key, ctx, combine,
+                    n_valid=None):
     """Shared stem + SA stack + FP decoder used by PointNeXt/PointVector;
     ``combine(extra_mlp, block_features)`` is the per-stage residual."""
     reports = []
     f = apply_mlp(params.stem, feats)
     cur_xyz = xyz
+    cur_nv = n_valid
     xyz_levels = [xyz]
+    nv_levels = [n_valid]
     for b, mlp, extra in zip(spec.blocks, params.blocks, params.extras):
         key, sub = jax.random.split(key)
         out = lpcn_block(block_cfg(b, ctx), mlp, cur_xyz, f, sub,
-                         with_report=ctx.with_report)
+                         with_report=ctx.with_report, n_valid=cur_nv)
         f = combine(extra, out.features)
         cur_xyz = out.center_xyz
+        cur_nv = cur_nv if b.sampler == "all" else None
         xyz_levels.append(cur_xyz)
+        nv_levels.append(cur_nv)
         if ctx.with_report and out.report is not None:
             reports.append(out.report)
     for lvl in range(len(spec.blocks) - 1, -1, -1):
-        f = feature_propagation(xyz_levels[lvl], xyz_levels[lvl + 1], f)
-    return apply_mlp(params.head, f), _total(reports)
+        f = feature_propagation(xyz_levels[lvl], xyz_levels[lvl + 1], f,
+                                src_n_valid=nv_levels[lvl + 1])
+    # per-point logits of padding rows are zeroed (ragged contract)
+    return _mask_rows(apply_mlp(params.head, f), n_valid), _total(reports)
 
 
-def _fwd_pointnext(params, spec, xyz, feats, key, ctx):
+def _fwd_pointnext(params, spec, xyz, feats, key, ctx, n_valid=None):
     return _fwd_stem_stack(params, spec, xyz, feats, key, ctx,
-                           lambda inv, h: h + apply_mlp(inv, h))
+                           lambda inv, h: h + apply_mlp(inv, h),
+                           n_valid=n_valid)
 
 
 ARCHS.register("pointnext", Arch("pointnext", _init_pointnext,
@@ -258,9 +309,10 @@ def _init_pointvector(key, spec: PCNSpec, stem_dim: int = 64) -> PCNParams:
                      extras=tuple(extras))
 
 
-def _fwd_pointvector(params, spec, xyz, feats, key, ctx):
+def _fwd_pointvector(params, spec, xyz, feats, key, ctx, n_valid=None):
     return _fwd_stem_stack(params, spec, xyz, feats, key, ctx,
-                           lambda vec, h: jax.nn.relu(apply_mlp(vec, h)))
+                           lambda vec, h: jax.nn.relu(apply_mlp(vec, h)),
+                           n_valid=n_valid)
 
 
 ARCHS.register("pointvector", Arch("pointvector", _init_pointvector,

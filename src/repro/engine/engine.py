@@ -43,16 +43,23 @@ def init(key: jax.Array, spec: PCNSpec) -> PCNParams:
 
 def apply_single(params, xyz, feats, key, *, spec: PCNSpec,
                  mode: str = "lpcn", fc_backend: str = "reference",
-                 isl_kw: dict | None = None, with_report: bool = False):
+                 isl_kw: dict | None = None, with_report: bool = False,
+                 n_valid=None):
     """One cloud (N, 3)/(N, F) -> (logits, WorkloadReport | None).
 
     cls: (n_classes,) logits.  seg: (N, n_classes) per-point logits.
     Accepts legacy param dicts as well as :class:`PCNParams`.
+
+    ``n_valid`` (traced count or None) marks rows >= n_valid as padding:
+    they are never sampled, gathered or pooled, and seg logits of padding
+    rows come back zeroed — the output over the first ``n_valid`` rows
+    equals running the unpadded (n_valid, ·) cloud.
     """
     params = from_legacy(params)
     ctx = EngineCtx.make(mode=mode, fc_backend=fc_backend, isl_kw=isl_kw,
                          with_report=with_report)
-    return get_arch(spec).forward(params, spec, xyz, feats, key, ctx)
+    return get_arch(spec).forward(params, spec, xyz, feats, key, ctx,
+                                  n_valid=n_valid)
 
 
 def apply(params, batch, *, spec: PCNSpec, mode: str = "lpcn",
@@ -61,17 +68,23 @@ def apply(params, batch, *, spec: PCNSpec, mode: str = "lpcn",
 
     ``batch`` is a :class:`Batch` or a raw (B, N, 3) array.  Returns
     (B, n_classes) for cls specs, (B, N, n_classes) for seg specs.
+
+    Ragged contract: ``batch.n_valid`` masks padding end to end, so
+    ``apply(batch)[i]`` (cls) / ``apply(batch)[i, :n_valid[i]]`` (seg)
+    equals :func:`apply_single` on cloud i's unpadded prefix; seg rows
+    >= n_valid[i] are zeros.
     """
     params = from_legacy(params)
     b = as_batch(batch)
 
-    def one(xyz, feats, key):
+    def one(xyz, feats, key, nv):
         logits, _ = apply_single(params, xyz, feats, key, spec=spec,
                                  mode=mode, fc_backend=fc_backend,
-                                 isl_kw=isl_kw, with_report=False)
+                                 isl_kw=isl_kw, with_report=False,
+                                 n_valid=nv)
         return logits
 
-    return jax.vmap(one)(b.xyz, b.feats, b.keys)
+    return jax.vmap(one)(b.xyz, b.feats, b.keys, b.n_valid)
 
 
 def apply_with_reports(params, batch, *, spec: PCNSpec, mode: str = "lpcn",
@@ -79,16 +92,18 @@ def apply_with_reports(params, batch, *, spec: PCNSpec, mode: str = "lpcn",
                        isl_kw: dict | None = None):
     """Like :func:`apply` but also returns the stacked per-cloud
     :class:`WorkloadReport` (counter fields have a leading (B,) axis);
-    None in traditional mode."""
+    None in traditional mode.  Padding rows contribute to no counter, so
+    the (B,) counters are identical with and without padding."""
     params = from_legacy(params)
     b = as_batch(batch)
 
-    def one(xyz, feats, key):
+    def one(xyz, feats, key, nv):
         return apply_single(params, xyz, feats, key, spec=spec, mode=mode,
                             fc_backend=fc_backend, isl_kw=isl_kw,
-                            with_report=(mode != "traditional"))
+                            with_report=(mode != "traditional"),
+                            n_valid=nv)
 
-    return jax.vmap(one)(b.xyz, b.feats, b.keys)
+    return jax.vmap(one)(b.xyz, b.feats, b.keys, b.n_valid)
 
 
 class PCNEngine:
@@ -96,7 +111,10 @@ class PCNEngine:
 
     The engine object is the serving handle: construct once, ``init`` (or
     load) params, then ``apply`` on padded batches — recompilation happens
-    only when the batch shape changes.
+    only when the batch shape changes.  Inputs are normalized through
+    :func:`as_batch` / :func:`from_legacy` *before* the cached jit, so
+    alternating raw (B, N, 3) arrays, :class:`Batch` objects and legacy
+    param dicts of the same shapes reuses one executable.
     """
 
     def __init__(self, spec: PCNSpec, *, mode: str = "lpcn",
@@ -118,13 +136,14 @@ class PCNEngine:
         return self._japply(from_legacy(params), as_batch(batch))
 
     def apply_single(self, params, xyz, feats=None, key=None, *,
-                     with_report: bool = False):
+                     with_report: bool = False, n_valid=None):
         """Eager single-cloud path (keeps the legacy per-cloud contract)."""
         feats = xyz if feats is None else feats
         key = jax.random.PRNGKey(0) if key is None else key
         return apply_single(params, xyz, feats, key, spec=self.spec,
                             mode=self.mode, fc_backend=self.fc_backend,
-                            isl_kw=self.isl_kw, with_report=with_report)
+                            isl_kw=self.isl_kw, with_report=with_report,
+                            n_valid=n_valid)
 
     def __repr__(self):
         return (f"PCNEngine({self.spec.name}, mode={self.mode!r}, "

@@ -82,34 +82,37 @@ def _with_dummy_lane(raw, w1):
 
 
 def _dense_pallas(mlp: MLP, kind, xyz, feats, nbr_idx, centers_xyz,
-                  center_feats=None):
-    """Dense FC through the fused gather_mlp kernel.  -> (S, Fout)."""
+                  center_feats=None, nbr_valid=None):
+    """Dense FC through the fused gather_mlp kernel.  -> (S, Fout).
+    ``nbr_valid`` (S, K) masks ragged -1 slots inside the kernel's
+    max-pool (empty subsets come back zero-filled)."""
     prologue, (w1, b1, w2, b2) = two_layer_form(mlp)
+    ids = nbr_idx if nbr_valid is None else jnp.where(nbr_valid, nbr_idx, 0)
     if prologue is None:
         if kind == "sa":
             # kernel computes [xyz_j − c, f_j]: raw carries the gathered
             # lanes, the center is subtracted from the leading 3 in-kernel
-            raw = jnp.concatenate([xyz[nbr_idx], feats[nbr_idx]], axis=-1)
+            raw = jnp.concatenate([xyz[ids], feats[ids]], axis=-1)
             ctr = centers_xyz
         else:
             # edge input is [f_j − c, c]: write it as a subtract over all
             # 2F lanes of [f_j, 0] with the center vector [c, −c]
-            fj = feats[nbr_idx]
+            fj = feats[ids]
             raw = jnp.concatenate([fj, jnp.zeros_like(fj)], axis=-1)
             cv = center_feats
             ctr = jnp.concatenate([cv, -cv], axis=-1)
     else:
-        x = _subset_inputs(kind, xyz, feats, nbr_idx, centers_xyz,
+        x = _subset_inputs(kind, xyz, feats, ids, centers_xyz,
                            center_feats)
         raw, ctr, w1 = _with_dummy_lane(prologue(x), w1)
-    return gather_mlp(raw, ctr, w1, b1, w2, b2)
+    return gather_mlp(raw, ctr, w1, b1, w2, b2, mask=nbr_valid)
 
 
-def _reuse_pallas(mlp: MLP, pool_in, slot, comp):
+def _reuse_pallas(mlp: MLP, pool_in, slot, comp, live=None):
     """Reuse dataflow through the hub_reuse kernel.  -> (H, M, Fout)."""
     prologue, (w1, b1, w2, b2) = two_layer_form(mlp)
     x = pool_in if prologue is None else prologue(pool_in)
-    return hub_reuse(x, slot, comp, w1, b1, w2, b2)
+    return hub_reuse(x, slot, comp, w1, b1, w2, b2, live=live)
 
 
 FC_BACKENDS.register("pallas", FCBackend(

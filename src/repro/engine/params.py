@@ -85,12 +85,21 @@ class Batch:
     """A padded batch of point clouds.
 
     xyz:     (B, N, 3) coordinates; clouds shorter than N are padded by
-             repeating their last point (padded rows take part in DS/FC —
-             a bounded approximation; mask per-point outputs by n_valid).
+             repeating their last point (any finite padding works — it is
+             fully masked; repeat-last keeps values well-conditioned).
     feats:   (B, N, F) per-point input features (xyz for plain geometry).
     keys:    (B, 2) uint32 — one PRNG key per cloud (drives random
-             sampling / hub selection independently per cloud).
+             sampling / hub selection independently per cloud).  Typed
+             keys are canonicalized to raw uint32 key data by ``make`` so
+             the pytree signature (and the engine's jit cache) is stable.
     n_valid: (B,) int32 — true point count per cloud before padding.
+
+    Ragged contract (enforced end to end by the engine): rows >= n_valid
+    are padding — never sampled as centers, never returned by neighbor
+    search, never cached/pooled/islandized, excluded from every
+    WorkloadReport counter, and their per-point (seg) logits are zeroed.
+    ``engine.apply(batch)[i]`` equals ``engine.apply_single`` on cloud
+    i's unpadded prefix (rows [:n_valid[i]] for seg outputs).
     """
     xyz: jnp.ndarray
     feats: jnp.ndarray
@@ -122,6 +131,10 @@ class Batch:
         typed = jax.dtypes.issubdtype(key.dtype, jax.dtypes.prng_key)
         single = key.ndim == (0 if typed else 1)
         keys = jax.random.split(key, b) if single else key
+        if jax.dtypes.issubdtype(keys.dtype, jax.dtypes.prng_key):
+            # canonicalize typed keys -> raw uint32 so a Batch always has
+            # the same pytree signature (no retrace vs raw-array callers)
+            keys = jax.random.key_data(keys)
         if n_valid is None:
             n_valid = jnp.full((b,), n, jnp.int32)
         return Batch(xyz=xyz, feats=feats, keys=keys,

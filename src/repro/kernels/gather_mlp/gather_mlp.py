@@ -25,47 +25,82 @@ from jax.experimental import pallas as pl
 BIG = 3.4e38
 
 
-def _gather_mlp_kernel(raw_ref, ctr_ref, w1_ref, b1_ref, w2_ref, b2_ref,
-                       out_ref, *, dc: int):
-    ts, k, d = raw_ref.shape
-    raw = raw_ref[...]                                    # (TS, K, D)
-    ctr = ctr_ref[...]                                    # (TS, Dc)
+def _mlp_pool(raw, ctr, w1, b1, w2, b2, dc: int):
+    """Shared kernel body: normalize → 2-layer MLP.  -> (TS, K, F)."""
+    ts, k, d = raw.shape
     rel = raw[..., :dc] - ctr[:, None, :]
     x = jnp.concatenate([rel, raw[..., dc:]], axis=-1)    # (TS, K, D)
     x2 = x.reshape(ts * k, d)
-    h = jax.lax.dot_general(x2, w1_ref[...], (((1,), (0,)), ((), ())),
+    h = jax.lax.dot_general(x2, w1, (((1,), (0,)), ((), ())),
                             preferred_element_type=jnp.float32)
-    h = jax.nn.relu(h + b1_ref[...][None, :])
-    y = jax.lax.dot_general(h, w2_ref[...], (((1,), (0,)), ((), ())),
+    h = jax.nn.relu(h + b1[None, :])
+    y = jax.lax.dot_general(h, w2, (((1,), (0,)), ((), ())),
                             preferred_element_type=jnp.float32)
-    y = y + b2_ref[...][None, :]
-    out_ref[...] = jnp.max(y.reshape(ts, k, -1), axis=1).astype(
-        out_ref.dtype)
+    y = y + b2[None, :]
+    return y.reshape(ts, k, -1)
+
+
+def _gather_mlp_kernel(raw_ref, ctr_ref, w1_ref, b1_ref, w2_ref, b2_ref,
+                       out_ref, *, dc: int):
+    y = _mlp_pool(raw_ref[...], ctr_ref[...], w1_ref[...], b1_ref[...],
+                  w2_ref[...], b2_ref[...], dc)
+    out_ref[...] = jnp.max(y, axis=1).astype(out_ref.dtype)
+
+
+def _gather_mlp_masked_kernel(raw_ref, ctr_ref, mask_ref, w1_ref, b1_ref,
+                              w2_ref, b2_ref, out_ref, *, dc: int):
+    """Masked variant (ragged batches): invalid (subset, k) positions go
+    to -BIG before the pool; subsets with zero valid positions zero-fill
+    instead of returning -BIG."""
+    y = _mlp_pool(raw_ref[...], ctr_ref[...], w1_ref[...], b1_ref[...],
+                  w2_ref[...], b2_ref[...], dc)
+    live = mask_ref[...] != 0                             # (TS, K)
+    pooled = jnp.max(jnp.where(live[..., None], y, -BIG), axis=1)
+    pooled = jnp.where(live.any(axis=1)[:, None], pooled, 0.0)
+    out_ref[...] = pooled.astype(out_ref.dtype)
 
 
 def gather_mlp_pallas(raw: jnp.ndarray, centers: jnp.ndarray,
                       w1, b1, w2, b2, ts: int = 8,
-                      interpret: bool = False):
+                      interpret: bool = False, mask=None):
     """raw (S, K, D) gathered inputs; centers (S, Dc) subtracted from the
-    leading Dc lanes; two-layer MLP; max over K.  -> (S, F_out)."""
+    leading Dc lanes; two-layer MLP; max over K.  -> (S, F_out).
+
+    ``mask`` (S, K) int32 (nonzero = live) excludes padding positions
+    from the pool; rows with no live position return zeros."""
     s, k, d = raw.shape
     dc = centers.shape[1]
     fout = w2.shape[1]
     hdim = w1.shape[1]
     ts = min(ts, s)
-    kern = functools.partial(_gather_mlp_kernel, dc=dc)
+    weight_specs = [
+        pl.BlockSpec((d, hdim), lambda i: (0, 0)),
+        pl.BlockSpec((hdim,), lambda i: (0,)),
+        pl.BlockSpec((hdim, fout), lambda i: (0, 0)),
+        pl.BlockSpec((fout,), lambda i: (0,)),
+    ]
+    if mask is None:
+        kern = functools.partial(_gather_mlp_kernel, dc=dc)
+        in_specs = [
+            pl.BlockSpec((ts, k, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((ts, dc), lambda i: (i, 0)),
+            *weight_specs,
+        ]
+        args = (raw, centers, w1, b1, w2, b2)
+    else:
+        kern = functools.partial(_gather_mlp_masked_kernel, dc=dc)
+        in_specs = [
+            pl.BlockSpec((ts, k, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((ts, dc), lambda i: (i, 0)),
+            pl.BlockSpec((ts, k), lambda i: (i, 0)),
+            *weight_specs,
+        ]
+        args = (raw, centers, mask.astype(jnp.int32), w1, b1, w2, b2)
     return pl.pallas_call(
         kern,
         grid=(pl.cdiv(s, ts),),
-        in_specs=[
-            pl.BlockSpec((ts, k, d), lambda i: (i, 0, 0)),
-            pl.BlockSpec((ts, dc), lambda i: (i, 0)),
-            pl.BlockSpec((d, hdim), lambda i: (0, 0)),
-            pl.BlockSpec((hdim,), lambda i: (0,)),
-            pl.BlockSpec((hdim, fout), lambda i: (0, 0)),
-            pl.BlockSpec((fout,), lambda i: (0,)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((ts, fout), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((s, fout), raw.dtype),
         interpret=interpret,
-    )(raw, centers, w1, b1, w2, b2)
+    )(*args)

@@ -11,11 +11,14 @@ from .ref import gather_mlp_ref
 
 @partial(jax.jit, static_argnames=("ts", "interpret"))
 def gather_mlp(raw, centers, w1, b1, w2, b2, ts: int = 8,
-               interpret: bool | None = None):
+               interpret: bool | None = None, mask=None):
+    """Fused normalize → MLP → max-pool.  ``mask`` (S, K) bool/int (None =
+    all live) excludes ragged padding positions from the pool; rows with
+    zero live positions return zeros instead of -BIG."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     return gather_mlp_pallas(raw, centers, w1, b1, w2, b2, ts=ts,
-                             interpret=interpret)
+                             interpret=interpret, mask=mask)
 
 
 __all__ = ["gather_mlp", "gather_mlp_ref"]

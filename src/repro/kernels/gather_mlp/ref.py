@@ -4,9 +4,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+BIG = 3.4e38
 
-def gather_mlp_ref(raw, centers, w1, b1, w2, b2):
-    """raw (S,K,D), centers (S,Dc) -> (S, F_out)."""
+
+def gather_mlp_ref(raw, centers, w1, b1, w2, b2, mask=None):
+    """raw (S,K,D), centers (S,Dc) -> (S, F_out).  ``mask`` (S, K) marks
+    live positions (None = all); empty rows zero-fill."""
     dc = centers.shape[1]
     rel = raw[..., :dc] - centers[:, None, :]
     x = jnp.concatenate([rel, raw[..., dc:]], axis=-1)
@@ -15,4 +18,9 @@ def gather_mlp_ref(raw, centers, w1, b1, w2, b2):
                    preferred_element_type=jnp.float32) + b1)
     y = jnp.einsum("skh,hf->skf", h, w2,
                    preferred_element_type=jnp.float32) + b2
-    return jnp.max(y, axis=1).astype(raw.dtype)
+    if mask is None:
+        return jnp.max(y, axis=1).astype(raw.dtype)
+    live = mask != 0
+    pooled = jnp.max(jnp.where(live[..., None], y, -BIG), axis=1)
+    pooled = jnp.where(live.any(axis=1)[:, None], pooled, 0.0)
+    return pooled.astype(raw.dtype)

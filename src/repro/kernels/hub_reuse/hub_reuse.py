@@ -31,10 +31,10 @@ from jax.experimental import pallas as pl
 BIG = 3.4e38
 
 
-def _hub_reuse_kernel(pool_ref, slot_ref, comp_ref, w1_ref, b1_ref,
-                      w2_ref, b2_ref, out_ref):
-    """pool_ref (1, C, D) hub-relative inputs; slot_ref (1, M, K) int32;
-    comp_ref (1, M, F); out_ref (1, M, F)."""
+def _reuse_gather(pool_ref, slot_ref, comp_ref, w1_ref, b1_ref, w2_ref,
+                  b2_ref):
+    """Shared kernel body: pool MLP + one-hot reuse-gather + Δ-comp.
+    Returns (gathered (M, K, F), slot (M*K,))."""
     _, c, d = pool_ref.shape
     _, m, k = slot_ref.shape
     pool = pool_ref[...].reshape(c, d)
@@ -53,34 +53,72 @@ def _hub_reuse_kernel(pool_ref, slot_ref, comp_ref, w1_ref, b1_ref,
         preferred_element_type=jnp.float32)            # (M*K, F) MXU
     gathered = gathered.reshape(m, k, -1)
     gathered = gathered + comp_ref[...].reshape(m, 1, -1)
+    return gathered, slot
+
+
+def _hub_reuse_kernel(pool_ref, slot_ref, comp_ref, w1_ref, b1_ref,
+                      w2_ref, b2_ref, out_ref):
+    """pool_ref (1, C, D) hub-relative inputs; slot_ref (1, M, K) int32;
+    comp_ref (1, M, F); out_ref (1, M, F)."""
+    _, m, k = slot_ref.shape
+    gathered, slot = _reuse_gather(pool_ref, slot_ref, comp_ref, w1_ref,
+                                   b1_ref, w2_ref, b2_ref)
     live = (slot >= 0).reshape(m, k, 1)
+    gathered = jnp.where(live, gathered, -BIG)
+    out_ref[...] = jnp.max(gathered, axis=1)[None].astype(out_ref.dtype)
+
+
+def _hub_reuse_masked_kernel(pool_ref, slot_ref, comp_ref, live_ref,
+                             w1_ref, b1_ref, w2_ref, b2_ref, out_ref):
+    """Masked variant (ragged batches): a position is live only if its
+    slot is assigned AND the extra mask says the cache entry is resident."""
+    _, m, k = slot_ref.shape
+    gathered, slot = _reuse_gather(pool_ref, slot_ref, comp_ref, w1_ref,
+                                   b1_ref, w2_ref, b2_ref)
+    live = ((slot >= 0) & (live_ref[...].reshape(m * k) != 0)
+            ).reshape(m, k, 1)
     gathered = jnp.where(live, gathered, -BIG)
     out_ref[...] = jnp.max(gathered, axis=1)[None].astype(out_ref.dtype)
 
 
 def hub_reuse_pallas(pool_in: jnp.ndarray, slot: jnp.ndarray,
                      comp: jnp.ndarray, w1, b1, w2, b2,
-                     interpret: bool = False):
+                     interpret: bool = False, live=None):
     """pool_in (H, C, D); slot (H, M, K) int32 (-1 = not cached);
     comp (H, M, F) per-subset delta compensation.  -> (H, M, F) pooled
-    reuse partials (−BIG where a subset has no cached positions)."""
+    reuse partials (−BIG where a subset has no cached positions).
+    ``live`` (H, M, K) int32 (nonzero = cache entry resident) composes
+    with ``slot >= 0``."""
     hn, c, d = pool_in.shape
     _, m, k = slot.shape
     hdim = w1.shape[1]
     fout = w2.shape[1]
+    weight_specs = [
+        pl.BlockSpec((d, hdim), lambda i: (0, 0)),
+        pl.BlockSpec((hdim,), lambda i: (0,)),
+        pl.BlockSpec((hdim, fout), lambda i: (0, 0)),
+        pl.BlockSpec((fout,), lambda i: (0,)),
+    ]
+    data_specs = [
+        pl.BlockSpec((1, c, d), lambda i: (i, 0, 0)),
+        pl.BlockSpec((1, m, k), lambda i: (i, 0, 0)),
+        pl.BlockSpec((1, m, fout), lambda i: (i, 0, 0)),
+    ]
+    if live is None:
+        kern = _hub_reuse_kernel
+        in_specs = data_specs + weight_specs
+        args = (pool_in, slot, comp, w1, b1, w2, b2)
+    else:
+        kern = _hub_reuse_masked_kernel
+        in_specs = (data_specs
+                    + [pl.BlockSpec((1, m, k), lambda i: (i, 0, 0))]
+                    + weight_specs)
+        args = (pool_in, slot, comp, live.astype(jnp.int32), w1, b1, w2, b2)
     return pl.pallas_call(
-        _hub_reuse_kernel,
+        kern,
         grid=(hn,),
-        in_specs=[
-            pl.BlockSpec((1, c, d), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, m, k), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, m, fout), lambda i: (i, 0, 0)),
-            pl.BlockSpec((d, hdim), lambda i: (0, 0)),
-            pl.BlockSpec((hdim,), lambda i: (0,)),
-            pl.BlockSpec((hdim, fout), lambda i: (0, 0)),
-            pl.BlockSpec((fout,), lambda i: (0,)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, m, fout), lambda i: (i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((hn, m, fout), pool_in.dtype),
         interpret=interpret,
-    )(pool_in, slot, comp, w1, b1, w2, b2)
+    )(*args)

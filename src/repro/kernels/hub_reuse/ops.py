@@ -11,11 +11,14 @@ from .ref import hub_reuse_ref
 
 @partial(jax.jit, static_argnames=("interpret",))
 def hub_reuse(pool_in, slot, comp, w1, b1, w2, b2,
-              interpret: bool | None = None):
+              interpret: bool | None = None, live=None):
+    """Pool-MLP + compensated reuse-gather + masked max-pool.  ``live``
+    (H, M, K) bool/int (None = all resident) additionally masks positions
+    whose cache entry is not actually resident (ragged batches)."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     return hub_reuse_pallas(pool_in, slot, comp, w1, b1, w2, b2,
-                            interpret=interpret)
+                            interpret=interpret, live=live)
 
 
 __all__ = ["hub_reuse", "hub_reuse_ref"]

@@ -7,8 +7,9 @@ import jax.numpy as jnp
 BIG = 3.4e38
 
 
-def hub_reuse_ref(pool_in, slot, comp, w1, b1, w2, b2):
-    """pool_in (H,C,D), slot (H,M,K), comp (H,M,F) -> (H,M,F)."""
+def hub_reuse_ref(pool_in, slot, comp, w1, b1, w2, b2, live=None):
+    """pool_in (H,C,D), slot (H,M,K), comp (H,M,F) -> (H,M,F).  ``live``
+    (H,M,K) additionally masks non-resident cache entries (None = all)."""
     h = jax.nn.relu(
         jnp.einsum("hcd,de->hce", pool_in, w1,
                    preferred_element_type=jnp.float32) + b1)
@@ -20,5 +21,6 @@ def hub_reuse_ref(pool_in, slot, comp, w1, b1, w2, b2):
         y, safe.reshape(y.shape[0], -1, 1), axis=1
     ).reshape(slot.shape + (y.shape[-1],))                    # (H,M,K,F)
     g = g + comp[:, :, None, :]
-    g = jnp.where((slot >= 0)[..., None], g, -BIG)
+    ok = slot >= 0 if live is None else (slot >= 0) & (live != 0)
+    g = jnp.where(ok[..., None], g, -BIG)
     return jnp.max(g, axis=2).astype(pool_in.dtype)

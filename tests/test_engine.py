@@ -105,6 +105,21 @@ def test_jit_compiles_once():
     assert bool(jnp.isfinite(out1).all() and jnp.isfinite(out2).all())
 
 
+def test_engine_apply_no_retrace_across_input_forms():
+    """Alternating raw (B, N, 3) arrays, Batch objects, typed-key Batches
+    and legacy dict params of the same shapes must reuse ONE executable —
+    everything is normalized before the cached jit."""
+    params = engine.init(KEY, SMALL_PN2)
+    eng = engine.PCNEngine(SMALL_PN2, mode="traditional")
+    xyz = _clouds(2, 256, seed=11)
+    eng.apply(params, xyz)                            # raw array
+    eng.apply(params, Batch.make(xyz))                # Batch
+    eng.apply(params, Batch.make(xyz, key=jax.random.key(5)))  # typed key
+    eng.apply(engine.to_legacy(params, "pointnet2"),  # legacy dict params
+              Batch.make(xyz))
+    assert eng._japply._cache_size() == 1
+
+
 def test_registry_rejects_duplicates_and_unknown():
     with pytest.raises(ValueError, match="duplicate sampler 'fps'"):
         engine.register_sampler("fps", lambda *a, **k: None)

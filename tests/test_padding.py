@@ -1,0 +1,232 @@
+"""Ragged-batch masking: a padded batch must be numerically equivalent to
+running each cloud unpadded, across every model family, execution mode and
+FC backend; padding must never inflate workload counters; degenerate
+clouds (fewer valid points than k, empty ball queries) must degrade to
+zero feature rows instead of NaN/-inf."""
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # clean env: deterministic fallback sampler
+    from _hyp import given, settings, strategies as st
+
+from repro import engine
+from repro.data.synthetic import make_cloud
+from repro.engine import Batch, BlockSpec
+from repro.models import MODEL_ZOO, dgcnn, pointnet2
+
+KEY = jax.random.PRNGKey(0)
+
+# small variants of the four paper families (same layer structure, sized
+# for CPU test runtime); DGCNN's "all" sampler is the case where padding
+# rows survive into every layer
+SPECS = {
+    "pointnet2": replace(pointnet2.POINTNET2_C, blocks=(
+        BlockSpec(48, 8, (16, 32)), BlockSpec(16, 8, (32, 48)))),
+    "dgcnn": replace(dgcnn.DGCNN_C, blocks=(
+        BlockSpec(96, 8, (16,), kind="edge", sampler="all"),
+        BlockSpec(96, 8, (24,), kind="edge", sampler="all"))),
+    "pointnext": replace(MODEL_ZOO["pointnext_s"][1], blocks=(
+        BlockSpec(48, 8, (16,)), BlockSpec(16, 8, (32,)))),
+    "pointvector": replace(MODEL_ZOO["pointvector_l"][1], blocks=(
+        BlockSpec(48, 8, (24,)), BlockSpec(16, 8, (48,)))),
+}
+SIZES = (96, 72, 60)          # includes the no-padding case
+
+
+def _ragged(spec, sizes=SIZES, seed=0):
+    rng = np.random.default_rng(seed)
+    f_extra = spec.in_feats - 3
+    clouds, feats = [], []
+    for n in sizes:
+        c = np.asarray(make_cloud(rng, n), np.float32)
+        clouds.append(c)
+        feats.append(np.concatenate(
+            [c, rng.uniform(0, 1, (n, f_extra)).astype(np.float32)], -1)
+            if f_extra else c)
+    keys = jax.random.split(jax.random.PRNGKey(seed + 1), len(sizes))
+    batch = Batch.from_clouds(clouds, feats=None if not f_extra else feats,
+                              key=keys)
+    return clouds, feats, keys, batch
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+@pytest.mark.parametrize("mode", ["traditional", "lpcn"])
+@pytest.mark.parametrize("name", sorted(SPECS))
+def test_padded_matches_unpadded(name, mode, backend):
+    """The oracle: engine.apply(padded)[i, :n_valid[i]] equals
+    engine.apply_single(cloud_i) for every model x mode x backend."""
+    spec = SPECS[name]
+    params = engine.init(KEY, spec)
+    clouds, feats, keys, batch = _ragged(spec, seed=sorted(SPECS).index(name))
+    out = engine.apply(params, batch, spec=spec, mode=mode,
+                       fc_backend=backend)
+    tol = 1e-5 if backend == "reference" else 1e-4
+    for i, (c, f) in enumerate(zip(clouds, feats)):
+        ref, _ = engine.apply_single(
+            params, jnp.asarray(c), jnp.asarray(f), keys[i], spec=spec,
+            mode=mode, fc_backend=backend)
+        got = out[i]
+        if got.ndim == 2:            # seg: compare valid rows, pad is zero
+            np.testing.assert_array_equal(
+                np.asarray(got[c.shape[0]:]), 0.0)
+            got = got[:c.shape[0]]
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=tol, atol=tol, err_msg=name)
+
+
+def test_report_counters_unchanged_by_padding():
+    """Islandization / hub-schedule reuse counters must be identical with
+    and without padding rows (padding contributes zero work)."""
+    spec = SPECS["pointnet2"]
+    params = engine.init(KEY, spec)
+    clouds, feats, keys, batch = _ragged(spec, seed=5)
+    _, rep = engine.apply_with_reports(params, batch, spec=spec,
+                                       mode="lpcn")
+    rep = rep.concrete()
+    for i, c in enumerate(clouds):
+        _, ref = engine.apply_single(params, jnp.asarray(c),
+                                     jnp.asarray(c), keys[i], spec=spec,
+                                     mode="lpcn", with_report=True)
+        ref = ref.concrete()
+        for field in ("baseline_fetches", "lpcn_fetches",
+                      "baseline_mlp_evals", "lpcn_mlp_evals",
+                      "n_subsets", "n_islands_used"):
+            assert int(getattr(rep, field)[i]) == int(getattr(ref, field)), \
+                (field, i)
+
+
+@given(st.integers(0, 2), st.integers(0, 1000))
+@settings(max_examples=6, deadline=None)
+def test_padding_equivalence_property(rotate, seed):
+    """Property form: ragged size mixes (incl. all-full) stay equivalent
+    and keep finite logits.  Sizes are drawn from a fixed menu so the jit
+    cache is bounded."""
+    sizes = tuple(np.roll([96, 80, 64], rotate))
+    spec = SPECS["pointnet2"]
+    params = engine.init(jax.random.PRNGKey(seed % 7), spec)
+    clouds, feats, keys, batch = _ragged(spec, sizes=sizes, seed=seed)
+    out = engine.apply(params, batch, spec=spec, mode="lpcn")
+    assert bool(jnp.isfinite(out).all())
+    for i, c in enumerate(clouds):
+        ref, _ = engine.apply_single(params, jnp.asarray(c),
+                                     jnp.asarray(c), keys[i], spec=spec,
+                                     mode="lpcn")
+        np.testing.assert_allclose(np.asarray(out[i]), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_ball_query_zero_valid_in_radius_yields_zero_row():
+    """A center whose radius holds zero *valid* points must produce an
+    all -1 neighbor row and a zero feature row (not NaN / -inf)."""
+    from repro.core.mlp import init_mlp
+    from repro.core.neighbor import ball_query
+    from repro.core.pipeline import fc_traditional
+    rng = np.random.default_rng(3)
+    pts = jnp.asarray(rng.uniform(-1, 1, (32, 3)), jnp.float32)
+    centers = jnp.asarray([[5.0, 5.0, 5.0], [0.0, 0.0, 0.0]], jnp.float32)
+    # only the first 4 rows are valid; center 0 is far from all of them
+    idx = ball_query(pts, centers, 0.05, 8, n_valid=4)
+    idx_np = np.asarray(idx)
+    assert (idx_np[0] == -1).all()
+    assert (idx_np < 4).all()        # padding rows never appear
+    mlp = init_mlp(KEY, [6, 16, 8])
+    f = fc_traditional(mlp, pts, pts, idx, centers, centers, "sa",
+                       nbr_valid=idx >= 0)
+    f_np = np.asarray(f)
+    assert np.isfinite(f_np).all()
+    np.testing.assert_array_equal(f_np[0], 0.0)
+
+
+def test_ball_query_unmasked_keeps_reference_fallback():
+    """Legacy (unmasked) semantics preserved: an empty-radius center
+    falls back to point 0 (the reference CUDA kernel behavior), never -1
+    — so eager callers that gather by the returned ids are unaffected."""
+    from repro.core.neighbor import ball_query
+    rng = np.random.default_rng(8)
+    pts = jnp.asarray(rng.uniform(-1, 1, (16, 3)), jnp.float32)
+    centers = jnp.asarray([[9.0, 9.0, 9.0]], jnp.float32)
+    idx = np.asarray(ball_query(pts, centers, 0.05, 4))
+    np.testing.assert_array_equal(idx, 0)
+
+
+def test_all_sampler_cls_global_pool_masks_padding():
+    """pointnet2-family cls spec whose blocks all use the "all" sampler:
+    padding reaches the final global pool and must be masked there."""
+    spec = replace(pointnet2.POINTNET2_C, blocks=(
+        BlockSpec(96, 8, (16, 32), sampler="all"),))
+    params = engine.init(KEY, spec)
+    clouds, feats, keys, batch = _ragged(spec, seed=9)
+    out = engine.apply(params, batch, spec=spec, mode="traditional")
+    for i, c in enumerate(clouds):
+        ref, _ = engine.apply_single(params, jnp.asarray(c),
+                                     jnp.asarray(c), keys[i], spec=spec,
+                                     mode="traditional")
+        np.testing.assert_allclose(np.asarray(out[i]), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_pre_ragged_component_signature_errors_clearly():
+    """A registered sampler without n_valid works in the eager per-cloud
+    path but raises an actionable TypeError through the batched engine
+    (which always passes a traced n_valid)."""
+    from repro.core.pipeline import LPCNConfig, data_structuring
+    spec = replace(pointnet2.POINTNET2_C, blocks=(
+        BlockSpec(16, 4, (8, 16), sampler="test_legacy_sig"),))
+    engine.register_sampler(
+        "test_legacy_sig",
+        lambda xyz, *, tree, n_centers, key:
+        jnp.arange(n_centers, dtype=jnp.int32))
+    try:
+        params = engine.init(KEY, spec)
+        xyz = jnp.asarray(np.random.default_rng(0).uniform(
+            -1, 1, (2, 32, 3)), jnp.float32)
+        # eager path (no n_valid): still works
+        cfg = LPCNConfig(n_centers=16, k=4, sampler="test_legacy_sig")
+        cidx, _ = data_structuring(cfg, xyz[0], KEY)
+        assert cidx.shape == (16,)
+        # batched path: clear, actionable error
+        with pytest.raises(TypeError, match="n_valid"):
+            engine.apply(params, Batch.make(xyz), spec=spec,
+                         mode="traditional")
+    finally:
+        engine.SAMPLERS._entries.pop("test_legacy_sig", None)
+
+
+@pytest.mark.parametrize("neighbor", ["ball", "pointacc"])
+def test_one_valid_point_cloud(neighbor):
+    """Regression: a 1-valid-point padded cloud (fewer valid points than
+    k) runs every mode/backend without NaN."""
+    spec = replace(pointnet2.POINTNET2_C, blocks=(
+        BlockSpec(8, 4, (8, 16), radius=0.1, neighbor=neighbor),))
+    params = engine.init(KEY, spec)
+    rng = np.random.default_rng(4)
+    xyz = jnp.asarray(rng.uniform(-1, 1, (2, 64, 3)), jnp.float32)
+    batch = Batch.make(xyz, n_valid=jnp.asarray([1, 64], jnp.int32))
+    for mode in ("traditional", "lpcn"):
+        for backend in ("reference", "pallas"):
+            out = engine.apply(params, batch, spec=spec, mode=mode,
+                               fc_backend=backend)
+            assert bool(jnp.isfinite(out).all()), (mode, backend)
+
+
+def test_sampling_and_neighbors_never_return_padding():
+    """DS-level invariant across every registered sampler/neighbor pair:
+    centers and neighbor ids stay below n_valid (or are -1)."""
+    from repro.core.pipeline import LPCNConfig, data_structuring
+    rng = np.random.default_rng(6)
+    xyz = jnp.asarray(make_cloud(rng, 128), jnp.float32)
+    n_valid = jnp.int32(90)
+    for sampler in ("fps", "random", "morton"):
+        for method in ("pointacc", "hgpcn", "edgepc", "crescent", "ball"):
+            cfg = LPCNConfig(n_centers=32, k=8, sampler=sampler,
+                             neighbor=method, radius=0.3)
+            cidx, nbr = data_structuring(cfg, xyz, KEY, n_valid=n_valid)
+            assert (np.asarray(cidx) < 90).all(), (sampler, method)
+            assert (np.asarray(cidx) >= 0).all(), (sampler, method)
+            assert (np.asarray(nbr) < 90).all(), (sampler, method)
