@@ -219,8 +219,136 @@ def bench_engine(rows, quick: bool):
                                "max": int(max(sizes))})
 
 
+# ---- fc_kernel: vmap-of-kernels vs natively batched grid (A/B) --------------
+
+def bench_fc_kernel(rows, quick: bool):
+    """Times the two FC kernels on identical inputs through (a) the old
+    path (jax.vmap of the single-cloud kernel) and (b) the natively
+    batched grid.  Mechanism note: vmap's pallas batching rule also folds
+    B into one pallas_call, but with the unplanned per-cloud body —
+    hardcoded ts=8 / one island per step, unaligned lanes, no
+    weight-resident index maps or dimension semantics; the
+    ``per_cloud_dispatches`` field records the *logical* per-cloud
+    program count of that schedule.  Records grid shapes and tile sizes
+    in the JSON; the a/b ratio is the headline the batched-grid PR
+    tracks."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.gather_mlp.ops import (gather_mlp,
+                                              gather_mlp_batched,
+                                              gather_mlp_tile_plan)
+    from repro.kernels.hub_reuse.ops import (hub_reuse, hub_reuse_batched,
+                                             hub_reuse_tile_plan)
+
+    rng = np.random.default_rng(0)
+    reps = 2 if quick else 5
+    # always two batch sizes: the A/B's headline is how the gap scales
+    # with B (the batched grid amortizes weights/tiling over all B clouds)
+    batches = [2, 4] if quick else [2, 8]
+    sk = (64, 8) if quick else (512, 32)
+
+    def timed(f, *args):
+        jax.block_until_ready(f(*args))                # compile + warmup
+        t0 = time.time()
+        for _ in range(reps):
+            out = f(*args)
+        jax.block_until_ready(out)
+        return (time.time() - t0) / reps * 1e6
+
+    for b in batches:
+        s, k = sk
+        d, dc, hd, f = 35, 3, 64, 128
+        raw = jnp.asarray(rng.normal(size=(b, s, k, d)), jnp.float32)
+        ctr = jnp.asarray(rng.normal(size=(b, s, dc)), jnp.float32)
+        w1 = jnp.asarray(rng.normal(size=(d, hd)) * 0.1, jnp.float32)
+        w2 = jnp.asarray(rng.normal(size=(hd, f)) * 0.1, jnp.float32)
+        b1 = jnp.zeros((hd,), jnp.float32)
+        b2 = jnp.zeros((f,), jnp.float32)
+        mask = jnp.asarray(rng.integers(0, 2, (b, s, k)), jnp.int32)
+        plan = gather_mlp_tile_plan(s, k, d, dc, hd, f)
+        vmapped = jax.jit(jax.vmap(
+            lambda r, c, m: gather_mlp(r, c, w1, b1, w2, b2, mask=m)))
+        batched = jax.jit(
+            lambda r, c, m: gather_mlp_batched(r, c, w1, b1, w2, b2,
+                                               mask=m))
+        us_v = timed(vmapped, raw, ctr, mask)
+        us_b = timed(batched, raw, ctr, mask)
+        meta = dict(batch=b, shapes={"s": s, "k": k, "d": d, "h": hd,
+                                     "f": f},
+                    tile=plan, grid=[b, plan["grid_tiles"]])
+        _emit(rows, f"fc_kernel_gather_mlp_vmap_b{b}", us_v,
+              f"per_cloud_dispatches={b}", dispatch="vmap",
+              per_cloud_dispatches=b, **meta)
+        _emit(rows, f"fc_kernel_gather_mlp_batched_b{b}", us_b,
+              f"pallas_calls=1 speedup_vs_vmap={us_v / max(us_b, 1e-9):.2f}",
+              dispatch="batched_grid", per_cloud_dispatches=1, **meta)
+
+        hn, c, m = (4, 32, 16) if quick else (16, 64, 32)
+        pool = jnp.asarray(rng.normal(size=(b, hn, c, d)), jnp.float32)
+        slot = jnp.asarray(rng.integers(-1, c, (b, hn, m, k)), jnp.int32)
+        comp = jnp.asarray(rng.normal(size=(b, hn, m, f)) * 0.01,
+                           jnp.float32)
+        live = jnp.asarray(rng.integers(0, 2, (b, hn, m, k)), jnp.int32)
+        hplan = hub_reuse_tile_plan(hn, c, m, k, d, hd, f)
+        vmapped = jax.jit(jax.vmap(
+            lambda p, sl, cp, lv: hub_reuse(p, sl, cp, w1, b1, w2, b2,
+                                            live=lv)))
+        batched = jax.jit(
+            lambda p, sl, cp, lv: hub_reuse_batched(p, sl, cp, w1, b1, w2,
+                                                    b2, live=lv))
+        us_v = timed(vmapped, pool, slot, comp, live)
+        us_b = timed(batched, pool, slot, comp, live)
+        meta = dict(batch=b, shapes={"hn": hn, "c": c, "m": m, "k": k,
+                                     "d": d, "h": hd, "f": f},
+                    tile=hplan, grid=[b, hplan["grid_tiles"]])
+        _emit(rows, f"fc_kernel_hub_reuse_vmap_b{b}", us_v,
+              f"per_cloud_dispatches={b}", dispatch="vmap",
+              per_cloud_dispatches=b, **meta)
+        _emit(rows, f"fc_kernel_hub_reuse_batched_b{b}", us_b,
+              f"pallas_calls=1 speedup_vs_vmap={us_v / max(us_b, 1e-9):.2f}",
+              dispatch="batched_grid", per_cloud_dispatches=1, **meta)
+
+    # ---- whole-model A/B: engine.apply with "pallas_vmap" vs "pallas" ------
+    from dataclasses import replace as _replace
+    from functools import partial
+    from repro import engine
+    from repro.data.synthetic import make_cloud
+    from repro.engine import BlockSpec
+    from repro.models import MODEL_ZOO, dgcnn
+
+    n = 128 if quick else 512
+    model_specs = {
+        "pointnet2_c": _replace(MODEL_ZOO["pointnet2_c"][1], blocks=(
+            BlockSpec(n // 4, 8, (16, 32)), BlockSpec(n // 8, 8, (32, 48)))),
+        "dgcnn_c": _replace(dgcnn.with_points(dgcnn.DGCNN_C, n), blocks=(
+            BlockSpec(n, 8, (24,), kind="edge", sampler="all"),
+            BlockSpec(n, 8, (32,), kind="edge", sampler="all"))),
+    }
+    for mname, spec in model_specs.items():
+        params = engine.init(jax.random.PRNGKey(0), spec)
+        for bsz in batches:
+            xyz = jnp.asarray(np.stack(
+                [make_cloud(rng, n) for _ in range(bsz)]))
+            b_in = engine.Batch.make(xyz, key=jax.random.PRNGKey(1))
+            times = {}
+            for be in ("pallas_vmap", "pallas"):
+                g = jax.jit(partial(engine.apply, spec=spec, mode="lpcn",
+                                    fc_backend=be))
+                times[be] = timed(g, params, b_in)
+            ratio = times["pallas_vmap"] / max(times["pallas"], 1e-9)
+            for be, us in times.items():
+                _emit(rows, f"fc_kernel_engine_{mname}_{be}_b{bsz}", us,
+                      f"speedup_batched_vs_vmap={ratio:.2f}",
+                      model=mname, batch=bsz, n_points=n, backend=be,
+                      dispatch=("vmap" if be == "pallas_vmap"
+                                else "batched_grid"),
+                      per_cloud_dispatches=(bsz if be == "pallas_vmap"
+                                            else 1))
+
+
 SECTIONS = {
     "engine": bench_engine,
+    "fc_kernel": bench_fc_kernel,
     "overlap": bench_overlap_study,
     "workload": bench_workload_reduction,
     "speedup": bench_speedup_baselines,

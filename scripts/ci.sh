@@ -39,6 +39,46 @@ print("padding smoke ok: padded ragged batch == per-cloud unpadded "
       "(traditional + lpcn)")
 EOF
 
+echo "== batched-kernel smoke (interpret mode) =="
+python - <<'EOF'
+import numpy as np, jax, jax.numpy as jnp
+from functools import partial
+from dataclasses import replace
+from repro import engine
+from repro.data.synthetic import make_cloud
+from repro.engine import Batch, BlockSpec
+from repro.models import pointnet2
+
+spec = replace(pointnet2.POINTNET2_C, blocks=(
+    BlockSpec(48, 8, (16, 32)), BlockSpec(16, 8, (32, 48))))
+params = engine.init(jax.random.PRNGKey(0), spec)
+rng = np.random.default_rng(0)
+xyz = jnp.asarray(np.stack([make_cloud(rng, 96) for _ in range(3)]))
+batch = Batch.make(xyz, key=jax.random.PRNGKey(1),
+                   n_valid=jnp.asarray([96, 70, 50], jnp.int32))
+ref = engine.apply(params, batch, spec=spec, mode="lpcn",
+                   fc_backend="reference")
+pal = engine.apply(params, batch, spec=spec, mode="lpcn",
+                   fc_backend="pallas")
+np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
+                           rtol=1e-4, atol=1e-4)
+
+# one pallas_call per FC call site, batch folded into the grid (the
+# jaxpr walker is shared with tests/test_batched_fc.py — one copy)
+import sys
+sys.path.insert(0, "tests")
+from test_batched_fc import _count_pallas_calls
+
+jx = jax.make_jaxpr(partial(engine.apply, spec=spec, mode="lpcn",
+                            fc_backend="pallas"))(params, batch)
+grids = []
+n = _count_pallas_calls(jx.jaxpr, grids)
+assert n == 2 * len(spec.blocks), (n, grids)
+assert all(g[0] == 3 for g in grids), grids
+print(f"batched-kernel smoke ok: pallas==reference on a ragged batch, "
+      f"{n} pallas_calls for {len(spec.blocks)} blocks, grids={grids}")
+EOF
+
 echo "== engine smoke benchmark =="
 python -m benchmarks.run --quick --only engine --out results/engine_smoke.json
 python - <<'EOF'
@@ -54,4 +94,23 @@ for r in ragged:
 print(f"engine smoke ok: {len(rows)} rows "
       f"(backends: {sorted({r['backend'] for r in rows})}, "
       f"{len(ragged)} ragged)")
+EOF
+
+echo "== fc_kernel A/B benchmark (vmap-of-kernels vs batched grid) =="
+python -m benchmarks.run --quick --only fc_kernel \
+    --out results/fc_kernel_smoke.json
+python - <<'EOF'
+import json
+rows = json.load(open("results/fc_kernel_smoke.json"))
+batched = [r for r in rows if r.get("dispatch") == "batched_grid"]
+vmap = [r for r in rows if r.get("dispatch") == "vmap"]
+assert batched and vmap, "fc_kernel smoke missing an A/B side"
+for r in batched:
+    assert r["per_cloud_dispatches"] == 1, r
+kern = [r for r in batched if "tile" in r]
+assert kern, "fc_kernel smoke missing kernel-level tile plans"
+for r in kern:
+    assert "grid" in r and len(r["grid"]) == 2, r
+print(f"fc_kernel smoke ok: {len(rows)} rows "
+      f"({len(vmap)} vmap vs {len(batched)} batched-grid)")
 EOF

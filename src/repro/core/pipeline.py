@@ -78,6 +78,20 @@ class FCBackend:
           nbr_valid)
     reuse(mlp, pool_in, slot, comp, live)
 
+    ``dense_batched`` / ``reuse_batched`` (optional) are the natively
+    batched entry points used by the batch-first engine: the same
+    dataflows with a leading (B,) axis on every array operand, expected
+    to present the whole cloud stack to the accelerator as ONE schedule
+    (e.g. one pallas_call with the batch folded into the kernel grid).
+    They additionally take ``kernel_kw`` — an opaque dict of tuning knobs
+    (tile sizes, VMEM budget) threaded down from ``engine.apply``.  When
+    None, the engine falls back to ``jax.vmap`` of the per-cloud entry
+    (the vmap-of-kernels path, kept for A/B measurement).
+
+    dense_batched(mlp, kind, xyz, feats, nbr_idx, centers_xyz,
+                  center_feats, nbr_valid, kernel_kw=None)
+    reuse_batched(mlp, pool_in, slot, comp, live, kernel_kw=None)
+
     Ragged-batch contract: ``nbr_valid`` (S, K) bool (None = all valid)
     masks neighbor slots out of the max-pool (-> -BIG before the pool);
     a subset with zero valid slots yields an all-zero feature row, never
@@ -87,6 +101,38 @@ class FCBackend:
     name: str
     dense: Callable
     reuse: Callable
+    dense_batched: Callable | None = None
+    reuse_batched: Callable | None = None
+
+
+def dense_batched(backend: FCBackend, mlp, kind, xyz, feats, nbr_idx,
+                  centers_xyz, center_feats=None, nbr_valid=None,
+                  kernel_kw=None):
+    """Batched dense FC through ``backend``: native entry when available,
+    else vmap of the per-cloud entry (one kernel dispatch per cloud)."""
+    if backend.dense_batched is not None:
+        return backend.dense_batched(mlp, kind, xyz, feats, nbr_idx,
+                                     centers_xyz, center_feats, nbr_valid,
+                                     kernel_kw=kernel_kw)
+    return jax.vmap(
+        lambda x, f, n, c, cf, nv: backend.dense(mlp, kind, x, f, n, c,
+                                                 cf, nv),
+        in_axes=(0, 0, 0, 0, None if center_feats is None else 0,
+                 None if nbr_valid is None else 0),
+    )(xyz, feats, nbr_idx, centers_xyz, center_feats, nbr_valid)
+
+
+def reuse_batched(backend: FCBackend, mlp, pool_in, slot, comp, live=None,
+                  kernel_kw=None):
+    """Batched reuse FC through ``backend``: native entry when available,
+    else vmap of the per-cloud entry."""
+    if backend.reuse_batched is not None:
+        return backend.reuse_batched(mlp, pool_in, slot, comp, live,
+                                     kernel_kw=kernel_kw)
+    return jax.vmap(
+        lambda p, s, c, l: backend.reuse(mlp, p, s, c, l),
+        in_axes=(0, 0, 0, None if live is None else 0),
+    )(pool_in, slot, comp, live)
 
 
 def data_structuring(cfg: LPCNConfig, xyz: jnp.ndarray,
@@ -203,24 +249,18 @@ def fc_traditional(mlp: MLP, xyz, feats, nbr_idx, centers_xyz,
     return post_pool_activation(mlp, pooled)
 
 
-def fc_lpcn(mlp: MLP, xyz, feats, nbr_idx, centers_xyz,
-            islands: Islands, sched: Schedule, cfg: LPCNConfig,
-            center_feats=None, backend: FCBackend | None = None,
-            nbr_valid=None):
-    """Islandized FC: pool-MLP + compensated reuse + compact overflow.
+def _lpcn_reuse_inputs(mlp: MLP, xyz, feats, nbr_idx, centers_xyz,
+                       islands: Islands, sched: Schedule, cfg: LPCNConfig,
+                       center_feats=None):
+    """Per-cloud jnp prep of the ``backend.reuse`` operands.
 
-    The two MXU-heavy dataflows — the dense path and the pool-MLP +
-    reuse-gather — go through ``backend``; overflow/fallback bookkeeping
-    is shared jnp.  Returns (S, Fout) center features — same contract as
-    fc_traditional.  Ragged-batch slots (``sched.pos_live`` False) are
-    neither reused nor computed; a subset with zero live positions pools
-    to a zero row.
+    Returns (pool_in (H, C, fin), comp (H, M, Fout), slot_live (H, M, K),
+    sub_vec (H, M, Dc)); ``sub_vec`` is reused by the overflow/merge step.
     """
-    backend = backend or get_fc_backend(cfg.fc_backend)
-    S, K = nbr_idx.shape
+    S = nbr_idx.shape[0]
     H, M = islands.members.shape
+    K = nbr_idx.shape[1]
     C = sched.pool_ids.shape[1]
-    Fout = mlp.f_out
     kind = cfg.block_kind
 
     cvec = _center_vec(kind, centers_xyz, center_feats)   # (S, Dc)
@@ -237,13 +277,23 @@ def fc_lpcn(mlp: MLP, xyz, feats, nbr_idx, centers_xyz,
     delta = hub_vec[:, None, :] - sub_vec                 # (H, M, Dc)
     comp = compensation(mlp, delta, cfg.compensation, kind)  # (H, M, Fout)
 
-    # --- pool MLP + compensated reuse-gather + masked pool (backend) -----
-    slot = sched.reuse_slot                               # (H, M, K)
-    safe_slot = jnp.clip(slot, 0, C - 1)
+    safe_slot = jnp.clip(sched.reuse_slot, 0, C - 1)
     slot_live = jnp.take_along_axis(
         pool_live, safe_slot.reshape(H, M * K), axis=1).reshape(H, M, K)
-    reuse_pooled = backend.reuse(mlp, pool_in, slot, comp,
-                                 slot_live)               # (H, M, Fout)
+    return pool_in, comp, slot_live, sub_vec
+
+
+def _lpcn_merge(mlp: MLP, xyz, feats, nbr_idx, islands: Islands,
+                sched: Schedule, cfg: LPCNConfig, sub_vec, slot_live,
+                reuse_pooled):
+    """Overflow compute + max-merge with the reuse partials + scatter to
+    center order.  Returns (out (S, Fout) *without* the dense fallback
+    substituted, fb (S,) bool fallback rows)."""
+    S, K = nbr_idx.shape
+    H, M = islands.members.shape
+    Fout = mlp.f_out
+    kind = cfg.block_kind
+    slot = sched.reuse_slot                               # (H, M, K)
     reuse_ok = (slot >= 0) & slot_live
 
     # --- compact overflow compute (never-cached positions) ---------------
@@ -263,6 +313,7 @@ def fc_lpcn(mlp: MLP, xyz, feats, nbr_idx, centers_xyz,
         x = _point_inputs(kind, xyz, feats, ids, sub_vec_h[row])
         return takepos, taken, x
 
+    mem = jnp.clip(islands.members, 0, S - 1)             # (H, M)
     ids_hmk = jnp.where(sched.pos_live, nbr_idx[mem], 0)
     takepos, taken, ox = jax.vmap(island_overflow)(
         need, ids_hmk, sub_vec)                           # (H,B),(H,B),(H,B,fin)
@@ -277,9 +328,13 @@ def fc_lpcn(mlp: MLP, xyz, feats, nbr_idx, centers_xyz,
         jnp.where(taken[..., None], o_out, -BIG), mode="drop")
     over_pooled = over.reshape(H, M, K, Fout).max(axis=2)
     pooled = jnp.maximum(reuse_pooled, over_pooled)       # (H, M, Fout)
-    # a subset with no live position at all (e.g. an empty ball query on a
-    # nearly-empty ragged cloud) pools to a zero row, not -BIG
-    pooled = jnp.where(sched.pos_live.any(-1)[..., None], pooled, 0.0)
+    # merge-boundary guard: any subset both of whose sides stayed at the
+    # -BIG merge identity zero-fills (mirrors gather_mlp's empty-subset
+    # handling).  This subsumes the no-live-position case (empty ball
+    # query on a nearly-empty ragged cloud) AND protects all-cached
+    # subsets whose overflow side is empty against a reuse partial that
+    # came back -BIG — the sentinel must never leak past the merge.
+    pooled = jnp.where(pooled > -BIG / 2, pooled, 0.0)
 
     # rows whose overflow exceeded the budget fall back to the dense path
     covered = jnp.zeros((H, M * K), bool)
@@ -293,13 +348,79 @@ def fc_lpcn(mlp: MLP, xyz, feats, nbr_idx, centers_xyz,
     tgt = jnp.where(rows_ok, islands.members, S)
     out = out.at[tgt.reshape(-1)].set(pooled.reshape(-1, Fout), mode="drop")
 
-    # --- dense fallback: solo subsets + budget-exhausted rows -------------
-    solo = islands.solo
+    # --- dense fallback rows: solo subsets + budget-exhausted rows --------
     fb = jnp.zeros((S,), bool).at[tgt.reshape(-1)].set(
-        uncovered_row.reshape(-1), mode="drop") | solo
-    h_dense = backend.dense(mlp, kind, xyz, feats, nbr_idx, centers_xyz,
-                            center_feats, nbr_valid)
+        uncovered_row.reshape(-1), mode="drop") | islands.solo
+    return out, fb
+
+
+def fc_lpcn(mlp: MLP, xyz, feats, nbr_idx, centers_xyz,
+            islands: Islands, sched: Schedule, cfg: LPCNConfig,
+            center_feats=None, backend: FCBackend | None = None,
+            nbr_valid=None):
+    """Islandized FC: pool-MLP + compensated reuse + compact overflow.
+
+    The two MXU-heavy dataflows — the dense path and the pool-MLP +
+    reuse-gather — go through ``backend``; overflow/fallback bookkeeping
+    is shared jnp.  Returns (S, Fout) center features — same contract as
+    fc_traditional.  Ragged-batch slots (``sched.pos_live`` False) are
+    neither reused nor computed; a subset with zero live positions pools
+    to a zero row.
+    """
+    backend = backend or get_fc_backend(cfg.fc_backend)
+    pool_in, comp, slot_live, sub_vec = _lpcn_reuse_inputs(
+        mlp, xyz, feats, nbr_idx, centers_xyz, islands, sched, cfg,
+        center_feats)
+    reuse_pooled = backend.reuse(mlp, pool_in, sched.reuse_slot, comp,
+                                 slot_live)               # (H, M, Fout)
+    out, fb = _lpcn_merge(mlp, xyz, feats, nbr_idx, islands, sched, cfg,
+                          sub_vec, slot_live, reuse_pooled)
+    h_dense = backend.dense(mlp, cfg.block_kind, xyz, feats, nbr_idx,
+                            centers_xyz, center_feats, nbr_valid)
     out = jnp.where(fb[:, None], h_dense, out)
+    return post_pool_activation(mlp, out)
+
+
+def fc_traditional_batched(mlp: MLP, xyz, feats, nbr_idx, centers_xyz,
+                           center_feats=None, kind: str = "sa",
+                           backend: FCBackend | None = None,
+                           nbr_valid=None, kernel_kw=None):
+    """Batched :func:`fc_traditional`: every array carries a leading (B,)
+    axis; the MXU-heavy dense dataflow goes through the backend's batched
+    entry point (ONE kernel dispatch for the whole cloud stack)."""
+    backend = backend or FC_BACKENDS.get("reference")
+    pooled = dense_batched(backend, mlp, kind, xyz, feats, nbr_idx,
+                           centers_xyz, center_feats, nbr_valid, kernel_kw)
+    return post_pool_activation(mlp, pooled)
+
+
+def fc_lpcn_batched(mlp: MLP, xyz, feats, nbr_idx, centers_xyz,
+                    islands: Islands, sched: Schedule, cfg: LPCNConfig,
+                    center_feats=None, backend: FCBackend | None = None,
+                    nbr_valid=None, kernel_kw=None):
+    """Batched :func:`fc_lpcn`: every array operand (including the
+    ``islands`` / ``sched`` pytrees) carries a leading (B,) axis.
+
+    The per-cloud jnp bookkeeping (reuse-operand prep, overflow compute,
+    merge + scatter) is vmapped; the two MXU-heavy dataflows go through
+    the backend's batched entry points so the whole cloud stack reaches
+    the systolic array as ONE schedule per call site."""
+    backend = backend or get_fc_backend(cfg.fc_backend)
+    pool_in, comp, slot_live, sub_vec = jax.vmap(
+        lambda x, f, n, c, isl, sch, cf: _lpcn_reuse_inputs(
+            mlp, x, f, n, c, isl, sch, cfg, cf),
+        in_axes=(0, 0, 0, 0, 0, 0, None if center_feats is None else 0),
+    )(xyz, feats, nbr_idx, centers_xyz, islands, sched, center_feats)
+    reuse_pooled = reuse_batched(backend, mlp, pool_in, sched.reuse_slot,
+                                 comp, slot_live, kernel_kw)
+    out, fb = jax.vmap(
+        lambda x, f, n, isl, sch, sv, sl, rp: _lpcn_merge(
+            mlp, x, f, n, isl, sch, cfg, sv, sl, rp)
+    )(xyz, feats, nbr_idx, islands, sched, sub_vec, slot_live, reuse_pooled)
+    h_dense = dense_batched(backend, mlp, cfg.block_kind, xyz, feats,
+                            nbr_idx, centers_xyz, center_feats, nbr_valid,
+                            kernel_kw)
+    out = jnp.where(fb[..., None], h_dense, out)
     return post_pool_activation(mlp, out)
 
 
@@ -315,33 +436,48 @@ class BlockOutput:
     center_valid: jnp.ndarray | None = None   # (S,) bool; None = all valid
 
 
-def lpcn_block(cfg: LPCNConfig, mlp: MLP, xyz: jnp.ndarray,
-               feats: jnp.ndarray, key: jax.Array,
-               with_report: bool = False, n_valid=None) -> BlockOutput:
-    """One full building block on a single cloud (N,3)/(N,F).
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class BlockStructure:
+    """Geometric stage of one building block: everything the FC stage
+    needs that depends only on coordinates + RNG (never on features).
 
-    ``n_valid`` (traced count or None) marks rows >= n_valid as padding.
-    With it set, the block is numerically equivalent to running the
-    unpadded (n_valid, ·) prefix: padding is never sampled, gathered,
-    islandized, cached or pooled, its feature rows come back zeroed
-    (``center_valid`` marks them), and the workload report counts only
-    real work.
+    Registered as a pytree so a vmapped structure pass can emit stacked
+    (B, …) structures for the batched FC stage (``islands``/``schedule``
+    are None in traditional mode; ``center_valid``/``nbr_valid`` are None
+    when the cloud has no padding — both statically consistent across a
+    batch).
     """
+    center_idx: jnp.ndarray                   # (S,)
+    center_xyz: jnp.ndarray                   # (S, 3)
+    nbr: jnp.ndarray                          # (S, K)
+    islands: Islands | None
+    schedule: Schedule | None
+    center_valid: jnp.ndarray | None          # (S,) bool
+    nbr_valid: jnp.ndarray | None             # (S, K) bool
+
+    def tree_flatten(self):
+        return ((self.center_idx, self.center_xyz, self.nbr, self.islands,
+                 self.schedule, self.center_valid, self.nbr_valid), ())
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def structure_block(cfg: LPCNConfig, xyz: jnp.ndarray, key: jax.Array,
+                    n_valid=None) -> BlockStructure:
+    """Stage 1 of a building block: DS → octree → islandize → hub-schedule
+    on ONE cloud.  Pure geometry — the emitted :class:`BlockStructure` is
+    reusable across any feature tensor (and any FC backend)."""
     kds, kisl = jax.random.split(key)
-    backend = get_fc_backend(cfg.fc_backend)
     cidx, nbr = data_structuring(cfg, xyz, kds, n_valid=n_valid)
     centers_xyz = xyz[cidx]
-    center_feats = feats[cidx]
     center_valid = None if n_valid is None else cidx < n_valid
     nbr_valid = None if n_valid is None else nbr >= 0
     if cfg.mode == "traditional":
-        f = fc_traditional(mlp, xyz, feats, nbr, centers_xyz, center_feats,
-                           cfg.block_kind, backend=backend,
-                           nbr_valid=nbr_valid)
-        if center_valid is not None:
-            f = jnp.where(center_valid[:, None], f, 0.0)
-        return BlockOutput(cidx, centers_xyz, f, None, None, nbr,
-                           center_valid=center_valid)
+        return BlockStructure(cidx, centers_xyz, nbr, None, None,
+                              center_valid, nbr_valid)
     n_hubs = max(int(cidx.shape[0]) // cfg.island_size, 1)
     if center_valid is None:
         n_hubs_valid = None
@@ -353,10 +489,77 @@ def lpcn_block(cfg: LPCNConfig, mlp: MLP, xyz: jnp.ndarray,
                     hub_select=cfg.hub_select, key=kisl,
                     center_valid=center_valid, n_hubs_valid=n_hubs_valid)
     sched = build_schedule(isl, nbr, cfg.cache_capacity)
-    f = fc_lpcn(mlp, xyz, feats, nbr, centers_xyz, isl, sched, cfg,
-                center_feats, backend=backend, nbr_valid=nbr_valid)
-    if center_valid is not None:
-        f = jnp.where(center_valid[:, None], f, 0.0)
-    report = analyze(isl, sched, cfg.k) if with_report else None
-    return BlockOutput(cidx, centers_xyz, f, isl, sched, nbr, report,
-                       center_valid=center_valid)
+    return BlockStructure(cidx, centers_xyz, nbr, isl, sched,
+                          center_valid, nbr_valid)
+
+
+def compute_block_features(cfg: LPCNConfig, mlp: MLP, xyz, feats,
+                           st: BlockStructure,
+                           backend: FCBackend | None = None) -> jnp.ndarray:
+    """Stage 2 of a building block: Feature Computation on ONE cloud over
+    a pre-built :class:`BlockStructure`.  -> (S, Fout), padding centers
+    zeroed."""
+    backend = backend or get_fc_backend(cfg.fc_backend)
+    center_feats = feats[st.center_idx]
+    if cfg.mode == "traditional":
+        f = fc_traditional(mlp, xyz, feats, st.nbr, st.center_xyz,
+                           center_feats, cfg.block_kind, backend=backend,
+                           nbr_valid=st.nbr_valid)
+    else:
+        f = fc_lpcn(mlp, xyz, feats, st.nbr, st.center_xyz, st.islands,
+                    st.schedule, cfg, center_feats, backend=backend,
+                    nbr_valid=st.nbr_valid)
+    if st.center_valid is not None:
+        f = jnp.where(st.center_valid[:, None], f, 0.0)
+    return f
+
+
+def compute_block_features_batched(cfg: LPCNConfig, mlp: MLP, xyz, feats,
+                                   st: BlockStructure,
+                                   backend: FCBackend | None = None,
+                                   kernel_kw=None) -> jnp.ndarray:
+    """Batched stage 2: ``st`` holds stacked (B, …) structures (a vmapped
+    :func:`structure_block`), ``xyz``/``feats`` are (B, N, ·).  The MXU
+    dataflows run through the backend's batched entry points — one kernel
+    dispatch per call site for the whole cloud stack."""
+    backend = backend or get_fc_backend(cfg.fc_backend)
+    center_feats = jnp.take_along_axis(
+        feats, st.center_idx[..., None], axis=1)
+    if cfg.mode == "traditional":
+        f = fc_traditional_batched(mlp, xyz, feats, st.nbr, st.center_xyz,
+                                   center_feats, cfg.block_kind,
+                                   backend=backend,
+                                   nbr_valid=st.nbr_valid,
+                                   kernel_kw=kernel_kw)
+    else:
+        f = fc_lpcn_batched(mlp, xyz, feats, st.nbr, st.center_xyz,
+                            st.islands, st.schedule, cfg, center_feats,
+                            backend=backend, nbr_valid=st.nbr_valid,
+                            kernel_kw=kernel_kw)
+    if st.center_valid is not None:
+        f = jnp.where(st.center_valid[..., None], f, 0.0)
+    return f
+
+
+def lpcn_block(cfg: LPCNConfig, mlp: MLP, xyz: jnp.ndarray,
+               feats: jnp.ndarray, key: jax.Array,
+               with_report: bool = False, n_valid=None) -> BlockOutput:
+    """One full building block on a single cloud (N,3)/(N,F) — the two
+    stages (:func:`structure_block` + :func:`compute_block_features`)
+    fused, the eager per-cloud entry point.
+
+    ``n_valid`` (traced count or None) marks rows >= n_valid as padding.
+    With it set, the block is numerically equivalent to running the
+    unpadded (n_valid, ·) prefix: padding is never sampled, gathered,
+    islandized, cached or pooled, its feature rows come back zeroed
+    (``center_valid`` marks them), and the workload report counts only
+    real work.
+    """
+    st = structure_block(cfg, xyz, key, n_valid=n_valid)
+    backend = get_fc_backend(cfg.fc_backend)
+    f = compute_block_features(cfg, mlp, xyz, feats, st, backend=backend)
+    report = (analyze(st.islands, st.schedule, cfg.k)
+              if with_report and st.islands is not None else None)
+    return BlockOutput(st.center_idx, st.center_xyz, f, st.islands,
+                       st.schedule, st.nbr, report,
+                       center_valid=st.center_valid)

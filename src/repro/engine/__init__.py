@@ -14,7 +14,9 @@ accelerator's workflow.
 
 Extension points: :func:`register_sampler`, :func:`register_neighbor`,
 :func:`register_fc_backend` (backends: "reference" jnp oracle, "pallas"
-TPU kernels).
+natively batched TPU kernels — one pallas_call per FC call site for the
+whole cloud stack — and "pallas_vmap", the per-cloud dispatch kept for
+A/B measurement).
 """
 from repro.core.registry import (FC_BACKENDS, NEIGHBORS, SAMPLERS, Registry,
                                  register_fc_backend, register_neighbor,

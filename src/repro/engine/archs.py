@@ -21,8 +21,9 @@ import jax.numpy as jnp
 
 from repro.core.mlp import MLP, apply_mlp, init_mlp
 from repro.core.pipeline import BIG as _BIG
-from repro.core.pipeline import LPCNConfig, lpcn_block
-from repro.core.registry import Registry
+from repro.core.pipeline import (LPCNConfig, compute_block_features_batched,
+                                 lpcn_block, structure_block)
+from repro.core.registry import Registry, get_fc_backend
 from repro.core.workload import WorkloadReport
 
 from .params import PCNParams
@@ -37,10 +38,19 @@ class Arch:
     forward(params, spec, xyz, feats, key, ctx, n_valid) ->
     (logits, report).  ``n_valid`` (traced count or None) marks rows
     >= n_valid of the cloud as padding; forwards must mask them out of
-    sampling, pooling and per-point (seg) logits."""
+    sampling, pooling and per-point (seg) logits.
+
+    ``forward_batched(params, spec, xyz, feats, keys, ctx, n_valid) ->
+    logits`` (optional) is the batch-first two-stage forward the serving
+    path uses: a vmapped per-cloud DS → octree → islandize → hub-schedule
+    stage emits stacked (B, …) structures, then the FC stage runs through
+    the backend's batched entry points — one kernel dispatch per FC call
+    site for the whole cloud stack.  Families without it fall back to
+    ``jax.vmap`` of ``forward``."""
     name: str
     init: callable
     forward: callable
+    forward_batched: callable | None = None
 
 
 @dataclass(frozen=True)
@@ -50,13 +60,24 @@ class EngineCtx:
     fc_backend: str = "reference"
     isl_kw: tuple = ()            # sorted (key, value) pairs — hashable
     with_report: bool = False
+    kernel_kw: tuple = ()         # sorted (key, value) pairs — hashable
+
+    KERNEL_KW_KEYS = frozenset({"ts", "th", "vmem_budget_mb"})
 
     @staticmethod
     def make(mode="lpcn", fc_backend="reference", isl_kw=None,
-             with_report=False) -> "EngineCtx":
+             with_report=False, kernel_kw=None) -> "EngineCtx":
+        kernel_kw = dict(kernel_kw or {})
+        unknown = set(kernel_kw) - EngineCtx.KERNEL_KW_KEYS
+        if unknown:
+            raise ValueError(
+                f"unknown kernel_kw key(s) {sorted(unknown)}; valid knobs: "
+                f"{sorted(EngineCtx.KERNEL_KW_KEYS)} (a typo here would "
+                f"silently fall back to the VMEM-budget heuristic)")
         return EngineCtx(mode=mode, fc_backend=fc_backend,
                          isl_kw=tuple(sorted((isl_kw or {}).items())),
-                         with_report=with_report)
+                         with_report=with_report,
+                         kernel_kw=tuple(sorted(kernel_kw.items())))
 
 
 def get_arch(spec: PCNSpec) -> Arch:
@@ -101,6 +122,73 @@ def _mask_rows(x, n_valid, fill=0.0):
         return x
     ok = jnp.arange(x.shape[0]) < n_valid
     return jnp.where(ok[:, None], x, fill)
+
+
+def _mask_rows_b(x, n_valid, fill=0.0):
+    """Batched :func:`_mask_rows`: zero rows >= n_valid[i] of x (B, N, F)."""
+    if n_valid is None:
+        return x
+    ok = jnp.arange(x.shape[1])[None, :] < n_valid[:, None]
+    return jnp.where(ok[..., None], x, fill)
+
+
+def _structure_stack(spec: PCNSpec, ctx: EngineCtx, xyz, key, n_valid):
+    """Stage 1 on ONE cloud: the geometric chain of the whole SA block
+    stack (DS → octree → islandize → hub-schedule per block — coordinates
+    and RNG only, no features).  The key-split sequence mirrors
+    :func:`_run_blocks` exactly, so the batched forward is numerically
+    identical to vmapping the fused per-cloud path.
+
+    Returns (structures, nv_levels): one :class:`BlockStructure` per
+    block and the per-level n_valid chain (downsampling samplers emit
+    fully-valid center sets -> None below them; "all" keeps the count)."""
+    structs = []
+    cur_xyz, cur_nv = xyz, n_valid
+    nv_levels = [n_valid]
+    for b in spec.blocks:
+        key, sub = jax.random.split(key)
+        st = structure_block(block_cfg(b, ctx), cur_xyz, sub,
+                             n_valid=cur_nv)
+        structs.append(st)
+        cur_xyz = st.center_xyz
+        cur_nv = cur_nv if b.sampler == "all" else None
+        nv_levels.append(cur_nv)
+    return tuple(structs), tuple(nv_levels)
+
+
+def _structure_stack_b(spec: PCNSpec, ctx: EngineCtx, xyz, keys, n_valid):
+    """Vmapped :func:`_structure_stack`: emits stacked (B, …) structures
+    for the batched FC stage."""
+    return jax.vmap(
+        lambda x, k, nv: _structure_stack(spec, ctx, x, k, nv)
+    )(xyz, keys, n_valid)
+
+
+def _compute_stack_b(params: PCNParams, spec: PCNSpec, ctx: EngineCtx,
+                     xyz, feats, structs):
+    """Batched stage 2 over an SA block stack: features flow through the
+    backend's batched FC entry points block by block.  Returns
+    (xyz_levels, final features)."""
+    backend = get_fc_backend(ctx.fc_backend)
+    kernel_kw = dict(ctx.kernel_kw)
+    cur_xyz, cur_f = xyz, feats
+    xyz_levels = [xyz]
+    for b, mlp, st in zip(spec.blocks, params.blocks, structs):
+        cur_f = compute_block_features_batched(
+            block_cfg(b, ctx), mlp, cur_xyz, cur_f, st, backend=backend,
+            kernel_kw=kernel_kw)
+        cur_xyz = st.center_xyz
+        xyz_levels.append(cur_xyz)
+    return xyz_levels, cur_f
+
+
+def _fp_b(xyz_dst, xyz_src, f_src, src_n_valid=None, k: int = 3):
+    """Vmapped :func:`feature_propagation` (seg decoder level)."""
+    return jax.vmap(
+        lambda d, s, f, nv: feature_propagation(d, s, f, k=k,
+                                                src_n_valid=nv),
+        in_axes=(0, 0, 0, None if src_n_valid is None else 0),
+    )(xyz_dst, xyz_src, f_src, src_n_valid)
 
 
 def _run_blocks(params: PCNParams, spec: PCNSpec, xyz, feats, key,
@@ -186,8 +274,30 @@ def _fwd_pointnet2(params: PCNParams, spec: PCNSpec, xyz, feats, key,
     return _mask_rows(apply_mlp(params.head, f), n_valid), _total(reports)
 
 
+def _fwd_pointnet2_batched(params: PCNParams, spec: PCNSpec, xyz, feats,
+                           keys, ctx: EngineCtx, n_valid=None):
+    """Two-stage batched forward: vmapped geometry stack, then batched FC
+    + head.  Numerically identical to vmapping :func:`_fwd_pointnet2`."""
+    structs, nv_levels = _structure_stack_b(spec, ctx, xyz, keys, n_valid)
+    xyz_levels, cf = _compute_stack_b(params, spec, ctx, xyz, feats,
+                                      structs)
+    if spec.task == "cls":
+        nv = nv_levels[-1]
+        g = jax.vmap(
+            lambda c, f, v: _global_pool(params, c, f, n_valid=v),
+            in_axes=(0, 0, None if nv is None else 0),
+        )(xyz_levels[-1], cf, nv)
+        return apply_mlp(params.head, g)
+    f = cf
+    for lvl in range(len(spec.blocks) - 1, -1, -1):
+        f = _fp_b(xyz_levels[lvl], xyz_levels[lvl + 1], f,
+                  nv_levels[lvl + 1])
+    return _mask_rows_b(apply_mlp(params.head, f), n_valid)
+
+
 ARCHS.register("pointnet2", Arch("pointnet2", _init_pointnet2,
-                                 _fwd_pointnet2))
+                                 _fwd_pointnet2,
+                                 _fwd_pointnet2_batched))
 
 
 # ---- DGCNN (EdgeConv; every point a center) ---------------------------------
@@ -230,7 +340,44 @@ def _fwd_dgcnn(params: PCNParams, spec: PCNSpec, xyz, feats, key,
         _total(reports)
 
 
-ARCHS.register("dgcnn", Arch("dgcnn", _init_dgcnn, _fwd_dgcnn))
+def _structure_dgcnn(spec: PCNSpec, ctx: EngineCtx, xyz, key, n_valid):
+    """Stage 1 on ONE cloud for the EdgeConv stack: every block structures
+    the SAME cloud (no downsampling); key splits mirror
+    :func:`_fwd_dgcnn`."""
+    structs = []
+    for b in spec.blocks:
+        key, sub = jax.random.split(key)
+        structs.append(structure_block(block_cfg(b, ctx), xyz, sub,
+                                       n_valid=n_valid))
+    return tuple(structs)
+
+
+def _fwd_dgcnn_batched(params: PCNParams, spec: PCNSpec, xyz, feats, keys,
+                       ctx: EngineCtx, n_valid=None):
+    """Two-stage batched EdgeConv forward (see :func:`_fwd_dgcnn`)."""
+    structs = jax.vmap(
+        lambda x, k, nv: _structure_dgcnn(spec, ctx, x, k, nv)
+    )(xyz, keys, n_valid)
+    backend = get_fc_backend(ctx.fc_backend)
+    kernel_kw = dict(ctx.kernel_kw)
+    f, per_layer = feats, []
+    for b, mlp, st in zip(spec.blocks, params.blocks, structs):
+        f = compute_block_features_batched(block_cfg(b, ctx), mlp, xyz, f,
+                                           st, backend=backend,
+                                           kernel_kw=kernel_kw)
+        per_layer.append(f)
+    cat = jnp.concatenate(per_layer, axis=-1)
+    gmax = _mask_rows_b(cat, n_valid, fill=-_BIG).max(axis=1)
+    if spec.task == "cls":
+        return apply_mlp(params.head, gmax)
+    per_point = jnp.concatenate(
+        [cat, jnp.broadcast_to(gmax[:, None],
+                               cat.shape[:2] + gmax.shape[-1:])], axis=-1)
+    return _mask_rows_b(apply_mlp(params.head, per_point), n_valid)
+
+
+ARCHS.register("dgcnn", Arch("dgcnn", _init_dgcnn, _fwd_dgcnn,
+                             _fwd_dgcnn_batched))
 
 
 # ---- PointNeXt (stem + SA stages with InvResMLP residuals) ------------------
@@ -280,14 +427,47 @@ def _fwd_stem_stack(params, spec, xyz, feats, key, ctx, combine,
     return _mask_rows(apply_mlp(params.head, f), n_valid), _total(reports)
 
 
+def _fwd_stem_stack_batched(params, spec, xyz, feats, keys, ctx, combine,
+                            n_valid=None):
+    """Two-stage batched :func:`_fwd_stem_stack` (PointNeXt/PointVector):
+    vmapped geometry stack, batched stem/FC/residuals, vmapped FP
+    decoder."""
+    structs, nv_levels = _structure_stack_b(spec, ctx, xyz, keys, n_valid)
+    backend = get_fc_backend(ctx.fc_backend)
+    kernel_kw = dict(ctx.kernel_kw)
+    f = apply_mlp(params.stem, feats)
+    cur_xyz = xyz
+    xyz_levels = [xyz]
+    for b, mlp, extra, st in zip(spec.blocks, params.blocks, params.extras,
+                                 structs):
+        h = compute_block_features_batched(block_cfg(b, ctx), mlp, cur_xyz,
+                                           f, st, backend=backend,
+                                           kernel_kw=kernel_kw)
+        f = combine(extra, h)
+        cur_xyz = st.center_xyz
+        xyz_levels.append(cur_xyz)
+    for lvl in range(len(spec.blocks) - 1, -1, -1):
+        f = _fp_b(xyz_levels[lvl], xyz_levels[lvl + 1], f,
+                  nv_levels[lvl + 1])
+    return _mask_rows_b(apply_mlp(params.head, f), n_valid)
+
+
 def _fwd_pointnext(params, spec, xyz, feats, key, ctx, n_valid=None):
     return _fwd_stem_stack(params, spec, xyz, feats, key, ctx,
                            lambda inv, h: h + apply_mlp(inv, h),
                            n_valid=n_valid)
 
 
+def _fwd_pointnext_batched(params, spec, xyz, feats, keys, ctx,
+                           n_valid=None):
+    return _fwd_stem_stack_batched(params, spec, xyz, feats, keys, ctx,
+                                   lambda inv, h: h + apply_mlp(inv, h),
+                                   n_valid=n_valid)
+
+
 ARCHS.register("pointnext", Arch("pointnext", _init_pointnext,
-                                 _fwd_pointnext))
+                                 _fwd_pointnext,
+                                 _fwd_pointnext_batched))
 
 
 # ---- PointVector (stem + SA stages with vector recombination) ---------------
@@ -315,5 +495,13 @@ def _fwd_pointvector(params, spec, xyz, feats, key, ctx, n_valid=None):
                            n_valid=n_valid)
 
 
+def _fwd_pointvector_batched(params, spec, xyz, feats, keys, ctx,
+                             n_valid=None):
+    return _fwd_stem_stack_batched(
+        params, spec, xyz, feats, keys, ctx,
+        lambda vec, h: jax.nn.relu(apply_mlp(vec, h)), n_valid=n_valid)
+
+
 ARCHS.register("pointvector", Arch("pointvector", _init_pointvector,
-                                   _fwd_pointvector))
+                                   _fwd_pointvector,
+                                   _fwd_pointvector_batched))

@@ -20,8 +20,13 @@ object API wraps the same functions with a cached jit per engine:
     params = eng.init(jax.random.PRNGKey(0))
     logits = eng.apply(params, batch)
 
-Everything vmaps over the whole block stack (DS → islandize →
-hub-schedule → FC → head), per cloud, with per-cloud PRNG keys.
+The batched forward runs in two stages: the geometric chain (DS →
+islandize → hub-schedule) is vmapped per cloud with per-cloud PRNG keys,
+then Feature Computation runs *natively batched* — with the "pallas"
+backend, one pallas_call per FC call site covers the whole cloud stack
+(the batch is folded into the kernel grid).  ``kernel_kw`` tunes the
+kernels' tile sizes / VMEM budget; the "pallas_vmap" backend keeps the
+old vmap-of-kernels dispatch for A/B measurement.
 """
 from __future__ import annotations
 
@@ -63,11 +68,22 @@ def apply_single(params, xyz, feats, key, *, spec: PCNSpec,
 
 
 def apply(params, batch, *, spec: PCNSpec, mode: str = "lpcn",
-          fc_backend: str = "reference", isl_kw: dict | None = None):
-    """Padded batch -> logits, fully jit/vmap-compiled.
+          fc_backend: str = "reference", isl_kw: dict | None = None,
+          kernel_kw: dict | None = None):
+    """Padded batch -> logits, fully jit-compiled, batch-first.
 
     ``batch`` is a :class:`Batch` or a raw (B, N, 3) array.  Returns
     (B, n_classes) for cls specs, (B, N, n_classes) for seg specs.
+
+    The forward runs in two stages: a per-cloud *vmapped* DS → octree →
+    islandize → hub-schedule stage emits stacked (B, …) structures, then
+    the FC stage presents the whole cloud stack to the backend's batched
+    entry points — with ``fc_backend="pallas"`` that is ONE pallas_call
+    per FC call site (grid ``(B, ⌈S/TS⌉)`` / ``(B, ⌈H/TH⌉)``), not one
+    per cloud.  ``kernel_kw`` (static; e.g. ``{"ts": 32, "th": 2,
+    "vmem_budget_mb": 8.0}``) overrides the kernels' VMEM-budget tile
+    heuristic; backends without batched entries (``"reference"``,
+    ``"pallas_vmap"``) fall back to vmap at the same seam.
 
     Ragged contract: ``batch.n_valid`` masks padding end to end, so
     ``apply(batch)[i]`` (cls) / ``apply(batch)[i, :n_valid[i]]`` (seg)
@@ -76,6 +92,14 @@ def apply(params, batch, *, spec: PCNSpec, mode: str = "lpcn",
     """
     params = from_legacy(params)
     b = as_batch(batch)
+    # build (and thereby validate kernel_kw) unconditionally, so a typo'd
+    # knob raises even for archs that fall back to the vmap path below
+    ctx = EngineCtx.make(mode=mode, fc_backend=fc_backend,
+                         isl_kw=isl_kw, kernel_kw=kernel_kw)
+    arch = get_arch(spec)
+    if arch.forward_batched is not None:
+        return arch.forward_batched(params, spec, b.xyz, b.feats, b.keys,
+                                    ctx, b.n_valid)
 
     def one(xyz, feats, key, nv):
         logits, _ = apply_single(params, xyz, feats, key, spec=spec,
@@ -119,14 +143,16 @@ class PCNEngine:
 
     def __init__(self, spec: PCNSpec, *, mode: str = "lpcn",
                  fc_backend: str = "reference",
-                 isl_kw: dict | None = None):
+                 isl_kw: dict | None = None,
+                 kernel_kw: dict | None = None):
         self.spec = spec
         self.mode = mode
         self.fc_backend = fc_backend
         self.isl_kw = dict(isl_kw or {})
+        self.kernel_kw = dict(kernel_kw or {})
         self._japply = jax.jit(partial(
             apply, spec=spec, mode=mode, fc_backend=fc_backend,
-            isl_kw=self.isl_kw))
+            isl_kw=self.isl_kw, kernel_kw=self.kernel_kw))
 
     def init(self, key: jax.Array) -> PCNParams:
         return init(key, self.spec)

@@ -18,8 +18,20 @@ exactly:
     (they are the cheap narrow layers); the last two — the wide ones that
     dominate FLOPs — run fused in the kernel.
 
-Registered as ``"pallas"`` in ``repro.core.registry.FC_BACKENDS``; the
-pure-jnp oracle is the ``"reference"`` backend in ``core.pipeline``.
+Two registry entries share these lowerings:
+
+* ``"pallas"`` — the serving backend: its ``dense_batched`` /
+  ``reuse_batched`` entries run the natively batched kernels (grid
+  ``(B, ⌈S/TS⌉)`` / ``(B, ⌈H/TH⌉)``, weight-resident, lane-aligned) so
+  ONE pallas_call per FC call site serves the whole cloud stack.  Tile
+  sizes come from a VMEM-budget heuristic, overridable through the
+  ``kernel_kw`` knob (``{"ts", "th", "vmem_budget_mb"}``) threaded down
+  from ``engine.apply`` / ``PCNEngine``.
+* ``"pallas_vmap"`` — the pre-batching behavior (per-cloud kernels under
+  ``jax.vmap``), kept registered for A/B measurement in
+  ``benchmarks/run.py``.
+
+The pure-jnp oracle is the ``"reference"`` backend in ``core.pipeline``.
 """
 from __future__ import annotations
 
@@ -29,8 +41,8 @@ import jax.numpy as jnp
 from repro.core.mlp import MLP
 from repro.core.pipeline import FCBackend, _subset_inputs
 from repro.core.registry import FC_BACKENDS
-from repro.kernels.gather_mlp.ops import gather_mlp
-from repro.kernels.hub_reuse.ops import hub_reuse
+from repro.kernels.gather_mlp.ops import gather_mlp, gather_mlp_batched
+from repro.kernels.hub_reuse.ops import hub_reuse, hub_reuse_batched
 
 
 def _split_sign(w, b):
@@ -70,23 +82,24 @@ def two_layer_form(mlp: MLP):
     return prologue, (layers[-2].w, layers[-2].b, layers[-1].w, layers[-1].b)
 
 
-def _with_dummy_lane(raw, w1):
-    """The kernel requires >= 1 center lane; when normalization already
-    happened in a prologue, prepend a zero lane (and a zero row in W1) so
-    the in-kernel subtract is a no-op."""
-    zeros = jnp.zeros(raw.shape[:-1] + (1,), raw.dtype)
-    raw = jnp.concatenate([zeros, raw], axis=-1)
-    w1 = jnp.concatenate([jnp.zeros((1, w1.shape[1]), w1.dtype), w1], axis=0)
-    ctr = jnp.zeros((raw.shape[0], 1), raw.dtype)
-    return raw, ctr, w1
-
-
-def _dense_pallas(mlp: MLP, kind, xyz, feats, nbr_idx, centers_xyz,
-                  center_feats=None, nbr_valid=None):
-    """Dense FC through the fused gather_mlp kernel.  -> (S, Fout).
-    ``nbr_valid`` (S, K) masks ragged -1 slots inside the kernel's
-    max-pool (empty subsets come back zero-filled)."""
+def _dense_weights(mlp: MLP):
+    """Cloud-independent part of the gather_mlp lowering: the two-layer
+    weights (plus the optional jnp prologue).  The kernel requires >= 1
+    center lane; on the prologue path the raw tensor gets a zero lane
+    prepended (see :func:`_dense_raw_ctr`), mirrored here by a zero row
+    in W1 so the in-kernel subtract is a no-op."""
     prologue, (w1, b1, w2, b2) = two_layer_form(mlp)
+    if prologue is not None:
+        w1 = jnp.concatenate([jnp.zeros((1, w1.shape[1]), w1.dtype), w1],
+                             axis=0)
+    return prologue, (w1, b1, w2, b2)
+
+
+def _dense_raw_ctr(prologue, kind, xyz, feats, nbr_idx, centers_xyz,
+                   center_feats, nbr_valid):
+    """Per-cloud prep of the gather_mlp data operands.  -> (raw, ctr);
+    the batched dense entry vmaps exactly this (the weight lowering,
+    :func:`_dense_weights`, is cloud-independent and hoisted out)."""
     ids = nbr_idx if nbr_valid is None else jnp.where(nbr_valid, nbr_idx, 0)
     if prologue is None:
         if kind == "sa":
@@ -102,9 +115,23 @@ def _dense_pallas(mlp: MLP, kind, xyz, feats, nbr_idx, centers_xyz,
             cv = center_feats
             ctr = jnp.concatenate([cv, -cv], axis=-1)
     else:
-        x = _subset_inputs(kind, xyz, feats, ids, centers_xyz,
-                           center_feats)
-        raw, ctr, w1 = _with_dummy_lane(prologue(x), w1)
+        x = prologue(_subset_inputs(kind, xyz, feats, ids, centers_xyz,
+                                    center_feats))
+        # zero center lane (the W1 zero row is added in _dense_weights)
+        raw = jnp.concatenate(
+            [jnp.zeros(x.shape[:-1] + (1,), x.dtype), x], axis=-1)
+        ctr = jnp.zeros((raw.shape[0], 1), raw.dtype)
+    return raw, ctr
+
+
+def _dense_pallas(mlp: MLP, kind, xyz, feats, nbr_idx, centers_xyz,
+                  center_feats=None, nbr_valid=None):
+    """Dense FC through the fused gather_mlp kernel.  -> (S, Fout).
+    ``nbr_valid`` (S, K) masks ragged -1 slots inside the kernel's
+    max-pool (empty subsets come back zero-filled)."""
+    prologue, (w1, b1, w2, b2) = _dense_weights(mlp)
+    raw, ctr = _dense_raw_ctr(prologue, kind, xyz, feats, nbr_idx,
+                              centers_xyz, center_feats, nbr_valid)
     return gather_mlp(raw, ctr, w1, b1, w2, b2, mask=nbr_valid)
 
 
@@ -115,5 +142,47 @@ def _reuse_pallas(mlp: MLP, pool_in, slot, comp, live=None):
     return hub_reuse(x, slot, comp, w1, b1, w2, b2, live=live)
 
 
+def _kernel_kw(kernel_kw, *names):
+    kw = dict(kernel_kw or {})
+    return {k: kw[k] for k in names if kw.get(k) is not None}
+
+
+def _dense_pallas_batched(mlp: MLP, kind, xyz, feats, nbr_idx, centers_xyz,
+                          center_feats=None, nbr_valid=None,
+                          kernel_kw=None):
+    """Natively batched dense FC: per-cloud gathers are vmapped (cheap
+    VPU work), then ONE gather_mlp pallas_call with grid (B, ⌈S/TS⌉)
+    covers the whole cloud stack.  -> (B, S, Fout)."""
+    prologue, (w1, b1, w2, b2) = _dense_weights(mlp)
+    raw, ctr = jax.vmap(
+        lambda x, f, n, c, cf, nv: _dense_raw_ctr(
+            prologue, kind, x, f, n, c, cf, nv),
+        in_axes=(0, 0, 0, 0, None if center_feats is None else 0,
+                 None if nbr_valid is None else 0),
+    )(xyz, feats, nbr_idx, centers_xyz, center_feats, nbr_valid)
+    return gather_mlp_batched(raw, ctr, w1, b1, w2, b2, mask=nbr_valid,
+                              **_kernel_kw(kernel_kw, "ts",
+                                           "vmem_budget_mb"))
+
+
+def _reuse_pallas_batched(mlp: MLP, pool_in, slot, comp, live=None,
+                          kernel_kw=None):
+    """Natively batched reuse FC: ONE hub_reuse pallas_call with grid
+    (B, ⌈H/TH⌉) covers the whole cloud stack.  -> (B, H, M, Fout)."""
+    prologue, (w1, b1, w2, b2) = two_layer_form(mlp)
+    x = pool_in if prologue is None else prologue(pool_in)
+    return hub_reuse_batched(x, slot, comp, w1, b1, w2, b2, live=live,
+                             **_kernel_kw(kernel_kw, "th",
+                                          "vmem_budget_mb"))
+
+
 FC_BACKENDS.register("pallas", FCBackend(
-    name="pallas", dense=_dense_pallas, reuse=_reuse_pallas))
+    name="pallas", dense=_dense_pallas, reuse=_reuse_pallas,
+    dense_batched=_dense_pallas_batched,
+    reuse_batched=_reuse_pallas_batched))
+
+# the pre-batching behavior of the "pallas" entry — per-cloud kernels
+# under jax.vmap — stays available for A/B measurement (benchmarks/run.py
+# times it against the batched grid on identical inputs)
+FC_BACKENDS.register("pallas_vmap", FCBackend(
+    name="pallas_vmap", dense=_dense_pallas, reuse=_reuse_pallas))

@@ -8,11 +8,30 @@ adaptation: one fused kernel per subset tile —
     h   = relu(x @ W1 + b1) @ W2 + b2                  (MXU, f32 accum)
     out = max over K                                   (VPU)
 
-so the (TS·K, H) intermediate never touches HBM.  Grid over subset tiles;
-weights are small enough to sit whole in VMEM (≤ 256×256 f32 = 256 KB).
+so the (TS·K, H) intermediate never touches HBM.
 
-VMEM budget per step (TS=8, K=32, D=131, H=128):
-  raw tile 8·32·131·4 ≈ 134 KB + hidden 8·32·128·4 ≈ 131 KB + weights.
+Two entry points:
+
+* ``gather_mlp_pallas`` — one cloud, grid over subset tiles (the original
+  per-cloud kernel, kept for the eager path and vmap-of-kernels A/B).
+* ``gather_mlp_batched_pallas`` — the natively batched serving kernel:
+  grid ``(B, ⌈S/TS⌉)``, the batch folded into the grid so ONE pallas_call
+  serves the whole cloud stack.  Weights use constant ``lambda b, i:
+  (0, 0)`` index maps with ``dimension_semantics=("parallel",
+  "arbitrary")`` so Mosaic keeps them VMEM-resident across the entire
+  grid; the ``D``/``H``/``F`` lanes are zero-padded to 128-multiples
+  before the call (zero lanes are exact no-ops through the matmuls) and
+  the output is sliced back, so the MXU always sees aligned tiles.
+
+VMEM budget per grid step (the ``TS`` heuristic solves for this; lane-
+padded dims D'=⌈D/128⌉·128 etc., f32):
+  streamed (double-buffered):  2·TS·(K·(D'+1) + Dc) · 4 B
+      raw tile (TS, K, D') + mask (TS, K) + centers (TS, Dc)
+  intermediates:               TS·K·(H'+F') · 4 B      (x@W1, h@W2)
+  resident weights:            (D'·H' + H' + H'·F' + F') · 4 B
+  output tile:                 TS·F' · 4 B
+e.g. TS=64, K=32, D'=H'=F'=128: 2·64·(32·129+3)·4 ≈ 2.1 MB streamed
++ 64·32·256·4 ≈ 2.1 MB intermediates + 130 KB weights < 8 MB default.
 """
 from __future__ import annotations
 
@@ -21,6 +40,10 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.tiling import (DEFAULT_VMEM_BUDGET_MB, F32_BYTES, LANE,
+                                  largest_tile, pad_axis, pad_lanes, round_up)
 
 BIG = 3.4e38
 
@@ -104,3 +127,110 @@ def gather_mlp_pallas(raw: jnp.ndarray, centers: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((s, fout), raw.dtype),
         interpret=interpret,
     )(*args)
+
+
+# ---- natively batched kernel: grid (B, ceil(S/TS)) --------------------------
+
+def _gather_mlp_batched_kernel(raw_ref, ctr_ref, w1_ref, b1_ref, w2_ref,
+                               b2_ref, out_ref, *, dc: int):
+    """Blocks carry a leading singleton batch axis: raw (1, TS, K, D)."""
+    y = _mlp_pool(raw_ref[...][0], ctr_ref[...][0], w1_ref[...],
+                  b1_ref[...], w2_ref[...], b2_ref[...], dc)
+    out_ref[...] = jnp.max(y, axis=1)[None].astype(out_ref.dtype)
+
+
+def _gather_mlp_batched_masked_kernel(raw_ref, ctr_ref, mask_ref, w1_ref,
+                                      b1_ref, w2_ref, b2_ref, out_ref,
+                                      *, dc: int):
+    y = _mlp_pool(raw_ref[...][0], ctr_ref[...][0], w1_ref[...],
+                  b1_ref[...], w2_ref[...], b2_ref[...], dc)
+    live = mask_ref[...][0] != 0                          # (TS, K)
+    pooled = jnp.max(jnp.where(live[..., None], y, -BIG), axis=1)
+    pooled = jnp.where(live.any(axis=1)[:, None], pooled, 0.0)
+    out_ref[...] = pooled[None].astype(out_ref.dtype)
+
+
+def gather_mlp_tile_plan(s: int, k: int, d: int, dc: int, hdim: int,
+                         fout: int, ts: int | None = None,
+                         vmem_budget_mb: float = DEFAULT_VMEM_BUDGET_MB
+                         ) -> dict:
+    """Derive the batched kernel's tile plan: lane-padded dims and the
+    subset tile ``TS`` that fills (but does not bust) the VMEM budget.
+
+    ``ts`` overrides the heuristic (the ``kernel_kw`` knob)."""
+    dp = round_up(d, LANE)
+    hp = round_up(hdim, LANE)
+    fp = round_up(fout, LANE)
+    budget = int(vmem_budget_mb * 2 ** 20)
+    weights = dp * hp + hp + hp * fp + fp
+
+    def fits(t: int) -> bool:
+        streamed = 2 * t * (k * (dp + 1) + dc)       # double-buffered in
+        inter = t * k * (hp + fp)                    # x@W1, h@W2
+        out = t * fp
+        return F32_BYTES * (streamed + inter + out + weights) <= budget
+
+    if ts is None:
+        ts = largest_tile(s, fits)
+    ts = max(1, min(ts, s))
+    return {"ts": ts, "d_pad": dp, "h_pad": hp, "f_pad": fp,
+            "grid_tiles": pl.cdiv(s, ts),
+            "vmem_budget_mb": vmem_budget_mb}
+
+
+def gather_mlp_batched_pallas(raw: jnp.ndarray, centers: jnp.ndarray,
+                              w1, b1, w2, b2, ts: int | None = None,
+                              vmem_budget_mb: float = DEFAULT_VMEM_BUDGET_MB,
+                              interpret: bool = False, mask=None):
+    """Natively batched gather-MLP: raw (B, S, K, D), centers (B, S, Dc),
+    optional mask (B, S, K).  -> (B, S, F_out) in ONE pallas_call with
+    grid (B, ⌈S/TS⌉).
+
+    Weights ride constant index maps (VMEM-resident across the grid);
+    D/H/F are lane-padded to 128-multiples (sliced back on return);
+    ``ts`` / ``vmem_budget_mb`` are the ``kernel_kw`` knobs."""
+    b, s, k, d = raw.shape
+    dc = centers.shape[2]
+    hdim, fout = w1.shape[1], w2.shape[1]
+    plan = gather_mlp_tile_plan(s, k, d, dc, hdim, fout, ts=ts,
+                                vmem_budget_mb=vmem_budget_mb)
+    ts = plan["ts"]
+    dp, hp, fp = plan["d_pad"], plan["h_pad"], plan["f_pad"]
+
+    raw = pad_lanes(raw)
+    w1 = pad_axis(pad_lanes(w1), 0, dp)
+    b1 = pad_lanes(b1)
+    w2 = pad_axis(pad_lanes(w2), 0, hp)
+    b2 = pad_lanes(b2)
+
+    weight_specs = [
+        pl.BlockSpec((dp, hp), lambda bi, i: (0, 0)),
+        pl.BlockSpec((hp,), lambda bi, i: (0,)),
+        pl.BlockSpec((hp, fp), lambda bi, i: (0, 0)),
+        pl.BlockSpec((fp,), lambda bi, i: (0,)),
+    ]
+    data_specs = [
+        pl.BlockSpec((1, ts, k, dp), lambda bi, i: (bi, i, 0, 0)),
+        pl.BlockSpec((1, ts, dc), lambda bi, i: (bi, i, 0)),
+    ]
+    if mask is None:
+        kern = functools.partial(_gather_mlp_batched_kernel, dc=dc)
+        in_specs = data_specs + weight_specs
+        args = (raw, centers, w1, b1, w2, b2)
+    else:
+        kern = functools.partial(_gather_mlp_batched_masked_kernel, dc=dc)
+        in_specs = (data_specs
+                    + [pl.BlockSpec((1, ts, k), lambda bi, i: (bi, i, 0))]
+                    + weight_specs)
+        args = (raw, centers, mask.astype(jnp.int32), w1, b1, w2, b2)
+    out = pl.pallas_call(
+        kern,
+        grid=(b, pl.cdiv(s, ts)),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, ts, fp), lambda bi, i: (bi, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, fp), raw.dtype),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(*args)
+    return out[..., :fout]

@@ -1,24 +1,42 @@
-"""Jitted public wrapper for the fused gather-MLP-pool kernel."""
+"""Jitted public wrappers for the fused gather-MLP-pool kernel."""
 from __future__ import annotations
 
 from functools import partial
 
 import jax
 
-from .gather_mlp import gather_mlp_pallas
+from .gather_mlp import (gather_mlp_batched_pallas, gather_mlp_pallas,
+                         gather_mlp_tile_plan)
 from .ref import gather_mlp_ref
 
 
 @partial(jax.jit, static_argnames=("ts", "interpret"))
 def gather_mlp(raw, centers, w1, b1, w2, b2, ts: int = 8,
                interpret: bool | None = None, mask=None):
-    """Fused normalize → MLP → max-pool.  ``mask`` (S, K) bool/int (None =
-    all live) excludes ragged padding positions from the pool; rows with
-    zero live positions return zeros instead of -BIG."""
+    """Fused normalize → MLP → max-pool, one cloud.  ``mask`` (S, K)
+    bool/int (None = all live) excludes ragged padding positions from the
+    pool; rows with zero live positions return zeros instead of -BIG."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     return gather_mlp_pallas(raw, centers, w1, b1, w2, b2, ts=ts,
                              interpret=interpret, mask=mask)
 
 
-__all__ = ["gather_mlp", "gather_mlp_ref"]
+@partial(jax.jit, static_argnames=("ts", "vmem_budget_mb", "interpret"))
+def gather_mlp_batched(raw, centers, w1, b1, w2, b2, ts: int | None = None,
+                       vmem_budget_mb: float | None = None,
+                       interpret: bool | None = None, mask=None):
+    """Natively batched gather-MLP: (B, S, K, D) → (B, S, F_out) through
+    ONE pallas_call with grid (B, ⌈S/TS⌉); weights stay VMEM-resident
+    across the whole grid and D/H/F lanes are 128-aligned.  ``ts`` (None =
+    VMEM-budget heuristic) and ``vmem_budget_mb`` are the ``kernel_kw``
+    knobs; ``mask`` (B, S, K) as in :func:`gather_mlp`."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    kw = {} if vmem_budget_mb is None else {"vmem_budget_mb": vmem_budget_mb}
+    return gather_mlp_batched_pallas(raw, centers, w1, b1, w2, b2, ts=ts,
+                                     interpret=interpret, mask=mask, **kw)
+
+
+__all__ = ["gather_mlp", "gather_mlp_batched", "gather_mlp_ref",
+           "gather_mlp_tile_plan"]

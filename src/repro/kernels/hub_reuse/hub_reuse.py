@@ -1,7 +1,6 @@
 """Pallas TPU kernel: islandized FC — pool-MLP + compensated reuse-gather.
 
-The Islandization Unit's datapath (paper Fig. 13/14), one island per grid
-step:
+The Islandization Unit's datapath (paper Fig. 13/14):
 
   1. pool MLP: the island's Hub-Cache contents (C unique points, hub-
      relative inputs) go through the 2-layer MLP once          (MXU)
@@ -15,10 +14,35 @@ step:
 Overflow (never-cached) positions are computed by the gather_mlp kernel
 outside and merged with an elementwise max (max-pool commutes), so this
 kernel touches exactly the deduplicated workload — the paper's compute
-saving is structural, not simulated.
+saving is structural, not simulated.  A subset with zero live positions
+returns the merge identity ``-BIG``; the merge boundary in
+``core.pipeline`` zero-fills any row that stayed at the sentinel.
 
-VMEM budget per island step (C=64, M=64, K=32, F=128):
-  pool 64·131·4 ≈ 33 KB, one-hot 2048·64·4 ≈ 512 KB, out 64·128·4.
+Two entry points:
+
+* ``hub_reuse_pallas`` — one cloud, one island per grid step (kept for
+  the eager path and the vmap-of-kernels A/B).
+* ``hub_reuse_batched_pallas`` — the natively batched serving kernel:
+  grid ``(B, ⌈H/TH⌉)`` with a new island-tile axis ``TH``, so ONE
+  pallas_call serves the whole cloud stack.  The TH islands of a step
+  share one (TH·C, D')@(D', H') pool matmul and one offset-one-hot
+  (TH·M·K, TH·C)@(TH·C, F') reuse matmul — both fully lane-aligned
+  (D/H/F zero-padded to 128-multiples, sliced back after).  Weights ride
+  constant ``lambda b, j: (0, 0)`` index maps with
+  ``dimension_semantics=("parallel", "arbitrary")`` → VMEM-resident
+  across the whole grid.
+
+VMEM budget per grid step (the ``TH`` heuristic solves for this; lane-
+padded D', H', F'; f32):
+  streamed (double-buffered):  2·TH·(C·D' + M·K·2 + M·F') · 4 B
+      pool (TH, C, D') + slot/live (TH, M, K) + comp (TH, M, F')
+  one-hot + gathered:          (TH·M·K)·(TH·C) + TH·M·K·F') · 4 B
+  pool MLP intermediates:      TH·C·(H' + F') · 4 B
+  resident weights:            (D'·H' + H' + H'·F' + F') · 4 B
+  output tile:                 TH·M·F' · 4 B
+The one-hot term grows with TH², which is what caps TH (e.g. TH=4,
+M=64, K=32, C=64: one-hot 8192·256·4 = 8 MB alone → TH=2 at the 8 MB
+default).
 """
 from __future__ import annotations
 
@@ -27,6 +51,10 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.tiling import (DEFAULT_VMEM_BUDGET_MB, F32_BYTES, LANE,
+                                  largest_tile, pad_axis, pad_lanes, round_up)
 
 BIG = 3.4e38
 
@@ -122,3 +150,160 @@ def hub_reuse_pallas(pool_in: jnp.ndarray, slot: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((hn, m, fout), pool_in.dtype),
         interpret=interpret,
     )(*args)
+
+
+# ---- natively batched kernel: grid (B, ceil(H/TH)) --------------------------
+
+def _tiled_reuse_gather(pool_ref, slot_ref, comp_ref, w1_ref, b1_ref,
+                        w2_ref, b2_ref, *, hn: int):
+    """TH islands per step.  Blocks carry a leading singleton batch axis:
+    pool (1, TH, C, D), slot (1, TH, M, K), comp (1, TH, M, F).
+
+    Returns (gathered (TH, M, K, F), slot (TH, M*K)).  The TH pool MLPs
+    run as one (TH·C, D) matmul; the TH reuse gathers run as one
+    offset-one-hot (TH·M·K, TH·C) matmul — island j's slots map to
+    columns [j·C, (j+1)·C), unassigned slots (< 0) hit no column.
+
+    When TH does not divide H, the last step's out-of-range islands read
+    padding (NaN in interpret mode) — their pool rows are zeroed before
+    the shared one-hot matmul so 0·NaN can't contaminate real islands
+    (their own outputs are clipped on write anyway)."""
+    _, th, c, d = pool_ref.shape
+    _, _, m, k = slot_ref.shape
+    pool = pool_ref[...].reshape(th * c, d)
+    island_of_row = jax.lax.broadcasted_iota(jnp.int32, (th * c, 1), 0) // c
+    in_range = pl.program_id(1) * th + island_of_row < hn
+    pool = jnp.where(in_range, pool, 0.0)
+    h = jax.lax.dot_general(pool, w1_ref[...], (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    h = jax.nn.relu(h + b1_ref[...][None, :])
+    y = jax.lax.dot_general(h, w2_ref[...], (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y = y + b2_ref[...][None, :]                       # (TH*C, F)
+
+    slot = slot_ref[...].reshape(th, m * k)            # (TH, M*K)
+    offset = jax.lax.broadcasted_iota(jnp.int32, (th, m * k), 0) * c
+    col = jnp.where(slot >= 0, slot + offset, -1).reshape(th * m * k)
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, (th * m * k, th * c), 1)
+              == col[:, None]).astype(jnp.float32)
+    gathered = jax.lax.dot_general(
+        onehot, y, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)            # (TH*M*K, F) MXU
+    gathered = gathered.reshape(th, m, k, -1)
+    gathered = gathered + comp_ref[...].reshape(th, m, 1, -1)
+    return gathered, slot
+
+
+def _hub_reuse_batched_kernel(pool_ref, slot_ref, comp_ref, w1_ref, b1_ref,
+                              w2_ref, b2_ref, out_ref, *, hn: int):
+    _, th, m, k = slot_ref.shape
+    gathered, slot = _tiled_reuse_gather(pool_ref, slot_ref, comp_ref,
+                                         w1_ref, b1_ref, w2_ref, b2_ref,
+                                         hn=hn)
+    live = (slot >= 0).reshape(th, m, k, 1)
+    gathered = jnp.where(live, gathered, -BIG)
+    out_ref[...] = jnp.max(gathered, axis=2)[None].astype(out_ref.dtype)
+
+
+def _hub_reuse_batched_masked_kernel(pool_ref, slot_ref, comp_ref, live_ref,
+                                     w1_ref, b1_ref, w2_ref, b2_ref,
+                                     out_ref, *, hn: int):
+    _, th, m, k = slot_ref.shape
+    gathered, slot = _tiled_reuse_gather(pool_ref, slot_ref, comp_ref,
+                                         w1_ref, b1_ref, w2_ref, b2_ref,
+                                         hn=hn)
+    live = ((slot >= 0) & (live_ref[...].reshape(th, m * k) != 0)
+            ).reshape(th, m, k, 1)
+    gathered = jnp.where(live, gathered, -BIG)
+    out_ref[...] = jnp.max(gathered, axis=2)[None].astype(out_ref.dtype)
+
+
+def hub_reuse_tile_plan(hn: int, c: int, m: int, k: int, d: int, hdim: int,
+                        fout: int, th: int | None = None,
+                        vmem_budget_mb: float = DEFAULT_VMEM_BUDGET_MB
+                        ) -> dict:
+    """Derive the batched kernel's tile plan: lane-padded dims and the
+    island tile ``TH`` under the VMEM budget (the one-hot's TH² term is
+    the binding constraint).  ``th`` overrides the heuristic."""
+    dp = round_up(d, LANE)
+    hp = round_up(hdim, LANE)
+    fp = round_up(fout, LANE)
+    budget = int(vmem_budget_mb * 2 ** 20)
+    weights = dp * hp + hp + hp * fp + fp
+
+    def fits(t: int) -> bool:
+        streamed = 2 * t * (c * dp + 2 * m * k + m * fp)
+        onehot = (t * m * k) * (t * c)
+        inter = t * c * (hp + fp) + t * m * k * fp
+        out = t * m * fp
+        return F32_BYTES * (streamed + onehot + inter + out
+                            + weights) <= budget
+
+    if th is None:
+        th = largest_tile(hn, fits, base=1)
+    th = max(1, min(th, hn))
+    return {"th": th, "d_pad": dp, "h_pad": hp, "f_pad": fp,
+            "grid_tiles": pl.cdiv(hn, th),
+            "vmem_budget_mb": vmem_budget_mb}
+
+
+def hub_reuse_batched_pallas(pool_in: jnp.ndarray, slot: jnp.ndarray,
+                             comp: jnp.ndarray, w1, b1, w2, b2,
+                             th: int | None = None,
+                             vmem_budget_mb: float = DEFAULT_VMEM_BUDGET_MB,
+                             interpret: bool = False, live=None):
+    """Natively batched hub-reuse: pool_in (B, H, C, D), slot (B, H, M, K),
+    comp (B, H, M, F), optional live (B, H, M, K).  -> (B, H, M, F_out) in
+    ONE pallas_call with grid (B, ⌈H/TH⌉).
+
+    Weights ride constant index maps (VMEM-resident across the grid);
+    D/H/F are lane-padded to 128-multiples (sliced back on return);
+    ``th`` / ``vmem_budget_mb`` are the ``kernel_kw`` knobs."""
+    b, hn, c, d = pool_in.shape
+    _, _, m, k = slot.shape
+    hdim, fout = w1.shape[1], w2.shape[1]
+    plan = hub_reuse_tile_plan(hn, c, m, k, d, hdim, fout, th=th,
+                               vmem_budget_mb=vmem_budget_mb)
+    th = plan["th"]
+    dp, hp, fp = plan["d_pad"], plan["h_pad"], plan["f_pad"]
+
+    pool_in = pad_lanes(pool_in)
+    comp = pad_lanes(comp)
+    w1 = pad_axis(pad_lanes(w1), 0, dp)
+    b1 = pad_lanes(b1)
+    w2 = pad_axis(pad_lanes(w2), 0, hp)
+    b2 = pad_lanes(b2)
+
+    weight_specs = [
+        pl.BlockSpec((dp, hp), lambda bi, j: (0, 0)),
+        pl.BlockSpec((hp,), lambda bi, j: (0,)),
+        pl.BlockSpec((hp, fp), lambda bi, j: (0, 0)),
+        pl.BlockSpec((fp,), lambda bi, j: (0,)),
+    ]
+    data_specs = [
+        pl.BlockSpec((1, th, c, dp), lambda bi, j: (bi, j, 0, 0)),
+        pl.BlockSpec((1, th, m, k), lambda bi, j: (bi, j, 0, 0)),
+        pl.BlockSpec((1, th, m, fp), lambda bi, j: (bi, j, 0, 0)),
+    ]
+    if live is None:
+        kern = functools.partial(_hub_reuse_batched_kernel, hn=hn)
+        in_specs = data_specs + weight_specs
+        args = (pool_in, slot, comp, w1, b1, w2, b2)
+    else:
+        kern = functools.partial(_hub_reuse_batched_masked_kernel, hn=hn)
+        in_specs = (data_specs
+                    + [pl.BlockSpec((1, th, m, k),
+                                    lambda bi, j: (bi, j, 0, 0))]
+                    + weight_specs)
+        args = (pool_in, slot, comp, live.astype(jnp.int32), w1, b1, w2, b2)
+    out = pl.pallas_call(
+        kern,
+        grid=(b, pl.cdiv(hn, th)),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, th, m, fp), lambda bi, j: (bi, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hn, m, fp), pool_in.dtype),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(*args)
+    return out[..., :fout]

@@ -1,24 +1,46 @@
-"""Jitted public wrapper for the hub_reuse kernel."""
+"""Jitted public wrappers for the hub_reuse kernel."""
 from __future__ import annotations
 
 from functools import partial
 
 import jax
 
-from .hub_reuse import hub_reuse_pallas
+from .hub_reuse import (hub_reuse_batched_pallas, hub_reuse_pallas,
+                        hub_reuse_tile_plan)
 from .ref import hub_reuse_ref
 
 
 @partial(jax.jit, static_argnames=("interpret",))
 def hub_reuse(pool_in, slot, comp, w1, b1, w2, b2,
               interpret: bool | None = None, live=None):
-    """Pool-MLP + compensated reuse-gather + masked max-pool.  ``live``
-    (H, M, K) bool/int (None = all resident) additionally masks positions
-    whose cache entry is not actually resident (ragged batches)."""
+    """Pool-MLP + compensated reuse-gather + masked max-pool, one cloud.
+    ``live`` (H, M, K) bool/int (None = all resident) additionally masks
+    positions whose cache entry is not actually resident (ragged
+    batches)."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     return hub_reuse_pallas(pool_in, slot, comp, w1, b1, w2, b2,
                             interpret=interpret, live=live)
 
 
-__all__ = ["hub_reuse", "hub_reuse_ref"]
+@partial(jax.jit, static_argnames=("th", "vmem_budget_mb", "interpret"))
+def hub_reuse_batched(pool_in, slot, comp, w1, b1, w2, b2,
+                      th: int | None = None,
+                      vmem_budget_mb: float | None = None,
+                      interpret: bool | None = None, live=None):
+    """Natively batched hub-reuse: (B, H, C, D) → (B, H, M, F_out) through
+    ONE pallas_call with grid (B, ⌈H/TH⌉); TH islands share one pool
+    matmul and one offset-one-hot reuse matmul per step, weights stay
+    VMEM-resident and D/H/F lanes are 128-aligned.  ``th`` (None = VMEM-
+    budget heuristic) and ``vmem_budget_mb`` are the ``kernel_kw`` knobs;
+    ``live`` (B, H, M, K) as in :func:`hub_reuse`."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    kw = {} if vmem_budget_mb is None else {"vmem_budget_mb": vmem_budget_mb}
+    return hub_reuse_batched_pallas(pool_in, slot, comp, w1, b1, w2, b2,
+                                    th=th, interpret=interpret, live=live,
+                                    **kw)
+
+
+__all__ = ["hub_reuse", "hub_reuse_batched", "hub_reuse_ref",
+           "hub_reuse_tile_plan"]

@@ -1,0 +1,61 @@
+"""Shared tile/lane helpers for the batched FC kernels.
+
+TPU tiles are (8, 128) for f32: the MXU/VPU want the minor (lane) axis in
+multiples of 128 and the second-minor (sublane) axis in multiples of 8.
+The FC kernels pad their contraction/output lanes up front (zero lanes
+through a matmul are exact no-ops) and slice the output back, so Mosaic
+never sees a ragged lane dimension; tile sizes along the grid axes are
+derived from a VMEM budget instead of being hardcoded.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+LANE = 128          # f32 minor-axis tile
+SUBLANE = 8         # f32 second-minor-axis tile
+F32_BYTES = 4
+DEFAULT_VMEM_BUDGET_MB = 8.0   # of ~16 MB/core; leaves double-buffer room
+
+
+def round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def pad_axis(x: jnp.ndarray, axis: int, target: int) -> jnp.ndarray:
+    """Zero-pad ``axis`` of ``x`` up to length ``target`` (no-op if equal)."""
+    cur = x.shape[axis]
+    if cur == target:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, target - cur)
+    return jnp.pad(x, widths)
+
+
+def pad_lanes(x: jnp.ndarray, multiple: int = LANE) -> jnp.ndarray:
+    """Zero-pad the last (lane) axis of ``x`` to a multiple of ``multiple``."""
+    return pad_axis(x, x.ndim - 1, round_up(x.shape[-1], multiple))
+
+
+def largest_tile(limit: int, fits, base: int = SUBLANE) -> int:
+    """Largest power-of-two multiple of ``base`` (capped at ``limit``) for
+    which ``fits(tile) -> bool`` holds.  When even the base tile busts the
+    budget, halve below it (down to 1) so an explicit tight budget is
+    honored instead of silently exceeded.
+
+    ``fits`` is a VMEM-bytes predicate built from the kernel's per-step
+    buffer shapes; the scan is tiny and static (runs at trace time).
+    """
+    limit = max(limit, 1)
+    t = min(base, limit)
+    if not fits(t):
+        while t > 1 and not fits(t):
+            t //= 2
+        return max(t, 1)
+    best = t
+    t *= 2
+    while t <= limit:
+        if not fits(t):
+            break
+        best = t
+        t *= 2
+    return best

@@ -1,76 +1,14 @@
-"""Shared PCN model machinery — DEPRECATED compatibility layer.
+"""Shared PCN model machinery — spec re-export layer.
 
 The typed, batch-first API lives in :mod:`repro.engine`; this module
-re-exports the spec types from there and keeps the historical dict-based
-helpers as thin shims so old call sites keep working.  New code should
-use ``engine.init`` / ``engine.apply`` / ``engine.PCNEngine``.
+re-exports the spec types from there so historical ``from
+repro.models.common import BlockSpec`` imports keep working.  The PR-1
+dict-based helpers (``init_model`` / ``run_blocks`` / ``global_pool`` /
+``apply_head``) completed their one-more-cycle deprecation window and
+are gone — use ``engine.init`` / ``engine.apply`` /
+``engine.apply_single`` (and ``engine.to_legacy`` where an old dict
+layout is genuinely needed).
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
-from repro.core.mlp import apply_mlp
-from repro.core.pipeline import LPCNConfig, lpcn_block
-from repro.core.workload import WorkloadReport
 from repro.engine.spec import BlockSpec, PCNSpec, block_in_dim  # noqa: F401
-
-
-def init_model(key: jax.Array, spec: PCNSpec):
-    """DEPRECATED: legacy dict-layout init; routes through
-    ``repro.engine`` (generic SA-stack family) and converts back."""
-    from repro import engine
-    from repro.engine.archs import _init_pointnet2
-    return engine.to_legacy(_init_pointnet2(key, spec), "pointnet2")
-
-
-def lpcn_cfg_for(b: BlockSpec, mode: str, isl_kw: dict) -> LPCNConfig:
-    return LPCNConfig(n_centers=b.n_centers, k=b.k, sampler=b.sampler,
-                      neighbor=b.neighbor, radius=b.radius, mode=mode,
-                      block_kind=b.kind, **isl_kw)
-
-
-def run_blocks(params, spec: PCNSpec, xyz, feats, key, mode: str,
-               isl_kw: dict | None = None, with_report: bool = False):
-    """DEPRECATED (use ``repro.engine``): run the block stack on ONE
-    cloud.  Returns (center_xyz, center_f, reports, per_block_outputs)."""
-    isl_kw = isl_kw or {}
-    reports, saved = [], []
-    cur_xyz, cur_f = xyz, feats
-    for b, mlp in zip(spec.blocks, params["blocks"]):
-        key, sub = jax.random.split(key)
-        cfg = lpcn_cfg_for(b, mode, isl_kw)
-        out = lpcn_block(cfg, mlp, cur_xyz, cur_f, sub,
-                         with_report=with_report)
-        saved.append((cur_xyz, cur_f, out))
-        cur_xyz, cur_f = out.center_xyz, out.features
-        if with_report and out.report is not None:
-            reports.append(out.report)
-    return cur_xyz, cur_f, reports, saved
-
-
-def global_pool(params, spec: PCNSpec, center_xyz, center_f):
-    """Final global SA: one subset containing every remaining center —
-    the paper's example of a no-overlap layer (processed traditionally)."""
-    if params["global"] is None:
-        return center_f.max(axis=0)
-    centroid = center_xyz.mean(axis=0)
-    x = jnp.concatenate([center_xyz - centroid, center_f], axis=-1)
-    h = apply_mlp(params["global"], x)
-    return h.max(axis=0)
-
-
-def feature_propagation(xyz_dst, xyz_src, f_src, k: int = 3):
-    """DEPRECATED alias of :func:`repro.engine.feature_propagation`."""
-    from repro.engine.archs import feature_propagation as fp
-    return fp(xyz_dst, xyz_src, f_src, k)
-
-
-def apply_head(params, f):
-    return apply_mlp(params["head"], f)
-
-
-def total_report(reports) -> WorkloadReport | None:
-    if not reports:
-        return None
-    return WorkloadReport.total(reports)

@@ -9,7 +9,7 @@ delta compensation exact (paper §VI-E).
 """
 from __future__ import annotations
 
-from .common import BlockSpec, PCNSpec, init_model
+from .common import BlockSpec, PCNSpec
 
 DGCNN_C = PCNSpec(
     name="dgcnn_c",
@@ -46,30 +46,7 @@ def with_points(spec: PCNSpec, n: int) -> PCNSpec:
         BlockSpec(n, b.k, b.mlp_dims, b.radius, b.kind, b.sampler,
                   b.neighbor) for b in spec.blocks))
 
-
-def init(key, spec=DGCNN_C):
-    """DEPRECATED shim: legacy dict params with the generic head (use
-    ``init_for_task`` / ``repro.engine.init`` for the correct head)."""
-    return init_model(key, spec)
-
-
-def apply(params, spec, xyz, feats, key, mode: str = "lpcn",
-          isl_kw: dict | None = None, with_report: bool = False):
-    """EdgeConv stack; every layer keeps all N points (no downsampling).
-
-    DEPRECATED shim: routes through ``repro.engine.apply_single``.
-    """
-    from repro import engine
-    return engine.apply_single(params, xyz, feats, key, spec=spec,
-                               mode=mode, isl_kw=isl_kw,
-                               with_report=with_report)
-
-
-def init_for_task(key, spec):
-    """Head input dim differs from the generic initializer (concat of all
-    EdgeConv outputs [+ global]), so rebuild the head accordingly.
-
-    DEPRECATED shim: equals ``repro.engine.init`` in legacy dict form.
-    """
-    from repro import engine
-    return engine.to_legacy(engine.init(key, spec), "dgcnn")
+# The PR-1 ``init``/``apply``/``init_for_task`` dict shims completed
+# their one-more-cycle deprecation window and are gone: use
+# ``repro.engine.init`` (builds the task-correct concat head) /
+# ``engine.apply`` / ``engine.apply_single``.

@@ -8,7 +8,7 @@ Block shapes follow the original SSG configs (and paper Fig. 4a).
 """
 from __future__ import annotations
 
-from .common import BlockSpec, PCNSpec, init_model
+from .common import BlockSpec, PCNSpec
 
 POINTNET2_C = PCNSpec(
     name="pointnet2_c",
@@ -45,22 +45,7 @@ POINTNET2_S = PCNSpec(
     task="seg",
 )
 
-
-def init(key, spec=POINTNET2_C):
-    """DEPRECATED shim: legacy dict params (use ``repro.engine.init``)."""
-    return init_model(key, spec)
-
-
-def apply(params, spec, xyz, feats, key, mode: str = "lpcn",
-          isl_kw: dict | None = None, with_report: bool = False):
-    """One cloud -> (logits, total WorkloadReport | None).
-
-    cls:  (n_classes,) logits.   seg: (N, n_classes) per-point logits.
-
-    DEPRECATED shim: routes through ``repro.engine.apply_single``; prefer
-    the batched ``repro.engine.apply`` for anything beyond one cloud.
-    """
-    from repro import engine
-    return engine.apply_single(params, xyz, feats, key, spec=spec,
-                               mode=mode, isl_kw=isl_kw,
-                               with_report=with_report)
+# The PR-1 ``init``/``apply`` dict shims completed their one-more-cycle
+# deprecation window and are gone: use ``repro.engine.init`` /
+# ``engine.apply`` (batched) / ``engine.apply_single`` (one cloud);
+# ``engine.to_legacy(params, "pointnet2")`` renders the old dict layout.

@@ -26,19 +26,6 @@ POINTNEXT_S = PCNSpec(
 
 STEM_DIM = 32
 
-
-def init(key, spec=POINTNEXT_S, stem_dim: int = STEM_DIM):
-    """DEPRECATED shim: legacy dict params (use ``repro.engine.init``)."""
-    from repro import engine
-    from repro.engine.archs import _init_pointnext
-    return engine.to_legacy(_init_pointnext(key, spec, stem_dim),
-                            "pointnext")
-
-
-def apply(params, spec, xyz, feats, key, mode: str = "lpcn",
-          isl_kw: dict | None = None, with_report: bool = False):
-    """DEPRECATED shim: routes through ``repro.engine.apply_single``."""
-    from repro import engine
-    return engine.apply_single(params, xyz, feats, key, spec=spec,
-                               mode=mode, isl_kw=isl_kw,
-                               with_report=with_report)
+# The PR-1 ``init``/``apply`` dict shims completed their one-more-cycle
+# deprecation window and are gone: use ``repro.engine.init`` /
+# ``engine.apply`` / ``engine.apply_single``.

@@ -25,19 +25,6 @@ POINTVECTOR_L = PCNSpec(
     activation="block_end",   # -> exact delta compensation (paper §VI-E)
 )
 
-
-def init(key, spec=POINTVECTOR_L, stem_dim: int = 64):
-    """DEPRECATED shim: legacy dict params (use ``repro.engine.init``)."""
-    from repro import engine
-    from repro.engine.archs import _init_pointvector
-    return engine.to_legacy(_init_pointvector(key, spec, stem_dim),
-                            "pointvector")
-
-
-def apply(params, spec, xyz, feats, key, mode: str = "lpcn",
-          isl_kw: dict | None = None, with_report: bool = False):
-    """DEPRECATED shim: routes through ``repro.engine.apply_single``."""
-    from repro import engine
-    return engine.apply_single(params, xyz, feats, key, spec=spec,
-                               mode=mode, isl_kw=isl_kw,
-                               with_report=with_report)
+# The PR-1 ``init``/``apply`` dict shims completed their one-more-cycle
+# deprecation window and are gone: use ``repro.engine.init`` /
+# ``engine.apply`` / ``engine.apply_single``.

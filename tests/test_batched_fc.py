@@ -1,0 +1,246 @@
+"""The natively batched FC path: batched-pallas == reference oracle ==
+old vmap-of-kernels path for all 4 model families × modes under ragged
+``n_valid`` mixes; one pallas_call per FC call site (not per cloud); one
+executable serves differing ``n_valid``; the hub_reuse −BIG sentinel
+never leaks past the merge boundary."""
+import zlib
+from dataclasses import replace
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.data.synthetic import make_cloud
+from repro.engine import Batch, BlockSpec
+from repro.models import MODEL_ZOO, dgcnn, pointnet2
+
+KEY = jax.random.PRNGKey(0)
+
+SPECS = {
+    "pointnet2": replace(pointnet2.POINTNET2_C, blocks=(
+        BlockSpec(48, 8, (16, 32)), BlockSpec(16, 8, (32, 48)))),
+    "dgcnn": replace(dgcnn.with_points(dgcnn.DGCNN_C, 96), blocks=(
+        BlockSpec(96, 8, (24,), kind="edge", sampler="all"),
+        BlockSpec(96, 8, (32,), kind="edge", sampler="all"))),
+    "pointnext": replace(MODEL_ZOO["pointnext_s"][1], blocks=(
+        BlockSpec(48, 8, (24,)), BlockSpec(16, 8, (32,)))),
+    "pointvector": replace(MODEL_ZOO["pointvector_l"][1], blocks=(
+        BlockSpec(48, 8, (24,)), BlockSpec(16, 8, (48,)))),
+}
+
+# ragged n_valid mixes over N=96 clouds: a plain ragged mix, B=1, and a
+# batch containing a (nearly) fully-padded cloud — 1 real point, 95 rows
+# of padding — the hardest empty-subset / empty-island corner
+RAGGED_MIXES = {
+    "mix": [96, 70, 57],
+    "b1": [64],
+    "fully_padded": [96, 1],
+}
+
+
+def _batch(spec, sizes, seed=0):
+    rng = np.random.default_rng(seed)
+    n, b = 96, len(sizes)
+    xyz = jnp.asarray(np.stack([make_cloud(rng, n) for _ in range(b)]))
+    f_in = spec.in_feats
+    feats = xyz if f_in == 3 else jnp.concatenate(
+        [xyz, jnp.asarray(rng.uniform(0, 1, (b, n, f_in - 3)),
+                          jnp.float32)], -1)
+    return Batch.make(xyz, feats, key=jax.random.PRNGKey(7),
+                      n_valid=jnp.asarray(sizes, jnp.int32))
+
+
+@pytest.mark.parametrize("mix", sorted(RAGGED_MIXES), ids=str)
+@pytest.mark.parametrize("mode", ["traditional", "lpcn"])
+@pytest.mark.parametrize("model", sorted(SPECS), ids=str)
+def test_batched_pallas_matches_reference_and_vmap(model, mode, mix):
+    """Batched-grid pallas == jnp reference (≤1e-4) == the old
+    vmap-of-kernels path, under ragged batches."""
+    spec = SPECS[model]
+    params = engine.init(KEY, spec)
+    # deterministic per-case seed (hash() is randomized per process)
+    seed = zlib.crc32(f"{model}-{mode}".encode()) % 1000
+    b = _batch(spec, RAGGED_MIXES[mix], seed=seed)
+    outs = {be: engine.apply(params, b, spec=spec, mode=mode,
+                             fc_backend=be)
+            for be in ("reference", "pallas", "pallas_vmap")}
+    for be, out in outs.items():
+        assert bool(jnp.isfinite(out).all()), (model, mode, mix, be)
+    np.testing.assert_allclose(np.asarray(outs["pallas"]),
+                               np.asarray(outs["reference"]),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(outs["pallas"]),
+                               np.asarray(outs["pallas_vmap"]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def _count_pallas_calls(jaxpr, grids):
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+            gm = eqn.params.get("grid_mapping")
+            grids.append(tuple(getattr(gm, "grid", ())))
+        for v in eqn.params.values():
+            for sub in jax.tree_util.tree_leaves(
+                    v, is_leaf=lambda x: hasattr(x, "eqns")):
+                if hasattr(sub, "eqns"):
+                    n += _count_pallas_calls(sub, grids)
+    return n
+
+
+@pytest.mark.parametrize("mode,per_block", [("traditional", 1),
+                                            ("lpcn", 2)])
+def test_one_pallas_call_per_fc_block(mode, per_block):
+    """engine.apply(fc_backend="pallas") issues exactly one pallas_call
+    per FC call site — gather_mlp (+ hub_reuse in lpcn mode) per block —
+    with the batch folded into the leading grid axis, independent of B."""
+    spec = SPECS["pointnet2"]
+    params = engine.init(KEY, spec)
+    expected = per_block * len(spec.blocks)
+    for bsz in (1, 4):
+        b = _batch(spec, [96] * bsz)
+        jx = jax.make_jaxpr(partial(engine.apply, spec=spec, mode=mode,
+                                    fc_backend="pallas"))(params, b)
+        grids = []
+        n = _count_pallas_calls(jx.jaxpr, grids)
+        assert n == expected, (bsz, n, expected)
+        # the batch is IN the grid — not dispatched per cloud
+        assert all(g[0] == bsz for g in grids), grids
+
+
+def test_one_executable_serves_differing_n_valid():
+    """n_valid is traced data: one compiled executable serves every
+    ragged mix of the same batch shape."""
+    spec = SPECS["pointnet2"]
+    params = engine.init(KEY, spec)
+    f = jax.jit(partial(engine.apply, spec=spec, mode="lpcn",
+                        fc_backend="pallas"))
+    o1 = f(params, _batch(spec, [96, 50, 96]))
+    o2 = f(params, _batch(spec, [20, 96, 77], seed=3))
+    assert o1.shape == o2.shape
+    assert f._cache_size() == 1
+    assert bool(jnp.isfinite(o1).all() and jnp.isfinite(o2).all())
+
+
+@pytest.mark.parametrize("model", sorted(SPECS), ids=str)
+def test_batched_forward_matches_apply_single(model):
+    """The documented ragged contract holds for every family's batched
+    two-stage forward: apply(batch)[i] (cls) / apply(batch)[i, :nv] (seg)
+    == apply_single on cloud i's unpadded prefix (the batched structure
+    stage must mirror the per-cloud key-split sequence exactly)."""
+    spec = SPECS[model]
+    params = engine.init(KEY, spec)
+    sizes = [96, 70]
+    b = _batch(spec, sizes, seed=11)
+    out = engine.apply(params, b, spec=spec, mode="lpcn",
+                       fc_backend="reference")
+    for i, nv in enumerate(sizes):
+        ref, _ = engine.apply_single(
+            params, b.xyz[i, :nv], b.feats[i, :nv], b.keys[i], spec=spec,
+            mode="lpcn")
+        got = out[i] if spec.task == "cls" else out[i, :nv]
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_kw_rejects_unknown_keys():
+    """A typo'd kernel_kw key raises instead of silently measuring the
+    untuned heuristic."""
+    spec = SPECS["pointnet2"]
+    params = engine.init(KEY, spec)
+    with pytest.raises(ValueError, match="unknown kernel_kw"):
+        engine.apply(params, _batch(spec, [96]), spec=spec,
+                     fc_backend="pallas", kernel_kw={"tile_s": 32})
+
+
+def test_kernel_kw_overrides_tiles():
+    """The kernel_kw knob reaches the kernels (different tile sizes, same
+    numbers)."""
+    spec = SPECS["pointnet2"]
+    params = engine.init(KEY, spec)
+    b = _batch(spec, [96, 60])
+    base = engine.apply(params, b, spec=spec, mode="lpcn",
+                        fc_backend="pallas")
+    tuned = engine.apply(params, b, spec=spec, mode="lpcn",
+                         fc_backend="pallas",
+                         kernel_kw={"ts": 4, "th": 2,
+                                    "vmem_budget_mb": 2.0})
+    np.testing.assert_allclose(np.asarray(tuned), np.asarray(base),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_hub_reuse_sentinel_guarded_at_merge():
+    """Regression (merge-boundary zero-fill): a subset whose positions
+    are all cached — so its overflow side is empty (-BIG) — must come
+    back finite from fc_lpcn even if the reuse partial itself returns the
+    -BIG sentinel, mirroring gather_mlp's empty-subset zero-fill."""
+    from repro.core.islandize import Islands
+    from repro.core.hub_schedule import Schedule
+    from repro.core.mlp import init_mlp
+    from repro.core.pipeline import (BIG, FCBackend, LPCNConfig, fc_lpcn,
+                                     fc_lpcn_batched)
+
+    S, K, H, M, C, N, Fout = 4, 2, 1, 4, 8, 8, 16
+    mlp = init_mlp(jax.random.PRNGKey(1), [3 + 3, 8, Fout])
+    rng = np.random.default_rng(0)
+    xyz = jnp.asarray(rng.normal(size=(N, 3)), jnp.float32)
+    feats = xyz
+    nbr = jnp.asarray(rng.integers(0, N, (S, K)), jnp.int32)
+    centers = xyz[:S]
+    islands = Islands(
+        members=jnp.arange(M, dtype=jnp.int32)[None, :],   # (1, M)
+        hub=jnp.asarray([0], jnp.int32),
+        solo=jnp.zeros((S,), bool),
+        round_of=jnp.zeros((S,), jnp.int32))
+    sched = Schedule(
+        pool_ids=jnp.arange(C, dtype=jnp.int32)[None, :],  # all resident
+        reuse_slot=jnp.zeros((H, M, K), jnp.int32),        # all cached
+        is_first=jnp.zeros((H, M, K), bool),
+        subset_valid=jnp.ones((H, M), bool),
+        pos_live=jnp.ones((H, M, K), bool))
+    cfg = LPCNConfig(n_centers=S, k=K, mode="lpcn")
+
+    # a backend whose reuse leaks the sentinel (the corner the guard is
+    # for); dense returns zeros so fallback rows are visibly finite too
+    bad = FCBackend(
+        name="bad",
+        dense=lambda mlp_, kind, *a, **k: jnp.zeros((S, Fout)),
+        reuse=lambda mlp_, pool_in, slot, comp, live=None: jnp.full(
+            (H, M, Fout), -BIG))
+    out = fc_lpcn(mlp, xyz, feats, nbr, centers, islands, sched, cfg,
+                  centers, backend=bad)
+    assert bool(jnp.isfinite(out).all())
+    # all-cached subsets (no overflow, no fallback) zero-fill exactly
+    np.testing.assert_array_equal(np.asarray(out[:M]), 0.0)
+
+    stack = lambda t: jax.tree.map(lambda x: x[None], t)
+    out_b = fc_lpcn_batched(mlp, xyz[None], feats[None], nbr[None],
+                            centers[None], stack(islands), stack(sched),
+                            cfg, centers[None], backend=bad)
+    assert bool(jnp.isfinite(out_b).all())
+    np.testing.assert_array_equal(np.asarray(out_b[0, :M]), 0.0)
+
+
+def test_hub_reuse_kernel_keeps_merge_identity():
+    """The kernel side of the contract: a subset with zero live positions
+    returns exactly -BIG from hub_reuse (the merge identity — NOT zero,
+    which would poison max-merges with negative overflow features)."""
+    from repro.kernels.hub_reuse.ops import hub_reuse, hub_reuse_batched
+    rng = np.random.default_rng(1)
+    HN, C, M, K, D, Hd, F = 2, 8, 3, 4, 6, 16, 32
+    pool = jnp.asarray(rng.normal(size=(HN, C, D)), jnp.float32)
+    slot = jnp.full((HN, M, K), -1, jnp.int32)             # nothing cached
+    comp = jnp.zeros((HN, M, F), jnp.float32)
+    w1 = jnp.asarray(rng.normal(size=(D, Hd)), jnp.float32)
+    w2 = jnp.asarray(rng.normal(size=(Hd, F)), jnp.float32)
+    b1, b2 = jnp.zeros(Hd), jnp.zeros(F)
+    sentinel = np.float32(-3.4e38)
+    z = hub_reuse(pool, slot, comp, w1, b1, w2, b2)
+    np.testing.assert_array_equal(np.asarray(z), sentinel)
+    zb = hub_reuse_batched(pool[None], slot[None], comp[None],
+                           w1, b1, w2, b2)
+    np.testing.assert_array_equal(np.asarray(zb[0]), sentinel)

@@ -44,10 +44,11 @@ def test_batched_apply_matches_per_cloud(mode):
     batched = engine.apply(params, Batch.make(xyz, key=keys),
                            spec=SMALL_PN2, mode=mode)
     assert batched.shape == (3, 40)
+    # legacy dict params route through apply_single unchanged
     legacy = engine.to_legacy(params, "pointnet2")
     for i in range(3):
-        logits, _ = pointnet2.apply(legacy, SMALL_PN2, xyz[i], xyz[i],
-                                    keys[i], mode=mode)
+        logits, _ = engine.apply_single(legacy, xyz[i], xyz[i], keys[i],
+                                        spec=SMALL_PN2, mode=mode)
         np.testing.assert_allclose(np.asarray(batched[i]),
                                    np.asarray(logits),
                                    rtol=1e-5, atol=1e-5)
@@ -164,8 +165,8 @@ def test_all_zoo_models_through_engine():
 
 
 def test_legacy_dict_params_accepted():
-    """Shim contract: engine.apply accepts the old dict layouts."""
-    legacy = pointnet2.init(KEY, SMALL_PN2)
+    """engine.apply accepts the old dict layouts (to_legacy round-trip)."""
+    legacy = engine.to_legacy(engine.init(KEY, SMALL_PN2), "pointnet2")
     assert isinstance(legacy, dict)
     out = engine.apply(legacy, Batch.make(_clouds(2, 128, seed=6)),
                        spec=SMALL_PN2)

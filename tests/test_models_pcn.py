@@ -1,9 +1,11 @@
-"""PCN model smoke tests (reduced clouds) + workload reports."""
+"""PCN model smoke tests (reduced clouds) + workload reports, through
+the engine API (the PR-1 ``models.*.init``/``apply`` shims are gone)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import engine
 from repro.data.synthetic import make_cloud
 from repro.models import dgcnn, pointnet2, pointnext, pointvector
 
@@ -28,9 +30,9 @@ def test_pointnet2_cls():
     from repro.models.common import BlockSpec
     spec = replace(pointnet2.POINTNET2_C, blocks=(
         BlockSpec(128, 16, (32, 64)), BlockSpec(32, 16, (64, 128))))
-    p = pointnet2.init(KEY, spec)
-    logits, rep = pointnet2.apply(p, spec, xyz, feats, KEY,
-                                  mode="lpcn", with_report=True)
+    p = engine.init(KEY, spec)
+    logits, rep = engine.apply_single(p, xyz, feats, KEY, spec=spec,
+                                      mode="lpcn", with_report=True)
     assert logits.shape == (40,)
     assert bool(jnp.isfinite(logits).all())
     assert rep.concrete().fetch_saving > 0
@@ -42,9 +44,9 @@ def test_pointnet2_seg():
     from repro.models.common import BlockSpec
     spec = replace(pointnet2.POINTNET2_S, blocks=(
         BlockSpec(128, 16, (32, 64)), BlockSpec(32, 16, (64, 128))))
-    p = pointnet2.init(KEY, spec)
-    logits, _ = pointnet2.apply(p, spec, xyz, feats, KEY,
-                                mode="traditional")
+    p = engine.init(KEY, spec)
+    logits, _ = engine.apply_single(p, xyz, feats, KEY, spec=spec,
+                                    mode="traditional")
     assert logits.shape == (512, 13)
     assert bool(jnp.isfinite(logits).all())
 
@@ -54,9 +56,10 @@ def test_dgcnn_cls_exact_reuse():
     traditional (paper §VI-E)."""
     xyz, feats = _cloud(256, seed=2)
     spec = dgcnn.with_points(dgcnn.DGCNN_C, 256)
-    p = dgcnn.init_for_task(KEY, spec)
-    l1, _ = dgcnn.apply(p, spec, xyz, feats, KEY, mode="lpcn")
-    l0, _ = dgcnn.apply(p, spec, xyz, feats, KEY, mode="traditional")
+    p = engine.init(KEY, spec)
+    l1, _ = engine.apply_single(p, xyz, feats, KEY, spec=spec, mode="lpcn")
+    l0, _ = engine.apply_single(p, xyz, feats, KEY, spec=spec,
+                                mode="traditional")
     np.testing.assert_allclose(np.asarray(l1), np.asarray(l0),
                                rtol=2e-3, atol=2e-3)
 
@@ -67,9 +70,9 @@ def test_pointnext():
     from repro.models.common import BlockSpec
     spec = replace(pointnext.POINTNEXT_S, blocks=(
         BlockSpec(128, 16, (32,)), BlockSpec(32, 16, (64,))))
-    p = pointnext.init(KEY, spec)
-    logits, rep = pointnext.apply(p, spec, xyz, feats, KEY,
-                                  mode="lpcn", with_report=True)
+    p = engine.init(KEY, spec)
+    logits, rep = engine.apply_single(p, xyz, feats, KEY, spec=spec,
+                                      mode="lpcn", with_report=True)
     assert logits.shape == (512, 13)
     assert bool(jnp.isfinite(logits).all())
 
@@ -80,8 +83,9 @@ def test_pointvector():
     from repro.models.common import BlockSpec
     spec = replace(pointvector.POINTVECTOR_L, blocks=(
         BlockSpec(128, 16, (48,)), BlockSpec(32, 16, (96,))))
-    p = pointvector.init(KEY, spec)
-    logits, _ = pointvector.apply(p, spec, xyz, feats, KEY, mode="lpcn")
+    p = engine.init(KEY, spec)
+    logits, _ = engine.apply_single(p, xyz, feats, KEY, spec=spec,
+                                    mode="lpcn")
     assert logits.shape == (512, 13)
     assert bool(jnp.isfinite(logits).all())
 
