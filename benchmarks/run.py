@@ -346,9 +346,91 @@ def bench_fc_kernel(rows, quick: bool):
                                             else 1))
 
 
+# ---- dist: mesh-sharded engine vs single device -----------------------------
+
+_DIST_WORKER = r"""
+import json, time
+import numpy as np, jax, jax.numpy as jnp
+from dataclasses import replace
+from functools import partial
+from repro import engine
+from repro.data.synthetic import make_cloud
+from repro.engine import Batch, BlockSpec
+from repro.launch.mesh import make_mesh
+from repro.models import pointnet2
+
+quick = {quick}
+n_dev = len(jax.devices())
+B, N = (n_dev, 128) if quick else (2 * n_dev, 512)
+spec = replace(pointnet2.POINTNET2_C, blocks=(
+    BlockSpec(N // 4, 8, (16, 32)), BlockSpec(N // 8, 8, (32, 48))))
+params = engine.init(jax.random.PRNGKey(0), spec)
+rng = np.random.default_rng(0)
+xyz = jnp.asarray(np.stack([make_cloud(rng, N) for _ in range(B)]))
+batch = Batch.make(xyz, key=jax.random.PRNGKey(1))
+mesh = make_mesh((n_dev, 1), ("data", "model"))
+reps = 3 if quick else 8
+out = []
+for tag, mesh_arg in (("single_device", None), ("sharded", mesh)):
+    f = jax.jit(partial(engine.apply, spec=spec, mode="lpcn",
+                        mesh=mesh_arg))
+    f(params, batch).block_until_ready()               # compile
+    t0 = time.time()
+    for _ in range(reps):
+        y = f(params, batch)
+    y.block_until_ready()
+    us = (time.time() - t0) / reps * 1e6
+    cps = B / (us / 1e6)
+    devs = n_dev if mesh_arg is not None else 1
+    out.append(dict(tag=tag, us=us, device_count=n_dev,
+                    devices_used=devs,
+                    mesh=None if mesh_arg is None else dict(mesh.shape),
+                    batch=B, n_points=N, clouds_per_s=cps,
+                    clouds_per_s_per_device=cps / devs))
+print("DIST_JSON " + json.dumps(out))
+"""
+
+
+def bench_dist(rows, quick: bool):
+    """Mesh-sharded engine.apply (batch split over an (n, 1)
+    ("data", "model") mesh) vs the single-device fast path on identical
+    inputs.  Runs in a subprocess with a forced host platform device
+    count — the same trick as tests/test_distributed.py — so the fake
+    CPU devices can't leak into this process's jax.  Records device
+    count, mesh shape, and absolute + per-device throughput (on a CPU
+    host the fake devices share the same cores, so sharded wall-clock is
+    a schedule-overhead measurement, not a speedup claim)."""
+    import subprocess
+    import sys
+    n_dev = 4 if quick else 8
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n_dev} "
+                        + env.get("XLA_FLAGS", ""))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src")]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    r = subprocess.run(
+        [sys.executable, "-c", _DIST_WORKER.format(quick=quick)],
+        env=env, capture_output=True, text=True, timeout=1800)
+    if r.returncode != 0:
+        raise RuntimeError(
+            f"dist bench worker failed:\nSTDOUT:\n{r.stdout}\n"
+            f"STDERR:\n{r.stderr}")
+    line = [ln for ln in r.stdout.splitlines()
+            if ln.startswith("DIST_JSON ")][-1]
+    for rec in json.loads(line[len("DIST_JSON "):]):
+        tag, us = rec.pop("tag"), rec.pop("us")
+        _emit(rows, f"dist_engine_{tag}_d{rec['device_count']}", us,
+              f"clouds_per_s={rec['clouds_per_s']:.1f} "
+              f"per_device={rec['clouds_per_s_per_device']:.1f} "
+              f"mesh={rec['mesh']}", **rec)
+
+
 SECTIONS = {
     "engine": bench_engine,
     "fc_kernel": bench_fc_kernel,
+    "dist": bench_dist,
     "overlap": bench_overlap_study,
     "workload": bench_workload_reduction,
     "speedup": bench_speedup_baselines,

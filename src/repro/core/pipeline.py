@@ -517,11 +517,17 @@ def compute_block_features(cfg: LPCNConfig, mlp: MLP, xyz, feats,
 def compute_block_features_batched(cfg: LPCNConfig, mlp: MLP, xyz, feats,
                                    st: BlockStructure,
                                    backend: FCBackend | None = None,
-                                   kernel_kw=None) -> jnp.ndarray:
+                                   kernel_kw=None,
+                                   mesh=None) -> jnp.ndarray:
     """Batched stage 2: ``st`` holds stacked (B, …) structures (a vmapped
     :func:`structure_block`), ``xyz``/``feats`` are (B, N, ·).  The MXU
     dataflows run through the backend's batched entry points — one kernel
-    dispatch per call site for the whole cloud stack."""
+    dispatch per call site for the whole cloud stack.
+
+    ``mesh`` (None = single device) re-constrains the block's (B, S,
+    Fout) output along the mesh data axes, so consecutive blocks of a
+    mesh-sharded forward hand features over without a GSPMD
+    replicate/reshard at the block boundary."""
     backend = backend or get_fc_backend(cfg.fc_backend)
     center_feats = jnp.take_along_axis(
         feats, st.center_idx[..., None], axis=1)
@@ -538,6 +544,9 @@ def compute_block_features_batched(cfg: LPCNConfig, mlp: MLP, xyz, feats,
                             kernel_kw=kernel_kw)
     if st.center_valid is not None:
         f = jnp.where(st.center_valid[..., None], f, 0.0)
+    if mesh is not None:
+        from repro.dist.sharding import shard_leading
+        f = shard_leading(f, mesh)
     return f
 
 

@@ -1,0 +1,21 @@
+"""repro.dist — the scale-out substrate: sharding rules, pipeline
+parallelism, and gradient compression.
+
+Reconstructed (PR 5) from the API surface its consumers already relied
+on: ``lm/transformer`` + ``nn/{attention,ssm,moe}`` call
+:func:`sharding.constrain` / :func:`sharding.constrain_heads` at their
+activation seams, ``launch/{train,serve,dryrun,memmodel}`` build
+parameter / batch / cache shardings, and ``lm/steps`` accepts a
+``dist.compress`` codec.  The PCN engine (``repro.engine``) reuses the
+same :func:`sharding.batch_shardings` rules to split its batch-first
+``(B, …)`` forward across the mesh ``"data"`` axis.
+
+Submodules:
+  sharding  — logical-axis sharding rules (dp/fsdp/tp/sp), the
+              ``use_mesh`` context, param/batch/cache sharding trees.
+  pipeline  — ``pipeline_apply``: GPipe-style microbatch schedule over a
+              mesh axis (shard_map + ppermute).
+  compress  — gradient codecs with error feedback (int8 quantization,
+              top-k sparsification) for cross-replica grad traffic.
+"""
+from . import compress, pipeline, sharding  # noqa: F401

@@ -55,18 +55,29 @@ class Arch:
 
 @dataclass(frozen=True)
 class EngineCtx:
-    """Per-call static execution context (lifted out of the traced args)."""
+    """Per-call static execution context (lifted out of the traced args).
+
+    ``mesh`` is the engine-level sharding plan (None = the no-mesh fast
+    path): when set, the batched forward keeps every stacked (B, …)
+    tensor sharded along the mesh's data axes between stages —
+    :class:`~repro.engine.params.Batch` leaves on the way in, the
+    structure stacks between stage 1 and stage 2, and each block's
+    feature tensor on the way out of the FC stage — so the two-stage
+    forward splits across devices instead of letting GSPMD replicate at
+    a stage boundary.  Params are replicated (point MLPs are tiny).
+    """
     mode: str = "lpcn"
     fc_backend: str = "reference"
     isl_kw: tuple = ()            # sorted (key, value) pairs — hashable
     with_report: bool = False
     kernel_kw: tuple = ()         # sorted (key, value) pairs — hashable
+    mesh: object = None           # jax.sharding.Mesh | None (hashable)
 
     KERNEL_KW_KEYS = frozenset({"ts", "th", "vmem_budget_mb"})
 
     @staticmethod
     def make(mode="lpcn", fc_backend="reference", isl_kw=None,
-             with_report=False, kernel_kw=None) -> "EngineCtx":
+             with_report=False, kernel_kw=None, mesh=None) -> "EngineCtx":
         kernel_kw = dict(kernel_kw or {})
         unknown = set(kernel_kw) - EngineCtx.KERNEL_KW_KEYS
         if unknown:
@@ -74,10 +85,26 @@ class EngineCtx:
                 f"unknown kernel_kw key(s) {sorted(unknown)}; valid knobs: "
                 f"{sorted(EngineCtx.KERNEL_KW_KEYS)} (a typo here would "
                 f"silently fall back to the VMEM-budget heuristic)")
+        if mesh is not None and "data" not in mesh.axis_names:
+            raise ValueError(
+                f"engine meshes shard the batch along a 'data' axis; got "
+                f"axes {tuple(mesh.axis_names)} (build one with "
+                f"repro.launch.mesh.data_mesh / make_mesh)")
         return EngineCtx(mode=mode, fc_backend=fc_backend,
                          isl_kw=tuple(sorted((isl_kw or {}).items())),
                          with_report=with_report,
-                         kernel_kw=tuple(sorted(kernel_kw.items())))
+                         kernel_kw=tuple(sorted(kernel_kw.items())),
+                         mesh=mesh)
+
+
+def _maybe_shard(tree, ctx: EngineCtx):
+    """Constrain stacked (B, …) leaves along the data axes of
+    ``ctx.mesh`` (identity on the no-mesh fast path — repro.dist is not
+    even imported)."""
+    if ctx.mesh is None:
+        return tree
+    from repro.dist.sharding import shard_leading
+    return shard_leading(tree, ctx.mesh)
 
 
 def get_arch(spec: PCNSpec) -> Arch:
@@ -167,8 +194,9 @@ def _structure_stack_b(spec: PCNSpec, ctx: EngineCtx, xyz, keys, n_valid):
 def _compute_stack_b(params: PCNParams, spec: PCNSpec, ctx: EngineCtx,
                      xyz, feats, structs):
     """Batched stage 2 over an SA block stack: features flow through the
-    backend's batched FC entry points block by block.  Returns
-    (xyz_levels, final features)."""
+    backend's batched FC entry points block by block (each block's
+    output re-constrained to the mesh data axes when ``ctx.mesh`` is
+    set).  Returns (xyz_levels, final features)."""
     backend = get_fc_backend(ctx.fc_backend)
     kernel_kw = dict(ctx.kernel_kw)
     cur_xyz, cur_f = xyz, feats
@@ -176,7 +204,7 @@ def _compute_stack_b(params: PCNParams, spec: PCNSpec, ctx: EngineCtx,
     for b, mlp, st in zip(spec.blocks, params.blocks, structs):
         cur_f = compute_block_features_batched(
             block_cfg(b, ctx), mlp, cur_xyz, cur_f, st, backend=backend,
-            kernel_kw=kernel_kw)
+            kernel_kw=kernel_kw, mesh=ctx.mesh)
         cur_xyz = st.center_xyz
         xyz_levels.append(cur_xyz)
     return xyz_levels, cur_f
@@ -278,7 +306,8 @@ def _fwd_pointnet2_batched(params: PCNParams, spec: PCNSpec, xyz, feats,
                            keys, ctx: EngineCtx, n_valid=None):
     """Two-stage batched forward: vmapped geometry stack, then batched FC
     + head.  Numerically identical to vmapping :func:`_fwd_pointnet2`."""
-    structs, nv_levels = _structure_stack_b(spec, ctx, xyz, keys, n_valid)
+    structs, nv_levels = _maybe_shard(
+        _structure_stack_b(spec, ctx, xyz, keys, n_valid), ctx)
     xyz_levels, cf = _compute_stack_b(params, spec, ctx, xyz, feats,
                                       structs)
     if spec.task == "cls":
@@ -355,16 +384,17 @@ def _structure_dgcnn(spec: PCNSpec, ctx: EngineCtx, xyz, key, n_valid):
 def _fwd_dgcnn_batched(params: PCNParams, spec: PCNSpec, xyz, feats, keys,
                        ctx: EngineCtx, n_valid=None):
     """Two-stage batched EdgeConv forward (see :func:`_fwd_dgcnn`)."""
-    structs = jax.vmap(
+    structs = _maybe_shard(jax.vmap(
         lambda x, k, nv: _structure_dgcnn(spec, ctx, x, k, nv)
-    )(xyz, keys, n_valid)
+    )(xyz, keys, n_valid), ctx)
     backend = get_fc_backend(ctx.fc_backend)
     kernel_kw = dict(ctx.kernel_kw)
     f, per_layer = feats, []
     for b, mlp, st in zip(spec.blocks, params.blocks, structs):
         f = compute_block_features_batched(block_cfg(b, ctx), mlp, xyz, f,
                                            st, backend=backend,
-                                           kernel_kw=kernel_kw)
+                                           kernel_kw=kernel_kw,
+                                           mesh=ctx.mesh)
         per_layer.append(f)
     cat = jnp.concatenate(per_layer, axis=-1)
     gmax = _mask_rows_b(cat, n_valid, fill=-_BIG).max(axis=1)
@@ -432,7 +462,8 @@ def _fwd_stem_stack_batched(params, spec, xyz, feats, keys, ctx, combine,
     """Two-stage batched :func:`_fwd_stem_stack` (PointNeXt/PointVector):
     vmapped geometry stack, batched stem/FC/residuals, vmapped FP
     decoder."""
-    structs, nv_levels = _structure_stack_b(spec, ctx, xyz, keys, n_valid)
+    structs, nv_levels = _maybe_shard(
+        _structure_stack_b(spec, ctx, xyz, keys, n_valid), ctx)
     backend = get_fc_backend(ctx.fc_backend)
     kernel_kw = dict(ctx.kernel_kw)
     f = apply_mlp(params.stem, feats)
@@ -442,7 +473,8 @@ def _fwd_stem_stack_batched(params, spec, xyz, feats, keys, ctx, combine,
                                  structs):
         h = compute_block_features_batched(block_cfg(b, ctx), mlp, cur_xyz,
                                            f, st, backend=backend,
-                                           kernel_kw=kernel_kw)
+                                           kernel_kw=kernel_kw,
+                                           mesh=ctx.mesh)
         f = combine(extra, h)
         cur_xyz = st.center_xyz
         xyz_levels.append(cur_xyz)

@@ -69,7 +69,7 @@ def apply_single(params, xyz, feats, key, *, spec: PCNSpec,
 
 def apply(params, batch, *, spec: PCNSpec, mode: str = "lpcn",
           fc_backend: str = "reference", isl_kw: dict | None = None,
-          kernel_kw: dict | None = None):
+          kernel_kw: dict | None = None, mesh=None):
     """Padded batch -> logits, fully jit-compiled, batch-first.
 
     ``batch`` is a :class:`Batch` or a raw (B, N, 3) array.  Returns
@@ -89,26 +89,49 @@ def apply(params, batch, *, spec: PCNSpec, mode: str = "lpcn",
     ``apply(batch)[i]`` (cls) / ``apply(batch)[i, :n_valid[i]]`` (seg)
     equals :func:`apply_single` on cloud i's unpadded prefix; seg rows
     >= n_valid[i] are zeros.
+
+    ``mesh`` (static; ``jax.sharding.Mesh`` with a ``"data"`` axis, e.g.
+    from :func:`repro.launch.mesh.data_mesh`) turns on the sharded
+    serving path: ``PCNParams`` are replicated (point MLPs are tiny),
+    every batch-first (B, …) tensor — the :class:`Batch` leaves, the
+    stacked structures between the two stages, each block's features and
+    the logits — is constrained along the mesh's data axes, so the
+    whole forward (including the Pallas ``(B, …)`` kernel grids) splits
+    across devices.  ``mesh=None`` is the explicit no-mesh fast path:
+    bit-identical numerics, and ``repro.dist`` is never even imported.
     """
     params = from_legacy(params)
     b = as_batch(batch)
-    # build (and thereby validate kernel_kw) unconditionally, so a typo'd
-    # knob raises even for archs that fall back to the vmap path below
+    # build (and thereby validate kernel_kw + mesh) unconditionally, so a
+    # typo'd knob raises even for archs that fall back to the vmap path
     ctx = EngineCtx.make(mode=mode, fc_backend=fc_backend,
-                         isl_kw=isl_kw, kernel_kw=kernel_kw)
+                         isl_kw=isl_kw, kernel_kw=kernel_kw, mesh=mesh)
     arch = get_arch(spec)
-    if arch.forward_batched is not None:
-        return arch.forward_batched(params, spec, b.xyz, b.feats, b.keys,
-                                    ctx, b.n_valid)
 
-    def one(xyz, feats, key, nv):
-        logits, _ = apply_single(params, xyz, feats, key, spec=spec,
-                                 mode=mode, fc_backend=fc_backend,
-                                 isl_kw=isl_kw, with_report=False,
-                                 n_valid=nv)
-        return logits
+    def run(params, b):
+        if arch.forward_batched is not None:
+            return arch.forward_batched(params, spec, b.xyz, b.feats,
+                                        b.keys, ctx, b.n_valid)
 
-    return jax.vmap(one)(b.xyz, b.feats, b.keys, b.n_valid)
+        def one(xyz, feats, key, nv):
+            logits, _ = apply_single(params, xyz, feats, key, spec=spec,
+                                     mode=mode, fc_backend=fc_backend,
+                                     isl_kw=isl_kw, with_report=False,
+                                     n_valid=nv)
+            return logits
+
+        return jax.vmap(one)(b.xyz, b.feats, b.keys, b.n_valid)
+
+    if ctx.mesh is None:          # no-mesh fast path
+        return run(params, b)
+    from repro.dist.sharding import replicate, shard_leading, use_mesh
+    # the engine's own constraints pass ctx.mesh explicitly; use_mesh
+    # additionally exposes the mesh to registry components and custom
+    # FCBackends that call dist.sharding.constrain / active_mesh, the
+    # same seam the LM side traces under
+    with use_mesh(ctx.mesh):
+        out = run(replicate(params, ctx.mesh), shard_leading(b, ctx.mesh))
+        return shard_leading(out, ctx.mesh)
 
 
 def apply_with_reports(params, batch, *, spec: PCNSpec, mode: str = "lpcn",
@@ -139,20 +162,32 @@ class PCNEngine:
     :func:`as_batch` / :func:`from_legacy` *before* the cached jit, so
     alternating raw (B, N, 3) arrays, :class:`Batch` objects and legacy
     param dicts of the same shapes reuses one executable.
+
+    ``mesh`` (optional) makes this a *sharded* serving handle: the cached
+    jit closes over the mesh, batches are split along its data axes and
+    params replicated (see :func:`apply`).  ``mesh=None`` keeps the
+    single-device fast path (no ``repro.dist`` import, identical
+    numerics).
     """
 
     def __init__(self, spec: PCNSpec, *, mode: str = "lpcn",
                  fc_backend: str = "reference",
                  isl_kw: dict | None = None,
-                 kernel_kw: dict | None = None):
+                 kernel_kw: dict | None = None,
+                 mesh=None):
         self.spec = spec
         self.mode = mode
         self.fc_backend = fc_backend
         self.isl_kw = dict(isl_kw or {})
         self.kernel_kw = dict(kernel_kw or {})
+        self.mesh = mesh
+        # validate the configuration eagerly (a bad mesh / typo'd knob
+        # should fail at construction, not at the first traffic batch)
+        EngineCtx.make(mode=mode, fc_backend=fc_backend, isl_kw=self.isl_kw,
+                       kernel_kw=self.kernel_kw, mesh=mesh)
         self._japply = jax.jit(partial(
             apply, spec=spec, mode=mode, fc_backend=fc_backend,
-            isl_kw=self.isl_kw, kernel_kw=self.kernel_kw))
+            isl_kw=self.isl_kw, kernel_kw=self.kernel_kw, mesh=mesh))
 
     def init(self, key: jax.Array) -> PCNParams:
         return init(key, self.spec)
@@ -172,5 +207,7 @@ class PCNEngine:
                             n_valid=n_valid)
 
     def __repr__(self):
+        m = ("" if self.mesh is None
+             else f", mesh={dict(self.mesh.shape)}")
         return (f"PCNEngine({self.spec.name}, mode={self.mode!r}, "
-                f"fc_backend={self.fc_backend!r})")
+                f"fc_backend={self.fc_backend!r}{m})")

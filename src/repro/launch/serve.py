@@ -9,6 +9,13 @@ Two families share one CLI, dispatched on ``--arch``:
         PYTHONPATH=src python -m repro.launch.serve --arch pointnet2_c \
             --batch 4 --points 1024 --mode lpcn --backend reference
 
+    ``--mesh-data N`` serves through the mesh-sharded path instead: an
+    (N, 1) ("data", "model") mesh splits each batch N ways (batch must
+    divide; on CPU force fake devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).  Without it
+    the engine takes the single-device fast path and ``repro.dist`` is
+    never imported.
+
   * LM serving — batched prefill + decode loop with continuous-batching
     slots (unchanged behavior).
 
@@ -38,7 +45,19 @@ def serve_pcn(args):
         spec = replace(spec, blocks=tuple(
             replace(b, n_centers=min(b.n_centers, max(args.points // 4, 16)),
                     k=min(b.k, 16)) for b in spec.blocks))
-    eng = engine.PCNEngine(spec, mode=args.mode, fc_backend=args.backend)
+    mesh = None
+    if args.mesh_data:
+        # data_mesh raises an actionable error (how to force CPU devices /
+        # lower the request) when the host has fewer devices than asked
+        from repro.launch.mesh import data_mesh
+        mesh = data_mesh(args.mesh_data)
+        if args.batch % args.mesh_data:
+            raise SystemExit(
+                f"--batch {args.batch} does not divide over a "
+                f"{args.mesh_data}-way data mesh; pick a batch that is a "
+                f"multiple of --mesh-data")
+    eng = engine.PCNEngine(spec, mode=args.mode, fc_backend=args.backend,
+                           mesh=mesh)
     params = eng.init(jax.random.PRNGKey(0))
 
     rng = np.random.default_rng(0)
@@ -72,9 +91,12 @@ def serve_pcn(args):
         n += args.batch
     logits.block_until_ready()
     dt = max(time.time() - t0, 1e-9)
+    per_dev = "" if mesh is None else (
+        f", {n / dt / args.mesh_data:.1f} clouds/s/device over "
+        f"{args.mesh_data} devices")
     print(f"{eng}: compiled in {compile_s:.2f}s; served {n} clouds in "
           f"{dt:.2f}s ({n / dt:.1f} clouds/s, batch={args.batch}, "
-          f"N={args.points})")
+          f"N={args.points}{per_dev})")
     print("logits", tuple(logits.shape))
     return logits
 
@@ -144,11 +166,20 @@ def main(argv=None):
                     choices=["lpcn", "traditional"])
     ap.add_argument("--backend", default="reference")
     ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--mesh-data", type=int, default=0,
+                    help="serve through an (N, 1) data mesh (0 = "
+                         "single-device fast path, no repro.dist import)")
     args = ap.parse_args(argv)
 
     from repro.models import MODEL_ZOO
     if args.arch in MODEL_ZOO:
         return serve_pcn(args)
+    if args.mesh_data:
+        raise SystemExit(
+            "--mesh-data is the PCN engine's sharded path; the LM path "
+            "builds its mesh from the host via launch.mesh.local_mesh() "
+            "(force devices with XLA_FLAGS=--xla_force_host_platform_"
+            "device_count=N instead)")
     try:
         return serve_lm(args)
     except ModuleNotFoundError as e:

@@ -21,6 +21,7 @@ import numpy as np
 from repro.ckpt.manager import CheckpointManager
 from repro.configs import get_config
 from repro.data.loader import TokenStream
+from repro.dist import compress as compress_mod
 from repro.dist import sharding as shd
 from repro.launch.mesh import local_mesh, make_production_mesh
 from repro.lm import model_zoo as zoo
@@ -40,6 +41,10 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=5)
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--compress", default=None, choices=["int8", "topk"],
+                    help="compress cross-replica gradient traffic with "
+                         "this dist.compress codec (error feedback rides "
+                         "in opt_state['ef'])")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced)
@@ -51,6 +56,10 @@ def main(argv=None):
         key = jax.random.PRNGKey(args.seed)
         params = zoo.init(key, cfg)
         opt_state = adamw.init_state(opt_cfg, params)
+        if args.compress:
+            # seed the error feedback BEFORE jit so the state structure
+            # is stable (see dist.compress.make_compressor)
+            opt_state["ef"] = compress_mod.init_error_feedback(params)
         p_sh = shd.param_shardings(params, mesh, cfg.moe_shard)
         o_sh = shd.param_shardings(opt_state, mesh, cfg.moe_shard)
         params = jax.tree.map(jax.device_put, params, p_sh)
@@ -72,7 +81,9 @@ def main(argv=None):
 
         train_step = steps_mod.make_train_step(
             cfg, opt_cfg, microbatches=args.microbatches,
-            param_shardings=p_sh)
+            param_shardings=p_sh,
+            compressor=(compress_mod.make_compressor(args.compress)
+                        if args.compress else None))
         jstep = jax.jit(train_step, donate_argnums=(0, 1))
 
         stop = {"now": False}

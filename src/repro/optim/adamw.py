@@ -63,4 +63,6 @@ def apply_updates(cfg: AdamWConfig, params, grads, state,
     new_p = tree.unflatten([o[0] for o in out])
     new_m = tree.unflatten([o[1] for o in out])
     new_v = tree.unflatten([o[2] for o in out])
-    return new_p, {"m": new_m, "v": new_v, "step": step}
+    # preserve side-channel entries (e.g. dist.compress error feedback in
+    # state["ef"], already updated by the compressor hook before this)
+    return new_p, {**state, "m": new_m, "v": new_v, "step": step}

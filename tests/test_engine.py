@@ -191,3 +191,70 @@ def test_apply_with_reports_batched():
     assert logits.shape == (3, 40)
     assert rep.lpcn_fetches.shape == (3,)
     assert int(rep.lpcn_fetches.sum()) <= int(rep.baseline_fetches.sum())
+
+
+def test_engine_mesh_noop_bit_identical():
+    """Regression for the "no mesh" fast path: a trivial local_mesh()
+    (1 device -> ("data", "model") = (1, 1)) must not change a single
+    bit vs mesh=None — the sharding constraints it inserts are inert on
+    one device."""
+    from repro.launch.mesh import local_mesh
+
+    params = engine.init(KEY, SMALL_PN2)
+    b = Batch.make(_clouds(2, 256, seed=11), key=jax.random.PRNGKey(1),
+                   n_valid=jnp.asarray([256, 190], jnp.int32))
+    for mode in ("traditional", "lpcn"):
+        plain = engine.apply(params, b, spec=SMALL_PN2, mode=mode)
+        meshed = engine.PCNEngine(SMALL_PN2, mode=mode,
+                                  mesh=local_mesh()).apply(params, b)
+        np.testing.assert_array_equal(np.asarray(plain),
+                                      np.asarray(meshed))
+    # the meshed engines above DID import repro.dist; the fast path's
+    # import guarantee is about fresh processes — enforced by
+    # test_no_mesh_path_never_imports_dist below
+    from repro.engine.archs import EngineCtx
+    assert EngineCtx.make().mesh is None
+
+
+def test_no_mesh_path_never_imports_dist():
+    """The mesh=None fast path must work without repro.dist ever being
+    imported (environments without the scale-out subsystem, and the
+    documented engine contract) — checked in a fresh subprocess so this
+    process's earlier imports can't mask a regression."""
+    import os
+    import subprocess
+    import sys
+
+    code = """
+import sys
+import jax, jax.numpy as jnp
+import numpy as np
+from dataclasses import replace
+from repro import engine
+from repro.engine import Batch, BlockSpec
+from repro.models import pointnet2
+
+spec = replace(pointnet2.POINTNET2_C, blocks=(BlockSpec(16, 8, (16, 32)),))
+params = engine.init(jax.random.PRNGKey(0), spec)
+xyz = jnp.asarray(np.random.default_rng(0).normal(size=(2, 64, 3)),
+                  jnp.float32)
+out = engine.PCNEngine(spec).apply(params, Batch.make(xyz))
+assert out.shape[0] == 2
+assert "repro.dist" not in sys.modules, sorted(
+    m for m in sys.modules if m.startswith("repro.dist"))
+print("ok")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+
+
+def test_engine_rejects_dataless_mesh():
+    """An engine mesh must carry a "data" axis to shard batches along."""
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1,), ("model",))
+    with pytest.raises(ValueError, match="'data' axis"):
+        engine.PCNEngine(SMALL_PN2, mesh=mesh)

@@ -56,3 +56,14 @@ def test_elastic_restore_reshard(tmp_path):
     step, p2, o2, _ = mgr.restore(params, opt, shardings=shardings)
     np.testing.assert_array_equal(np.asarray(p2["w"]),
                                   np.asarray(params["w"]))
+
+
+def test_train_compress_runs():
+    """--compress wires dist.compress.make_compressor into the train
+    step: the error feedback is seeded into opt_state['ef'] before jit
+    and survives adamw.apply_updates across steps."""
+    import numpy as np
+    losses = train_mod.main(["--arch", "olmo-1b", "--reduced", "--batch",
+                             "2", "--seq", "32", "--steps", "3",
+                             "--compress", "int8"])
+    assert len(losses) == 3 and np.all(np.isfinite(losses)), losses
