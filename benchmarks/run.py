@@ -346,6 +346,54 @@ def bench_fc_kernel(rows, quick: bool):
                                             else 1))
 
 
+# ---- serve: continuous-batching trace replay --------------------------------
+
+def bench_serve(rows, quick: bool):
+    """Replays a synthetic ragged trace (Poisson arrivals, log-normal
+    sizes) through the continuous-batching layer and records the
+    user-facing serving metrics — e2e/queue-wait percentiles,
+    throughput, padding waste, dispatch mix — at two offered loads:
+    light (timeouts fire partial batches) and heavy (batches fill).
+    The JSON row carries the full serve report."""
+    import jax
+    from dataclasses import replace as _replace
+    from repro import engine, serve
+    from repro.data.synthetic import make_cloud
+    from repro.engine import BlockSpec
+    from repro.models import MODEL_ZOO
+
+    _, spec = MODEL_ZOO["pointnet2_c"]
+    if quick:
+        spec = _replace(spec, blocks=(
+            BlockSpec(24, 8, (16, 32)), BlockSpec(8, 8, (32, 48))))
+        sizes, n_med, n_req = [64, 96], 64, 16
+    else:
+        sizes, n_med, n_req = [512, 1024], 512, 64
+    eng = engine.PCNEngine(spec, mode="lpcn", fc_backend="reference")
+    params = eng.init(jax.random.PRNGKey(0))
+    buckets = serve.BucketSet.make(sizes, batch=2 if quick else 4)
+    server = serve.PCNServer(eng, params, buckets, timeout_s=0.01)
+    for load, rate in (("light", 30.0), ("heavy", 2000.0)):
+        server.metrics = serve.ServeMetrics()     # fresh window per load
+        events = serve.synthetic_trace(
+            n_requests=n_req, rate_hz=rate, n_median=n_med, sigma=0.35,
+            n_max=buckets.max_points, seed=1)
+        rng = np.random.default_rng(0)
+        rids = serve.replay(
+            server, events,
+            lambda n, i: (np.asarray(make_cloud(rng, n), np.float32),
+                          None))
+        rep = server.report(load=load, rate_hz=rate)
+        assert all(server.ready(r) for r in rids), "unanswered requests"
+        lat = rep["latency_ms"]["e2e"]
+        _emit(rows, f"serve_trace_{spec.name}_{load}",
+              1e3 * lat["mean"],
+              f"p50={lat['p50']:.1f} p95={lat['p95']:.1f} "
+              f"p99={lat['p99']:.1f} rps={rep['throughput_rps']:.1f} "
+              f"waste={rep['padding_waste_pct']:.1f}%",
+              serve=rep)
+
+
 # ---- dist: mesh-sharded engine vs single device -----------------------------
 
 _DIST_WORKER = r"""
@@ -430,6 +478,7 @@ def bench_dist(rows, quick: bool):
 SECTIONS = {
     "engine": bench_engine,
     "fc_kernel": bench_fc_kernel,
+    "serve": bench_serve,
     "dist": bench_dist,
     "overlap": bench_overlap_study,
     "workload": bench_workload_reduction,

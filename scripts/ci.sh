@@ -129,6 +129,33 @@ print(f"fc_kernel smoke ok: {len(rows)} rows "
       f"({len(vmap)} vmap vs {len(batched)} batched-grid)")
 EOF
 
+echo "== serve-trace smoke (continuous batching, ragged trace) =="
+# a short synthetic ragged trace through launch/serve.py --trace: the
+# admission queue / size buckets / timeout dispatcher end to end, with
+# the report JSON landing in results/ (uploaded with the other
+# benchmark artifacts by the workflow)
+python -m repro.launch.serve --arch pointnet2_c --reduced --points 96 \
+    --batch 2 --trace 16 --rate 300 --buckets 96,128 --timeout-ms 5 \
+    --serve-json results/serve_trace_smoke.json
+python - <<'EOF'
+import json
+rep = json.load(open("results/serve_trace_smoke.json"))
+assert rep["requests"] == 16 and rep["answered"] == 16, rep
+assert rep["throughput_rps"] > 0, rep
+for name, lat in rep["latency_ms"].items():
+    assert lat["p50"] <= lat["p95"] <= lat["p99"], (name, lat)
+assert 0 <= rep["padding_waste_pct"] < 100, rep
+# compile-once per bucket: the trace spans both buckets
+assert rep["compile_count"] == len(rep["buckets"]) == 2, rep
+print(f"serve smoke ok: {rep['requests']} requests, "
+      f"{rep['dispatches']} dispatches "
+      f"({rep['partial_batches']} partial), "
+      f"e2e p50/p95/p99 = {rep['latency_ms']['e2e']['p50']:.1f}/"
+      f"{rep['latency_ms']['e2e']['p95']:.1f}/"
+      f"{rep['latency_ms']['e2e']['p99']:.1f} ms, "
+      f"waste {rep['padding_waste_pct']:.1f}%")
+EOF
+
 echo "== sharded engine smoke (8 forced host devices, subprocess) =="
 # runs in its own python process (like tests/test_distributed.py) so the
 # forced fake device count cannot leak into any other step's jax

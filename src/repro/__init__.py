@@ -9,6 +9,8 @@ Layers:
   repro.lm       — the 10 assigned LM architectures + serving.
   repro.kernels  — Pallas TPU kernels (knn, gather_mlp, hub_reuse, flash
                    attention) with jnp oracles.
+  repro.serve    — continuous-batching PCN serving: admission queue, size
+                   buckets, timeout dispatch, latency percentiles.
   repro.dist     — sharding rules, pipeline parallelism, grad compression.
   repro.optim / repro.data / repro.ckpt — training substrate.
   repro.launch   — mesh, dry-run, train/serve drivers.

@@ -34,6 +34,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import fc as _fc                     # noqa: F401  registers "pallas"
 from .archs import EngineCtx, get_arch
@@ -195,6 +196,39 @@ class PCNEngine:
     def apply(self, params, batch) -> jnp.ndarray:
         """Padded batch (Batch or (B, N, 3) array) -> logits."""
         return self._japply(from_legacy(params), as_batch(batch))
+
+    @property
+    def compile_count(self) -> int:
+        """Number of distinct executables the cached jit has built — one
+        per input *shape* ((B, N, F) bucket), since spec/mode/backend
+        are static and ``n_valid`` is traced data.  The serving layer's
+        compile-once-per-bucket contract is pinned against this."""
+        return self._japply._cache_size()
+
+    def bucket_callable(self, params, batch_size: int, n_points: int):
+        """Compile (if not already cached) the executable for one
+        (batch_size, n_points) bucket shape and return a callable
+        ``batch -> logits`` bound to ``params`` — the serving layer's
+        per-bucket seam.
+
+        Compilation happens here, on a throwaway batch of the bucket's
+        exact shape, so the first traffic batch of that shape hits the
+        jit cache instead of absorbing the compile; calling this again
+        for the same shape is a cache hit (``compile_count`` is
+        unchanged).  Feature width comes from ``spec.in_feats``.
+        """
+        params = from_legacy(params)
+        f = self.spec.in_feats
+        rng = np.random.default_rng(0)
+        xyz = jnp.asarray(rng.standard_normal((batch_size, n_points, 3)),
+                          jnp.float32)
+        feats = None if f <= 3 else jnp.concatenate(
+            [xyz, jnp.zeros((batch_size, n_points, f - 3), jnp.float32)],
+            -1)
+        dummy = Batch.make(xyz, feats, key=jax.random.PRNGKey(0))
+        self._japply(params, dummy).block_until_ready()
+        japply = self._japply
+        return lambda batch: japply(params, as_batch(batch))
 
     def apply_single(self, params, xyz, feats=None, key=None, *,
                      with_report: bool = False, n_valid=None):

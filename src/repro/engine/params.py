@@ -135,23 +135,50 @@ class Batch:
             # canonicalize typed keys -> raw uint32 so a Batch always has
             # the same pytree signature (no retrace vs raw-array callers)
             keys = jax.random.key_data(keys)
+        # host numpy keys (the serving dispatcher stacks per-request key
+        # data) must become jax Arrays too — the jit cache distinguishes
+        # ndarray leaves from ArrayImpl leaves, which would force one
+        # spurious recompile per bucket
+        keys = jnp.asarray(keys)
         if n_valid is None:
             n_valid = jnp.full((b,), n, jnp.int32)
         return Batch(xyz=xyz, feats=feats, keys=keys,
                      n_valid=jnp.asarray(n_valid, jnp.int32))
 
     @staticmethod
-    def from_clouds(clouds, feats=None, key=None) -> "Batch":
-        """Stack variable-size clouds, padding to the longest by repeating
-        each cloud's last point."""
+    def from_clouds(clouds, feats=None, key=None, n_pad=None) -> "Batch":
+        """Stack variable-size clouds into one padded batch.
+
+        Each cloud is padded to ``n_pad`` rows (default: the longest
+        cloud) by repeating its last point; ``n_valid`` records the true
+        sizes.  A cloud already at ``n_pad`` passes through untouched,
+        and an *empty* (0, ·) cloud — the serving dispatcher's
+        batch-fill rows for partial batches — is zero-filled and fully
+        masked via ``n_valid == 0``.  Raises if ``n_pad`` is shorter
+        than the longest cloud (silent truncation would break the
+        ragged contract)."""
         clouds = [np.asarray(c) for c in clouds]
-        n = max(c.shape[0] for c in clouds)
+        if not clouds:
+            raise ValueError("from_clouds needs at least one cloud")
+        longest = max(c.shape[0] for c in clouds)
+        n = longest if n_pad is None else int(n_pad)
+        if n < longest:
+            raise ValueError(
+                f"n_pad={n} is shorter than the longest cloud "
+                f"({longest} points); pick a bucket that fits")
+        if n < 1:
+            raise ValueError(
+                "all clouds are empty; pass n_pad >= 1 to fix the "
+                "padded shape")
         n_valid = np.array([c.shape[0] for c in clouds], np.int32)
 
         def pad(c):
+            if c.shape[0] == n:
+                return c
+            if c.shape[0] == 0:
+                return np.zeros((n,) + c.shape[1:], c.dtype)
             return np.concatenate(
-                [c, np.repeat(c[-1:], n - c.shape[0], axis=0)]) \
-                if c.shape[0] < n else c
+                [c, np.repeat(c[-1:], n - c.shape[0], axis=0)])
 
         xyz = jnp.asarray(np.stack([pad(c) for c in clouds]))
         f = None if feats is None else jnp.asarray(

@@ -16,6 +16,18 @@ Two families share one CLI, dispatched on ``--arch``:
     the engine takes the single-device fast path and ``repro.dist`` is
     never imported.
 
+  * PCN trace serving — the continuous-batching layer (``repro.serve``):
+    replay a synthetic ragged arrival trace (Poisson arrivals at
+    ``--rate`` req/s, log-normal cloud sizes with median ``--points``)
+    through the admission queue / size buckets / timeout dispatcher and
+    report per-request p50/p95/p99 latency, throughput and padding
+    waste as JSON.  Composes with ``--mesh-data`` (bucket batches must
+    divide the mesh) and ``--kernel-kw`` unchanged.
+
+        PYTHONPATH=src python -m repro.launch.serve --arch pointnet2_c \
+            --trace 64 --rate 200 --buckets 512,1024 --batch 4 \
+            --timeout-ms 10 --serve-json results/serve_trace.json
+
   * LM serving — batched prefill + decode loop with continuous-batching
     slots (unchanged behavior).
 
@@ -25,18 +37,18 @@ Two families share one CLI, dispatched on ``--arch``:
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 import numpy as np
 
 
-def serve_pcn(args):
-    """Batched PCN inference through the engine (one jit, many batches)."""
+def _pcn_engine(args):
+    """Shared PCN setup: spec (optionally reduced), mesh, engine, params."""
     import jax
-    import jax.numpy as jnp
 
     from repro import engine
-    from repro.data.synthetic import make_cloud
     from repro.models import MODEL_ZOO
 
     _, spec = MODEL_ZOO[args.arch]
@@ -56,9 +68,21 @@ def serve_pcn(args):
                 f"--batch {args.batch} does not divide over a "
                 f"{args.mesh_data}-way data mesh; pick a batch that is a "
                 f"multiple of --mesh-data")
+    kernel_kw = json.loads(args.kernel_kw) if args.kernel_kw else None
     eng = engine.PCNEngine(spec, mode=args.mode, fc_backend=args.backend,
-                           mesh=mesh)
-    params = eng.init(jax.random.PRNGKey(0))
+                           kernel_kw=kernel_kw, mesh=mesh)
+    return spec, mesh, eng, eng.init(jax.random.PRNGKey(0))
+
+
+def serve_pcn(args):
+    """Batched PCN inference through the engine (one jit, many batches)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro import engine
+    from repro.data.synthetic import make_cloud
+
+    spec, mesh, eng, params = _pcn_engine(args)
 
     rng = np.random.default_rng(0)
     f = spec.in_feats
@@ -76,29 +100,100 @@ def serve_pcn(args):
             key=jax.random.PRNGKey(step))
 
     # compile once (spec/mode/backend are static; shape fixed by the batch)
-    t0 = time.time()
+    t0 = time.perf_counter()
     logits = eng.apply(params, make_batch(0))
     logits.block_until_ready()
-    compile_s = time.time() - t0
+    compile_s = time.perf_counter() - t0
 
     # pre-build batches so the timed loop measures engine throughput, not
-    # host-side cloud synthesis
+    # host-side cloud synthesis.  Each step blocks on its own result:
+    # only syncing once at the end would hide per-step latency entirely
+    # (the first timed step absorbs the whole queued dispatch backlog),
+    # making latency percentiles meaningless — the throughput cost of
+    # per-step syncing is the dispatch gap, which is what a serving
+    # latency number must include anyway.
     batches = [make_batch(step) for step in range(1, min(args.steps, 4) + 1)]
-    t0 = time.time()
-    n = 0
+    from repro.serve import percentile_summary
+    step_ms = []
     for step in range(args.steps):
+        t1 = time.perf_counter()
         logits = eng.apply(params, batches[step % len(batches)])
-        n += args.batch
-    logits.block_until_ready()
-    dt = max(time.time() - t0, 1e-9)
+        logits.block_until_ready()
+        step_ms.append(1e3 * (time.perf_counter() - t1))
+    dt = max(sum(step_ms) / 1e3, 1e-9)
+    n = args.steps * args.batch
+    lat = percentile_summary(step_ms)
     per_dev = "" if mesh is None else (
         f", {n / dt / args.mesh_data:.1f} clouds/s/device over "
         f"{args.mesh_data} devices")
     print(f"{eng}: compiled in {compile_s:.2f}s; served {n} clouds in "
           f"{dt:.2f}s ({n / dt:.1f} clouds/s, batch={args.batch}, "
           f"N={args.points}{per_dev})")
+    print(f"per-step latency ms: p50={lat['p50']:.2f} p95={lat['p95']:.2f} "
+          f"p99={lat['p99']:.2f} mean={lat['mean']:.2f} max={lat['max']:.2f}")
     print("logits", tuple(logits.shape))
     return logits
+
+
+def serve_trace(args):
+    """Replay a synthetic ragged arrival trace through the
+    continuous-batching layer (``repro.serve``) and write the latency /
+    throughput / padding-waste report as JSON."""
+    from repro import serve
+    from repro.data.synthetic import make_cloud
+
+    spec, mesh, eng, params = _pcn_engine(args)
+    if args.buckets:
+        sizes = sorted({int(s) for s in args.buckets.split(",")})
+        buckets = serve.BucketSet.make(sizes, batch=args.batch)
+    else:
+        # no explicit sizes: plan quantile buckets from the trace itself
+        probe = serve.synthetic_trace(
+            n_requests=max(args.trace, 64), rate_hz=args.rate,
+            n_median=args.points, sigma=args.size_sigma, seed=args.seed)
+        buckets = serve.BucketSet.plan(
+            [e.n_points for e in probe], n_buckets=2, batch=args.batch)
+    events = serve.synthetic_trace(
+        n_requests=args.trace, rate_hz=args.rate, n_median=args.points,
+        sigma=args.size_sigma, n_max=buckets.max_points, seed=args.seed)
+
+    t0 = time.perf_counter()
+    server = serve.PCNServer(eng, params, buckets,
+                             timeout_s=args.timeout_ms / 1e3)
+    warmup_s = time.perf_counter() - t0
+
+    rng = np.random.default_rng(args.seed)
+    f = spec.in_feats
+
+    def make_request(n, i):
+        xyz = np.asarray(make_cloud(rng, n), np.float32)
+        feats = None if f <= 3 else np.concatenate(
+            [xyz, rng.uniform(0, 1, (n, f - 3)).astype(np.float32)], -1)
+        return xyz, feats
+
+    rids = serve.replay(server, events, make_request)
+    answered = sum(server.ready(r) for r in rids)
+    report = server.report(arch=args.arch, mode=args.mode,
+                           backend=args.backend, rate_hz=args.rate,
+                           mesh_data=args.mesh_data or None,
+                           warmup_s=warmup_s, answered=answered)
+    lat = report["latency_ms"]["e2e"]
+    per_dev = "" if mesh is None else f" over {args.mesh_data} devices"
+    print(f"{eng}: {buckets}, timeout={args.timeout_ms:.1f}ms; warmed "
+          f"{len(buckets)} buckets in {warmup_s:.2f}s; answered "
+          f"{answered}/{len(rids)} requests{per_dev}")
+    print(f"throughput {report['throughput_rps']:.1f} req/s "
+          f"(offered {args.rate:.1f}), padding waste "
+          f"{report['padding_waste_pct']:.1f}%, dispatches "
+          f"{report['dispatches']} ({report['partial_batches']} partial)")
+    print(f"e2e latency ms: p50={lat['p50']:.2f} p95={lat['p95']:.2f} "
+          f"p99={lat['p99']:.2f} max={lat['max']:.2f}")
+    if args.serve_json:
+        os.makedirs(os.path.dirname(args.serve_json) or ".", exist_ok=True)
+        with open(args.serve_json, "w") as fh:
+            json.dump(report, fh, indent=1)
+        print(f"report written to {args.serve_json}")
+    return report
 
 
 def serve_lm(args):
@@ -169,11 +264,31 @@ def main(argv=None):
     ap.add_argument("--mesh-data", type=int, default=0,
                     help="serve through an (N, 1) data mesh (0 = "
                          "single-device fast path, no repro.dist import)")
+    ap.add_argument("--kernel-kw", default=None,
+                    help='JSON kernel knob, e.g. \'{"ts": 32}\' '
+                         "(passed to PCNEngine(kernel_kw=...))")
+    # PCN trace-serving options (--trace N turns the mode on)
+    ap.add_argument("--trace", type=int, default=0,
+                    help="replay a synthetic ragged trace of N requests "
+                         "through the continuous-batching layer")
+    ap.add_argument("--rate", type=float, default=200.0,
+                    help="Poisson arrival rate, requests/s")
+    ap.add_argument("--size-sigma", type=float, default=0.35,
+                    help="log-normal size spread (median = --points)")
+    ap.add_argument("--buckets", default=None,
+                    help="comma-separated bucket pad sizes, e.g. "
+                         "'512,1024' (default: quantile-planned from "
+                         "the trace); per-bucket batch is --batch")
+    ap.add_argument("--timeout-ms", type=float, default=10.0,
+                    help="partial-batch dispatch timeout")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--serve-json", default="results/serve_trace.json",
+                    help="where the trace report JSON goes ('' = skip)")
     args = ap.parse_args(argv)
 
     from repro.models import MODEL_ZOO
     if args.arch in MODEL_ZOO:
-        return serve_pcn(args)
+        return serve_trace(args) if args.trace else serve_pcn(args)
     if args.mesh_data:
         raise SystemExit(
             "--mesh-data is the PCN engine's sharded path; the LM path "

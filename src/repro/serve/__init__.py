@@ -1,0 +1,37 @@
+"""Continuous-batching PCN serving — the async request layer.
+
+Turns the engine's kernel/sharding wins into user-facing latency on
+ragged real-world traffic: variable-size clouds are admitted one at a
+time, quantized onto a small set of pre-compiled (batch, n_points)
+buckets, coalesced into padded :class:`~repro.engine.Batch`es (the PR-2
+``n_valid`` machinery keeps padded execution numerically exact) and
+fired on batch-full or timeout, with per-request p50/p95/p99 latency,
+throughput and padding-waste reporting.
+
+    from repro import engine, serve
+
+    eng = engine.PCNEngine(spec, mode="lpcn", fc_backend="pallas")
+    params = eng.init(jax.random.PRNGKey(0))
+    server = serve.PCNServer(eng, params,
+                             serve.BucketSet.make([512, 1024], batch=4),
+                             timeout_s=0.01)
+    rid = server.submit(xyz)          # (N, 3), any N <= largest bucket
+    server.poll()                     # fire due batches (timeout path)
+    logits = server.take(rid)         # answered exactly once
+    print(server.report())            # percentiles, throughput, waste
+
+CLI: ``python -m repro.launch.serve --arch pointnet2_c --trace 64``.
+"""
+from .buckets import AdmissionError, Bucket, BucketSet
+from .dispatcher import PCNServer
+from .metrics import (DispatchRecord, RequestRecord, ServeMetrics,
+                      percentile_summary)
+from .queue import AdmissionQueue, Request
+from .trace import TraceEvent, replay, synthetic_trace
+
+__all__ = [
+    "AdmissionError", "Bucket", "BucketSet", "PCNServer",
+    "AdmissionQueue", "Request", "ServeMetrics", "RequestRecord",
+    "DispatchRecord", "percentile_summary", "TraceEvent",
+    "synthetic_trace", "replay",
+]

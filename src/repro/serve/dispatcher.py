@@ -1,0 +1,218 @@
+"""The dispatcher: continuous batching over pre-compiled size buckets.
+
+:class:`PCNServer` is the serving handle.  It coalesces admitted
+requests into the tightest bucket's batch shape and fires on either of
+two triggers:
+
+  * **batch-full** — a lane reaches its bucket's capacity; the batch
+    fires immediately, inside ``submit`` (no poll latency on the hot
+    path under load);
+  * **timeout** — ``poll()`` fires any non-empty lane whose *oldest*
+    request has waited ``timeout_s``, padding the short batch up to
+    capacity with empty fill clouds (``n_valid == 0`` — fully masked by
+    the PR-2 ragged contract), so light traffic is answered within one
+    timeout instead of starving behind an unfillable batch.
+
+Every fired batch has exactly its bucket's (B, N) shape — cloud rows
+padded via :meth:`Batch.from_clouds(..., n_pad=N) <repro.engine.Batch
+.from_clouds>`, missing batch rows zero-filled — so the engine compiles
+**once per bucket** (shape-keyed jit cache; ``n_valid`` is traced data)
+and every kernel/sharding win lands on the same executables traffic
+uses.  Responses are exact: batch row i over its valid prefix equals
+``engine.apply_single`` on that request's cloud and key.
+
+Thread model: admission and polling may come from different threads
+(queue state is lock-protected); engine execution runs outside the lock
+so submissions keep landing while a batch is in flight.  Single-threaded
+drivers just call ``submit``/``poll``/``drain`` in a loop.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from .buckets import Bucket, BucketSet
+from .metrics import ServeMetrics
+from .queue import AdmissionQueue, key_data
+
+
+class PCNServer:
+    """Continuous-batching front end over a :class:`PCNEngine`.
+
+    Parameters
+    ----------
+    engine:    a ``repro.engine.PCNEngine`` (any mode/backend/mesh —
+               with a mesh, every bucket batch must divide the data
+               axis, validated at construction).
+    params:    the engine params served to every request.
+    buckets:   a :class:`BucketSet` (or iterable of :class:`Bucket`).
+    timeout_s: max queue-wait of a lane's oldest request before a
+               partial batch fires.
+    clock:     injectable monotonic clock (tests pass a fake one to make
+               timeout policy deterministic).
+    warmup:    compile every bucket at construction (one engine
+               compilation per bucket; the first traffic batch then hits
+               the jit cache).  ``False`` compiles lazily on each
+               bucket's first dispatch.
+    """
+
+    def __init__(self, engine, params, buckets, *, timeout_s: float = 0.01,
+                 clock=time.monotonic, warmup: bool = True, seed: int = 0):
+        import jax
+        self.engine = engine
+        self.params = params
+        self.buckets = (buckets if isinstance(buckets, BucketSet)
+                        else BucketSet(buckets))
+        if engine.mesh is not None:
+            n_data = int(dict(engine.mesh.shape).get("data", 1))
+            bad = [b for b in self.buckets if b.batch % max(n_data, 1)]
+            if bad:
+                raise ValueError(
+                    f"buckets {bad} do not divide over the engine's "
+                    f"{n_data}-way data mesh; use batch sizes that are "
+                    f"multiples of {n_data}")
+        self.timeout_s = float(timeout_s)
+        self.clock = clock
+        self.queue = AdmissionQueue(self.buckets)
+        self.metrics = ServeMetrics()
+        self._base_key = jax.random.PRNGKey(seed)
+        self._results: dict[int, np.ndarray] = {}
+        self._callables: dict[tuple[int, int], object] = {}
+        self._lock = threading.Lock()
+        if warmup:
+            for b in self.buckets:
+                self._callable_for(b)
+
+    # -- compilation seam ---------------------------------------------------
+
+    def _callable_for(self, bucket: Bucket):
+        """Per-bucket compiled callable (engine seam; compiles on first
+        use of the bucket, cached thereafter)."""
+        fn = self._callables.get(bucket.key)
+        if fn is None:
+            fn = self.engine.bucket_callable(self.params, bucket.batch,
+                                             bucket.n_points)
+            self._callables[bucket.key] = fn
+        return fn
+
+    @property
+    def compile_count(self) -> int:
+        """Distinct engine executables built so far (one per bucket)."""
+        return self.engine.compile_count
+
+    # -- admission ----------------------------------------------------------
+
+    def submit(self, xyz, feats=None, key=None) -> int:
+        """Admit one cloud; returns its request id.  Fires immediately
+        if this request fills its bucket's batch.  Raises
+        :class:`AdmissionError` for clouds no bucket fits."""
+        import jax
+        now = self.clock()
+        with self._lock:
+            if key is None:
+                key = jax.random.fold_in(self._base_key,
+                                         self.queue._next_rid)
+            req = self.queue.submit(xyz, feats, key, now)
+            fire = (len(self.queue.lane(req.bucket)) >= req.bucket.batch)
+            reqs = self.queue.take(req.bucket, req.bucket.batch) \
+                if fire else None
+        if fire:
+            self._fire(req.bucket, reqs)
+        return req.rid
+
+    # -- dispatch -----------------------------------------------------------
+
+    def poll(self) -> list[int]:
+        """Fire every lane that is due (full, or oldest request past the
+        timeout); returns the rids answered by this call."""
+        done: list[int] = []
+        for bucket in self.buckets:
+            while True:
+                now = self.clock()
+                with self._lock:
+                    lane = self.queue.lane(bucket)
+                    full = len(lane) >= bucket.batch
+                    timed_out = (len(lane) > 0 and
+                                 now - lane[0].t_arrival >= self.timeout_s)
+                    reqs = self.queue.take(bucket, bucket.batch) \
+                        if (full or timed_out) else None
+                if not reqs:
+                    break
+                done += self._fire(bucket, reqs)
+        return done
+
+    def drain(self) -> list[int]:
+        """Fire everything still queued regardless of timeout (end of a
+        trace / shutdown)."""
+        done: list[int] = []
+        for bucket in self.buckets:
+            while True:
+                with self._lock:
+                    reqs = self.queue.take(bucket, bucket.batch)
+                if not reqs:
+                    break
+                done += self._fire(bucket, reqs)
+        return done
+
+    def _fire(self, bucket: Bucket, reqs) -> list[int]:
+        """Pad ``reqs`` to the bucket shape, run the engine, record
+        metrics and stash per-request responses."""
+        import jax
+        from repro.engine import Batch
+
+        fn = self._callable_for(bucket)
+        n_fill = bucket.batch - len(reqs)
+        feat_dim = self.engine.spec.in_feats
+        clouds = [r.xyz for r in reqs] + [
+            np.zeros((0, 3), np.float32)] * n_fill
+        feats = None
+        if feat_dim > 3:
+            feats = [r.feats for r in reqs] + [
+                np.zeros((0, feat_dim), np.float32)] * n_fill
+        fill_key = key_data(jax.random.PRNGKey(0))
+        keys = np.stack([r.key for r in reqs]
+                        + [fill_key] * n_fill).astype(np.uint32)
+        batch = Batch.from_clouds(clouds, feats=feats, key=keys,
+                                  n_pad=bucket.n_points)
+        t_dispatch = self.clock()
+        out = fn(batch)
+        jax.block_until_ready(out)
+        t_done = self.clock()
+        out = np.asarray(out)
+        with self._lock:
+            self.metrics.record_dispatch(
+                bucket, [(r.rid, r.n_points, r.t_arrival) for r in reqs],
+                t_dispatch, t_done)
+            for i, r in enumerate(reqs):
+                row = out[i]
+                # seg heads return (N, n_classes); valid prefix only
+                self._results[r.rid] = (row[:r.n_points]
+                                        if row.ndim == 2 else row)
+        return [r.rid for r in reqs]
+
+    # -- responses ----------------------------------------------------------
+
+    def take(self, rid: int) -> np.ndarray:
+        """Pop the response for ``rid`` (each answered exactly once);
+        KeyError if not yet dispatched or already taken."""
+        with self._lock:
+            return self._results.pop(rid)
+
+    def ready(self, rid: int) -> bool:
+        with self._lock:
+            return rid in self._results
+
+    def pending(self) -> int:
+        with self._lock:
+            return self.queue.pending()
+
+    def report(self, **extra) -> dict:
+        """Serving report (see :meth:`ServeMetrics.report`) annotated
+        with the bucket config and compile count."""
+        return self.metrics.report(
+            buckets=[list(b.key) for b in self.buckets],
+            timeout_ms=1e3 * self.timeout_s,
+            compile_count=self.compile_count,
+            engine=repr(self.engine), **extra)

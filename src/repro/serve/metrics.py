@@ -1,0 +1,128 @@
+"""Per-request latency accounting for the serving layer.
+
+Every admitted request gets three timestamps — arrival (``submit``),
+dispatch (its batch fired) and done (logits materialized) — from which
+the report derives the three serving latencies:
+
+    queue_wait = t_dispatch - t_arrival     (batching/timeout cost)
+    service    = t_done     - t_dispatch    (engine execution, shared by
+                                             the whole batch)
+    e2e        = t_done     - t_arrival     (what the user sees)
+
+reported as p50/p95/p99/mean/max in milliseconds, alongside throughput
+(requests per second over the active window) and padding waste — the
+fraction of padded (B, N) slots·rows that carried no real points, the
+price of quantizing ragged traffic onto pre-compiled bucket shapes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+PERCENTILES = (50, 95, 99)
+
+
+def percentile_summary(xs) -> dict:
+    """{"p50", "p95", "p99", "mean", "max"} of a sample (ms in, ms out);
+    all-zero on an empty sample so reports stay schema-stable."""
+    if len(xs) == 0:
+        return {f"p{q}": 0.0 for q in PERCENTILES} | {"mean": 0.0,
+                                                      "max": 0.0}
+    a = np.asarray(xs, np.float64)
+    out = {f"p{q}": float(np.percentile(a, q)) for q in PERCENTILES}
+    out["mean"] = float(a.mean())
+    out["max"] = float(a.max())
+    return out
+
+
+@dataclass(frozen=True)
+class RequestRecord:
+    """Timing of one answered request."""
+    rid: int
+    bucket: tuple[int, int]          # (batch, n_points)
+    n_points: int                    # true (unpadded) size
+    t_arrival: float
+    t_dispatch: float
+    t_done: float
+
+    @property
+    def queue_wait_s(self) -> float:
+        return self.t_dispatch - self.t_arrival
+
+    @property
+    def service_s(self) -> float:
+        return self.t_done - self.t_dispatch
+
+    @property
+    def e2e_s(self) -> float:
+        return self.t_done - self.t_arrival
+
+
+@dataclass(frozen=True)
+class DispatchRecord:
+    """One fired batch."""
+    bucket: tuple[int, int]
+    n_requests: int                  # real requests in the batch
+    valid_points: int                # sum of true sizes
+    partial: bool                    # fired by timeout below capacity
+    service_s: float
+
+
+@dataclass
+class ServeMetrics:
+    """Accumulates request/dispatch records; ``report()`` renders the
+    benchmark-JSON section."""
+    requests: list = field(default_factory=list)
+    dispatches: list = field(default_factory=list)
+
+    def record_dispatch(self, bucket, reqs, t_dispatch, t_done):
+        """``reqs``: the fired requests as (rid, n_points, t_arrival)."""
+        self.dispatches.append(DispatchRecord(
+            bucket=bucket.key, n_requests=len(reqs),
+            valid_points=sum(n for _, n, _ in reqs),
+            partial=len(reqs) < bucket.batch,
+            service_s=t_done - t_dispatch))
+        for rid, n, t_arr in reqs:
+            self.requests.append(RequestRecord(
+                rid=rid, bucket=bucket.key, n_points=n, t_arrival=t_arr,
+                t_dispatch=t_dispatch, t_done=t_done))
+
+    def report(self, **extra) -> dict:
+        """The serving report: latency percentiles (ms), throughput,
+        padding waste, per-bucket traffic.  ``extra`` (e.g.
+        ``compile_count=...``, ``buckets=[...]``) is merged in."""
+        reqs, disp = self.requests, self.dispatches
+        lat = {
+            name: percentile_summary([1e3 * getattr(r, f"{name}_s")
+                                      for r in reqs])
+            for name in ("queue_wait", "service", "e2e")
+        }
+        if reqs:
+            t0 = min(r.t_arrival for r in reqs)
+            t1 = max(r.t_done for r in reqs)
+            rps = len(reqs) / max(t1 - t0, 1e-9)
+        else:
+            rps = 0.0
+        padded = sum(d.bucket[0] * d.bucket[1] for d in disp)
+        valid = sum(d.valid_points for d in disp)
+        per_bucket: dict[str, dict] = {}
+        for d in disp:
+            k = f"{d.bucket[0]}x{d.bucket[1]}"
+            pb = per_bucket.setdefault(
+                k, {"dispatches": 0, "partial": 0, "requests": 0})
+            pb["dispatches"] += 1
+            pb["partial"] += int(d.partial)
+            pb["requests"] += d.n_requests
+        return {
+            "requests": len(reqs),
+            "dispatches": len(disp),
+            "full_batches": sum(not d.partial for d in disp),
+            "partial_batches": sum(d.partial for d in disp),
+            "throughput_rps": rps,
+            "latency_ms": lat,
+            "padding_waste_pct":
+                100.0 * (1.0 - valid / padded) if padded else 0.0,
+            "per_bucket": per_bucket,
+            **extra,
+        }

@@ -1,0 +1,86 @@
+"""Admission queue: where ragged traffic meets the bucket policy.
+
+``submit`` validates a request (non-empty, fits some bucket), assigns it
+the tightest bucket and a per-request PRNG key, stamps its arrival time
+and appends it to that bucket's FIFO lane.  Lanes keep arrival order
+*within* a bucket — the dispatcher drains each lane front-first, so no
+request can be overtaken by a later one of the same bucket (the
+starvation bound is the dispatch timeout, not queue discipline).
+
+The queue is host-side only: payloads stay numpy until the dispatcher
+pads a fired lane slice into a device :class:`~repro.engine.Batch`.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+
+import numpy as np
+
+from .buckets import AdmissionError, Bucket, BucketSet
+
+
+def key_data(key) -> np.ndarray:
+    """Canonicalize a JAX PRNG key (typed or raw uint32) to host (2,)
+    uint32 — the form :meth:`Batch.make` stacks per cloud."""
+    import jax
+    if jax.dtypes.issubdtype(key.dtype, jax.dtypes.prng_key):
+        key = jax.random.key_data(key)
+    return np.asarray(key, np.uint32)
+
+
+@dataclass
+class Request:
+    """One admitted cloud waiting for (or answered by) a dispatch."""
+    rid: int
+    xyz: np.ndarray                  # (Ni, 3) float32
+    feats: np.ndarray | None         # (Ni, F) float32 or None
+    key: np.ndarray                  # (2,) uint32 raw PRNG key data
+    bucket: Bucket
+    t_arrival: float
+
+    @property
+    def n_points(self) -> int:
+        return self.xyz.shape[0]
+
+
+class AdmissionQueue:
+    """Per-bucket FIFO lanes with admission-time validation."""
+
+    def __init__(self, buckets: BucketSet):
+        self.buckets = buckets
+        self._lanes: dict[tuple[int, int], deque[Request]] = {
+            b.key: deque() for b in buckets}
+        self._next_rid = 0
+
+    def submit(self, xyz, feats, key, now: float) -> Request:
+        """Admit one cloud; raises :class:`AdmissionError` if no bucket
+        fits.  Returns the enqueued :class:`Request`."""
+        xyz = np.asarray(xyz, np.float32)
+        if xyz.ndim != 2 or xyz.shape[-1] != 3:
+            raise AdmissionError(
+                f"a request is one cloud, shape (N, 3); got {xyz.shape}")
+        bucket = self.buckets.bucket_for(xyz.shape[0])
+        req = Request(
+            rid=self._next_rid, xyz=xyz,
+            feats=None if feats is None else np.asarray(feats, np.float32),
+            key=key_data(key), bucket=bucket, t_arrival=now)
+        self._next_rid += 1
+        self._lanes[bucket.key].append(req)
+        return req
+
+    def lane(self, bucket: Bucket) -> deque:
+        return self._lanes[bucket.key]
+
+    def take(self, bucket: Bucket, count: int) -> list[Request]:
+        """Pop up to ``count`` requests from the lane front (FIFO)."""
+        lane = self._lanes[bucket.key]
+        return [lane.popleft() for _ in range(min(count, len(lane)))]
+
+    def pending(self) -> int:
+        return sum(len(lane) for lane in self._lanes.values())
+
+    def oldest_wait(self, bucket: Bucket, now: float) -> float:
+        """Age of the lane's front request (0.0 for an empty lane)."""
+        lane = self._lanes[bucket.key]
+        return (now - lane[0].t_arrival) if lane else 0.0

@@ -184,6 +184,42 @@ def test_batch_from_clouds_pads():
                                   np.asarray(b.xyz[0, 127]))
 
 
+def test_batch_from_clouds_n_pad():
+    """n_pad pads beyond the longest cloud (the serving dispatcher's
+    bucket shape); a cloud already at n_pad passes through untouched."""
+    clouds = [np.asarray(make_cloud(np.random.default_rng(i), n),
+                         np.float32) for i, n in enumerate((100, 128))]
+    b = Batch.from_clouds(clouds, key=KEY, n_pad=160)
+    assert b.xyz.shape == (2, 160, 3)
+    assert b.n_valid.tolist() == [100, 128]
+    # Ni == n_pad edge: exact-size cloud is bitwise untouched
+    b2 = Batch.from_clouds([clouds[1]], key=KEY, n_pad=128)
+    assert b2.n_valid.tolist() == [128]
+    np.testing.assert_array_equal(np.asarray(b2.xyz[0]), clouds[1])
+    # n_pad shorter than the longest cloud must refuse, not truncate
+    with pytest.raises(ValueError, match="shorter than the longest"):
+        Batch.from_clouds(clouds, n_pad=64)
+
+
+def test_batch_from_clouds_empty_cloud():
+    """Ni == 0 edge: empty clouds (the dispatcher's batch-fill rows for
+    partial batches) zero-fill and carry n_valid == 0 — fully masked, so
+    they cannot perturb the real rows."""
+    real = np.asarray(make_cloud(np.random.default_rng(0), 90), np.float32)
+    b = Batch.from_clouds([real, np.zeros((0, 3), np.float32)],
+                          key=KEY, n_pad=96)
+    assert b.xyz.shape == (2, 96, 3)
+    assert b.n_valid.tolist() == [90, 0]
+    np.testing.assert_array_equal(np.asarray(b.xyz[1]), 0.0)
+    assert b.xyz.dtype == jnp.float32
+    # an all-empty batch has no longest cloud: n_pad is required
+    with pytest.raises(ValueError, match="n_pad >= 1"):
+        Batch.from_clouds([np.zeros((0, 3), np.float32)])
+    Batch.from_clouds([np.zeros((0, 3), np.float32)], n_pad=8)
+    with pytest.raises(ValueError, match="at least one cloud"):
+        Batch.from_clouds([])
+
+
 def test_apply_with_reports_batched():
     params = engine.init(KEY, SMALL_PN2)
     logits, rep = engine.apply_with_reports(

@@ -1,0 +1,253 @@
+"""Continuous-batching serving layer: bucket policy, admission, dispatch
+triggers (batch-full / timeout), exactly-once responses numerically equal
+to per-cloud apply_single, compile-once per bucket, and the metrics
+report."""
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine, serve
+from repro.data.synthetic import make_cloud
+from repro.engine import BlockSpec
+from repro.models import pointnet2
+from repro.serve import (AdmissionError, Bucket, BucketSet, PCNServer,
+                         ServeMetrics, percentile_summary, synthetic_trace)
+
+SPEC = replace(pointnet2.POINTNET2_C, blocks=(
+    BlockSpec(24, 8, (16, 32)), BlockSpec(8, 8, (32, 48))))
+BUCKETS = BucketSet.make([64, 96], batch=2)
+
+
+class FakeClock:
+    """Deterministic clock so timeout policy is testable without sleeps."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+@pytest.fixture(scope="module")
+def eng_params():
+    eng = engine.PCNEngine(SPEC, mode="lpcn", fc_backend="reference")
+    return eng, eng.init(jax.random.PRNGKey(0))
+
+
+def _cloud(n, seed=0):
+    return np.asarray(make_cloud(np.random.default_rng(seed), n),
+                      np.float32)
+
+
+# ---- bucket policy ----------------------------------------------------------
+
+def test_bucket_for_picks_tightest():
+    bs = BucketSet.make([64, 96, 128], batch=4)
+    assert bs.bucket_for(1).n_points == 64
+    assert bs.bucket_for(64).n_points == 64
+    assert bs.bucket_for(65).n_points == 96
+    assert bs.bucket_for(128).n_points == 128
+
+
+def test_bucket_admission_errors():
+    bs = BucketSet.make([64], batch=4)
+    with pytest.raises(AdmissionError, match="largest bucket is 64"):
+        bs.bucket_for(65)
+    with pytest.raises(AdmissionError, match="n >= 1"):
+        bs.bucket_for(0)
+    with pytest.raises(ValueError, match="duplicate bucket"):
+        BucketSet.make([64, 64], batch=4)
+
+
+def test_bucket_plan_quantiles_aligned():
+    sizes = [50] * 90 + [500] * 10
+    bs = BucketSet.plan(sizes, n_buckets=2, batch=4, align=64)
+    assert all(b.n_points % 64 == 0 for b in bs)
+    assert bs.max_points >= 500          # top edge covers the sample
+    assert bs.buckets[0].n_points >= 50  # tight edge covers the mass
+
+
+# ---- dispatch policy --------------------------------------------------------
+
+def test_batch_full_fires_immediately(eng_params):
+    """Reaching bucket capacity fires inside submit — no poll needed."""
+    eng, params = eng_params
+    clock = FakeClock()
+    srv = PCNServer(eng, params, BUCKETS, timeout_s=10.0, clock=clock)
+    r0 = srv.submit(_cloud(60, 0))
+    assert not srv.ready(r0) and srv.pending() == 1
+    r1 = srv.submit(_cloud(50, 1))       # same 64-bucket: batch full
+    assert srv.ready(r0) and srv.ready(r1) and srv.pending() == 0
+    assert srv.metrics.dispatches[-1].partial is False
+
+
+def test_timeout_fires_partial_no_starvation(eng_params):
+    """A lone request must be answered one timeout after arrival, by a
+    partial batch padded with masked fill rows — not starve waiting for
+    a batch that will never fill."""
+    eng, params = eng_params
+    clock = FakeClock()
+    srv = PCNServer(eng, params, BUCKETS, timeout_s=0.5, clock=clock)
+    rid = srv.submit(_cloud(80, 2))      # 96-bucket, alone
+    assert srv.poll() == []              # not due yet
+    clock.advance(0.49)
+    assert srv.poll() == []              # still inside the timeout
+    clock.advance(0.02)
+    assert srv.poll() == [rid]           # due: partial batch fires
+    d = srv.metrics.dispatches[-1]
+    assert d.partial and d.n_requests == 1 and d.bucket == (2, 96)
+    rec = srv.metrics.requests[-1]
+    assert rec.queue_wait_s == pytest.approx(0.51)
+
+
+def test_fifo_within_bucket(eng_params):
+    """Dispatch drains a lane front-first: the oldest requests ride the
+    first batch."""
+    eng, params = eng_params
+    clock = FakeClock()
+    srv = PCNServer(eng, params, BUCKETS, timeout_s=10.0, clock=clock)
+    rids = [srv.submit(_cloud(40, s)) for s in range(3)]
+    # first two filled a batch and fired; the third still queues
+    assert srv.ready(rids[0]) and srv.ready(rids[1])
+    assert not srv.ready(rids[2]) and srv.pending() == 1
+    assert srv.drain() == [rids[2]]
+
+
+def test_admission_rejects_bad_requests(eng_params):
+    eng, params = eng_params
+    srv = PCNServer(eng, params, BUCKETS, timeout_s=1.0,
+                    clock=FakeClock())
+    with pytest.raises(AdmissionError, match="largest bucket"):
+        srv.submit(_cloud(97))
+    with pytest.raises(AdmissionError, match="n >= 1"):
+        srv.submit(np.zeros((0, 3), np.float32))
+    with pytest.raises(AdmissionError, match=r"\(N, 3\)"):
+        srv.submit(np.zeros((4, 2), np.float32))
+    assert srv.pending() == 0            # rejected requests never queue
+
+
+def test_exactly_once_and_equivalence(eng_params):
+    """Every admitted request is answered exactly once, with logits
+    equal to engine.apply_single on its own cloud and key — including
+    requests answered by a timeout-fired partial batch (fill rows are
+    fully masked)."""
+    eng, params = eng_params
+    clock = FakeClock()
+    srv = PCNServer(eng, params, BUCKETS, timeout_s=0.1, clock=clock)
+    sizes = (60, 90, 33, 64, 72)         # spans both buckets, odd count
+    clouds = [_cloud(n, seed=10 + i) for i, n in enumerate(sizes)]
+    keys = [jax.random.PRNGKey(100 + i) for i in range(len(sizes))]
+    rids = [srv.submit(c, key=k) for c, k in zip(clouds, keys)]
+    clock.advance(1.0)
+    srv.poll()                           # leftovers fire as partials
+    assert srv.pending() == 0
+    assert srv.metrics.report()["partial_batches"] >= 1
+    for rid, cloud, key in zip(rids, clouds, keys):
+        got = srv.take(rid)
+        ref, _ = eng.apply_single(params, jnp.asarray(cloud), key=key)
+        np.testing.assert_allclose(got, np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+        with pytest.raises(KeyError):    # answered exactly once
+            srv.take(rid)
+
+
+# ---- compile-once per bucket ------------------------------------------------
+
+def test_compile_once_per_bucket():
+    """A ragged trace spanning two buckets costs exactly one engine
+    compilation per (bucket, spec, mode, backend), independent of the
+    n_valid mix (same fixture pattern as tests/test_engine.py:
+    the jit cache size IS the compile count)."""
+    eng = engine.PCNEngine(SPEC, mode="lpcn", fc_backend="reference")
+    params = eng.init(jax.random.PRNGKey(1))
+    assert eng.compile_count == 0
+    clock = FakeClock()
+    srv = PCNServer(eng, params, BUCKETS, timeout_s=0.1, clock=clock)
+    assert eng.compile_count == len(BUCKETS)      # warmup: one per bucket
+    rng = np.random.default_rng(3)
+    for n in (40, 64, 90, 17, 96, 65, 1, 50):     # every n_valid different
+        srv.submit(_cloud(int(n), seed=int(rng.integers(1 << 30))))
+        clock.advance(0.2)
+        srv.poll()
+    srv.drain()
+    assert srv.pending() == 0
+    used = {r.bucket for r in srv.metrics.requests}
+    assert used == {(2, 64), (2, 96)}             # trace spanned both
+    assert eng.compile_count == len(BUCKETS)      # and compiled nothing new
+    # the report records the same count
+    assert srv.report()["compile_count"] == len(BUCKETS)
+
+
+def test_lazy_warmup_compiles_on_first_use():
+    eng = engine.PCNEngine(SPEC, mode="lpcn", fc_backend="reference")
+    params = eng.init(jax.random.PRNGKey(2))
+    srv = PCNServer(eng, params, BUCKETS, timeout_s=10.0,
+                    clock=FakeClock(), warmup=False)
+    assert eng.compile_count == 0
+    for s in range(2):
+        srv.submit(_cloud(60, seed=20 + s))       # fills the 64-bucket
+    assert eng.compile_count == 1                 # only the used bucket
+
+
+# ---- mesh validation --------------------------------------------------------
+
+def test_rejects_buckets_not_dividing_mesh(eng_params):
+    from repro.launch.mesh import local_mesh
+    eng = engine.PCNEngine(SPEC, mode="lpcn", mesh=local_mesh())
+    n_data = dict(eng.mesh.shape)["data"]
+    if n_data == 1:                      # 1-device host: everything divides
+        PCNServer(eng, eng_params[1], BucketSet.make([64], batch=3),
+                  warmup=False)
+        return
+    with pytest.raises(ValueError, match="data mesh"):
+        PCNServer(eng, eng_params[1],
+                  BucketSet.make([64], batch=n_data + 1), warmup=False)
+
+
+# ---- metrics ----------------------------------------------------------------
+
+def test_percentile_summary_monotone():
+    lat = percentile_summary(list(range(1, 101)))
+    assert lat["p50"] <= lat["p95"] <= lat["p99"] <= lat["max"]
+    empty = percentile_summary([])
+    assert empty == {"p50": 0.0, "p95": 0.0, "p99": 0.0, "mean": 0.0,
+                     "max": 0.0}
+
+
+def test_padding_waste_accounting():
+    """Waste counts both row padding (Ni < N) and batch-fill slots."""
+    m = ServeMetrics()
+    b = Bucket(2, 100)
+    # full batch: 60 + 40 valid of 200 padded
+    m.record_dispatch(b, [(0, 60, 0.0), (1, 40, 0.0)], 1.0, 2.0)
+    # partial batch: 50 valid of 200 padded (one whole fill row)
+    m.record_dispatch(b, [(2, 50, 0.5)], 1.0, 2.0)
+    rep = m.report()
+    assert rep["requests"] == 3 and rep["dispatches"] == 2
+    assert rep["full_batches"] == 1 and rep["partial_batches"] == 1
+    assert rep["padding_waste_pct"] == pytest.approx(
+        100.0 * (1 - 150 / 400))
+    assert rep["per_bucket"]["2x100"] == {
+        "dispatches": 2, "partial": 1, "requests": 3}
+    # queue_wait of rid 2: dispatched at 1.0, arrived 0.5
+    rec = [r for r in m.requests if r.rid == 2][0]
+    assert rec.queue_wait_s == pytest.approx(0.5)
+    assert rec.e2e_s == pytest.approx(1.5)
+
+
+def test_synthetic_trace_shape():
+    ev = synthetic_trace(n_requests=50, rate_hz=100, n_median=128,
+                         sigma=0.4, n_min=32, n_max=256, seed=7)
+    assert len(ev) == 50 and ev[0].t == 0.0
+    assert all(e2.t >= e1.t for e1, e2 in zip(ev, ev[1:]))
+    assert all(32 <= e.n_points <= 256 for e in ev)
+    # deterministic under the same seed
+    ev2 = synthetic_trace(n_requests=50, rate_hz=100, n_median=128,
+                          sigma=0.4, n_min=32, n_max=256, seed=7)
+    assert ev == ev2
