@@ -255,6 +255,14 @@ def bench_fc_kernel(rows, quick: bool):
         jax.block_until_ready(out)
         return (time.time() - t0) / reps * 1e6
 
+    def _static_footprint(f, *args):
+        """The kernel linter's static VMEM prediction for the traced
+        call — recorded next to the measured time so bench results and
+        static predictions can be cross-checked offline."""
+        from repro.analysis import pallas_call_sites
+        sites = pallas_call_sites(jax.make_jaxpr(f)(*args))
+        return dict(static_vmem_bytes=[s.footprint_bytes for s in sites])
+
     for b in batches:
         s, k = sk
         d, dc, hd, f = 35, 3, 64, 128
@@ -275,7 +283,9 @@ def bench_fc_kernel(rows, quick: bool):
         us_b = timed(batched, raw, ctr, mask)
         meta = dict(batch=b, shapes={"s": s, "k": k, "d": d, "h": hd,
                                      "f": f},
-                    tile=plan, grid=[b, plan["grid_tiles"]])
+                    tile=plan, grid=[b, plan["grid_tiles"]],
+                    **_static_footprint(batched, raw, ctr, mask),
+                    tile_provenance=plan["provenance"])
         _emit(rows, f"fc_kernel_gather_mlp_vmap_b{b}", us_v,
               f"per_cloud_dispatches={b}", dispatch="vmap",
               per_cloud_dispatches=b, **meta)
@@ -300,7 +310,9 @@ def bench_fc_kernel(rows, quick: bool):
         us_b = timed(batched, pool, slot, comp, live)
         meta = dict(batch=b, shapes={"hn": hn, "c": c, "m": m, "k": k,
                                      "d": d, "h": hd, "f": f},
-                    tile=hplan, grid=[b, hplan["grid_tiles"]])
+                    tile=hplan, grid=[b, hplan["grid_tiles"]],
+                    **_static_footprint(batched, pool, slot, comp, live),
+                    tile_provenance=hplan["provenance"])
         _emit(rows, f"fc_kernel_hub_reuse_vmap_b{b}", us_v,
               f"per_cloud_dispatches={b}", dispatch="vmap",
               per_cloud_dispatches=b, **meta)

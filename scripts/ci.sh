@@ -78,19 +78,36 @@ np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
                            rtol=1e-4, atol=1e-4)
 
 # one pallas_call per FC call site, batch folded into the grid (the
-# jaxpr walker is shared with tests/test_batched_fc.py — one copy)
-import sys
-sys.path.insert(0, "tests")
-from test_batched_fc import _count_pallas_calls
+# jaxpr walker is the repro.analysis one — shared with
+# tests/test_batched_fc.py and the kernel linter: one implementation)
+from repro.analysis import count_pallas_calls
 
 jx = jax.make_jaxpr(partial(engine.apply, spec=spec, mode="lpcn",
                             fc_backend="pallas"))(params, batch)
 grids = []
-n = _count_pallas_calls(jx.jaxpr, grids)
+n = count_pallas_calls(jx.jaxpr, grids)
 assert n == 2 * len(spec.blocks), (n, grids)
 assert all(g[0] == 3 for g in grids), grids
 print(f"batched-kernel smoke ok: pallas==reference on a ragged batch, "
       f"{n} pallas_calls for {len(spec.blocks)} blocks, grids={grids}")
+EOF
+
+echo "== static analysis gate (repro.analysis --strict) =="
+# kernel / recompile / ragged-masking / repo lint over the full
+# 4-model x 2-mode x 2-backend matrix + serve/dist entry points;
+# unsuppressed error-severity findings fail CI.  The JSON report lands
+# in results/ and is uploaded with the benchmark artifacts.
+python -m repro.analysis --strict --json results/analysis_report.json
+python - <<'EOF'
+import json
+rep = json.load(open("results/analysis_report.json"))
+assert rep["summary"]["strict_ok"], rep["summary"]
+assert rep["kernel_sites"], "analysis saw no pallas_call sites"
+for row in rep["kernel_sites"]:
+    assert row["footprint_bytes"] > 0 and len(row["grid"]) == 2, row
+print(f"analysis gate ok: {len(rep['kernel_sites'])} kernel sites, "
+      f"{rep['summary']['findings']} findings "
+      f"({rep['summary']['suppressed']} suppressed, 0 errors)")
 EOF
 
 echo "== engine smoke benchmark =="

@@ -1,0 +1,43 @@
+"""repro.analysis — static analysis for the PCN engine's contracts.
+
+Four rule families over traced jaxprs and repo source (no kernel ever
+executes):
+
+=======  ==========================================================
+family   rules
+=======  ==========================================================
+kernel   K001 VMEM budget · K002 lane alignment · K003 grid/index
+         coverage · K004 resident-operand coverage · K005
+         dimension_semantics sanity
+retrace  R001 numpy leaf · R002 python-scalar leaf · R003
+         unhashable static · R004 shape-cache growth
+masking  M001 unguarded reduction over a point axis
+repo     A001 jax.random.choice · A002 dist import on the fast
+         path · A003 wall-clock under trace
+=======  ==========================================================
+
+CLI: ``python -m repro.analysis [--strict] [--json PATH]``; inline
+suppressions: ``# analysis: allow K002 [pattern] -- justification``.
+"""
+from .findings import (ERROR, WARNING, Finding, RULES, Suppression, active,
+                       apply_suppressions, scan_suppressions)
+from .kernels import (KernelSite, OperandInfo, check_kernel_site,
+                      count_pallas_calls, kernel_findings, pallas_call_sites)
+from .masking import masked_reduction_findings
+from .repolint import repo_findings
+from .retrace import (cache_growth_findings, compile_cache_size,
+                      leaf_findings, static_findings)
+from .targets import (Target, default_targets, reduced_specs,
+                      spec_point_sizes)
+
+__all__ = [
+    "ERROR", "WARNING", "Finding", "RULES", "Suppression", "active",
+    "apply_suppressions", "scan_suppressions",
+    "KernelSite", "OperandInfo", "check_kernel_site", "count_pallas_calls",
+    "kernel_findings", "pallas_call_sites",
+    "masked_reduction_findings",
+    "repo_findings",
+    "cache_growth_findings", "compile_cache_size", "leaf_findings",
+    "static_findings",
+    "Target", "default_targets", "reduced_specs", "spec_point_sizes",
+]

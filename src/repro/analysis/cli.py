@@ -1,0 +1,178 @@
+"""``python -m repro.analysis`` — run every rule family and report.
+
+Usage:
+
+    python -m repro.analysis                      # full matrix, report to stdout
+    python -m repro.analysis --strict             # exit 1 on unsuppressed errors
+    python -m repro.analysis --json results/analysis_report.json
+    python -m repro.analysis --models pointnet2 --backends pallas --quick
+
+``--quick`` restricts the matrix to one model family and skips the
+executable R004 cache-growth probe (everything else is pure tracing —
+no kernel runs either way).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from .findings import Finding, RULES, active, apply_suppressions, scan_suppressions
+from .kernels import kernel_findings, pallas_call_sites
+from .masking import masked_reduction_findings
+from .repolint import _iter_sources, repo_findings
+from .retrace import leaf_findings, static_findings
+from . import targets as T
+
+
+def _src_suppressions(src_root: str | None):
+    """Suppressions declared anywhere under src/repro apply to jaxpr-level
+    (logical-location) findings via their fnmatch pattern."""
+    if src_root is None:
+        here = os.path.dirname(os.path.abspath(__file__))
+        src_root = os.path.dirname(os.path.dirname(here))
+    sups, meta = [], []
+    for path in _iter_sources(src_root):
+        s, m = scan_suppressions(path)
+        sups.extend(s)
+        meta.extend(m)
+    return sups, meta
+
+
+def analyze_targets(target_list, suppressions=()):
+    """Trace each target and run the jaxpr rule families (K*, M001,
+    R001–R003).  Returns ``(findings, kernel_inventory)``."""
+    findings: list[Finding] = []
+    inventory: list[dict] = []
+    for t in target_list:
+        try:
+            closed = t.trace()
+        except Exception as e:  # a target that cannot trace is itself a defect
+            findings.append(Finding(
+                "K003", f"target failed to trace: {type(e).__name__}: {e}",
+                where=t.name))
+            continue
+        findings.extend(kernel_findings(
+            closed, vmem_budget_mb=t.vmem_budget_mb, where=t.name))
+        findings.extend(masked_reduction_findings(
+            closed, point_sizes=t.point_sizes, where=t.name))
+        if t.operands is not None:
+            findings.extend(leaf_findings(t.operands, where=t.name))
+        if t.statics:
+            findings.extend(static_findings(t.statics, where=t.name))
+        for site in pallas_call_sites(closed, where=t.name):
+            inventory.append({
+                "target": t.name, "site": site.where, "grid": list(site.grid),
+                "dimension_semantics": (list(site.dimension_semantics)
+                                        if site.dimension_semantics else None),
+                "footprint_bytes": site.footprint_bytes,
+                "vmem_budget_mb": t.vmem_budget_mb,
+            })
+    return apply_suppressions(findings, list(suppressions)), inventory
+
+
+def retrace_exec_findings() -> list[Finding]:
+    """R004: one small engine, several same-shape input forms (raw array
+    vs Batch vs differing n_valid vs numpy-origin keys) must share one
+    executable.  This is the only check that runs device code."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro import engine
+    from repro.engine import Batch
+
+    from .retrace import cache_growth_findings
+
+    spec = T.reduced_specs()["pointnet2"]
+    eng = engine.PCNEngine(spec, mode="lpcn", fc_backend="reference")
+    params = eng.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    xyz = jnp.asarray(rng.standard_normal((2, 96, 3)), jnp.float32)
+    mixes = [
+        (params, xyz),                                        # raw array
+        (params, Batch.make(xyz, key=jax.random.PRNGKey(1))), # Batch
+        (params, Batch.make(xyz, key=jax.random.PRNGKey(1),
+                            n_valid=jnp.asarray([96, 40], jnp.int32))),
+        (params, Batch.make(xyz,                              # numpy keys
+                            key=np.stack([np.asarray(
+                                jax.random.key_data(jax.random.PRNGKey(i)))
+                                for i in range(2)]).astype(np.uint32))),
+    ]
+    return cache_growth_findings(
+        eng.apply, mixes, expected=1,
+        where="engine[pointnet2/lpcn/reference]/cache")
+
+
+def build_report(findings, inventory, level: str) -> dict:
+    errors = active(findings, "error")
+    warnings = active(findings, "warning")
+    return {
+        "level": level,
+        "rules": {rid: {"severity": sev, "description": desc}
+                  for rid, (sev, desc) in RULES.items()},
+        "kernel_sites": inventory,
+        "findings": [f.to_dict() for f in findings],
+        "summary": {
+            "findings": len(findings),
+            "errors": len(errors),
+            "warnings": len(warnings),
+            "suppressed": sum(f.suppressed for f in findings),
+            "strict_ok": not errors,
+        },
+    }
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static analysis over the engine matrix + repo source")
+    p.add_argument("--strict", action="store_true",
+                   help="exit 1 if any unsuppressed error-severity finding")
+    p.add_argument("--json", default=None, metavar="PATH",
+                   help="write the JSON report here")
+    p.add_argument("--models", nargs="*", default=list(T.MODELS),
+                   choices=list(T.MODELS))
+    p.add_argument("--modes", nargs="*", default=list(T.MODES),
+                   choices=list(T.MODES))
+    p.add_argument("--backends", nargs="*", default=list(T.BACKENDS),
+                   choices=list(T.BACKENDS))
+    p.add_argument("--quick", action="store_true",
+                   help="one model family, skip the executable R004 probe")
+    p.add_argument("--no-exec", action="store_true",
+                   help="skip the executable R004 cache-growth probe")
+    p.add_argument("--no-repo", action="store_true",
+                   help="skip the AST repo lint")
+    args = p.parse_args(argv)
+
+    models = args.models[:1] if args.quick else args.models
+    sups, meta = _src_suppressions(None)
+
+    target_list = T.default_targets(
+        models=models, modes=args.modes, backends=args.backends,
+        include_serve=not args.quick, include_dist=not args.quick)
+    findings, inventory = analyze_targets(target_list, suppressions=sups)
+    findings.extend(meta)
+    if not args.no_repo:
+        findings.extend(repo_findings())
+    if not (args.quick or args.no_exec):
+        findings.extend(apply_suppressions(retrace_exec_findings(), sups))
+
+    level = "quick" if args.quick else "full"
+    report = build_report(findings, inventory, level)
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w", encoding="utf-8") as fh:
+            json.dump(report, fh, indent=2)
+
+    for f in findings:
+        print(f)
+    s = report["summary"]
+    print(f"repro.analysis [{level}]: {len(target_list)} targets, "
+          f"{len(inventory)} kernel sites, {s['findings']} findings "
+          f"({s['errors']} errors, {s['warnings']} warnings, "
+          f"{s['suppressed']} suppressed)")
+    if args.strict and not s["strict_ok"]:
+        print("STRICT: unsuppressed errors present", file=sys.stderr)
+        return 1
+    return 0

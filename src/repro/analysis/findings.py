@@ -1,0 +1,151 @@
+"""Finding records, the rule catalog, and inline suppressions.
+
+Every rule in ``repro.analysis`` reports through a :class:`Finding`:
+a rule id, a severity, a human-readable message, and a *location*
+string.  Locations are either ``path:line`` (AST rules) or a dotted
+logical path like ``engine[pointnet2/lpcn/pallas]/fc0`` (jaxpr rules)
+— suppression patterns match against this string with :mod:`fnmatch`.
+
+Suppression syntax (inline comment, same line or the line above the
+flagged source line; for jaxpr findings put it anywhere in the file
+named by the finding's ``file`` attribute or pass patterns explicitly):
+
+    # analysis: allow K002 -- ctr block streams the full 3-wide axis
+    # analysis: allow M001 engine[*]/pool* -- centers are fully valid
+
+The justification after ``--`` is mandatory: a suppression without one
+does not take effect and is itself reported as ``S001``.
+"""
+from __future__ import annotations
+
+import fnmatch
+import re
+from dataclasses import dataclass, field, asdict
+
+ERROR = "error"
+WARNING = "warning"
+
+#: rule id -> (default severity, one-line description)
+RULES: dict[str, tuple[str, str]] = {
+    # kernel lint (analysis/kernels.py)
+    "K001": (ERROR, "pallas_call block buffers exceed the declared VMEM budget"),
+    "K002": (ERROR, "block last dim is neither 128-lane aligned nor the full array width"),
+    "K003": (ERROR, "grid/index map addresses a tile fully outside the operand"),
+    "K004": (ERROR, "resident operand (constant index map) does not cover its array"),
+    "K005": (ERROR, "dimension_semantics inconsistent with the grid or output index maps"),
+    # recompile-hazard lint (analysis/retrace.py)
+    "R001": (ERROR, "numpy.ndarray leaf in a traced operand position (retraces per call site)"),
+    "R002": (WARNING, "python scalar leaf in a traced operand position (weak-type hazard)"),
+    "R003": (ERROR, "unhashable static argument (jit cannot cache on it)"),
+    "R004": (ERROR, "jit shape-cache grew across representative input mixes"),
+    # ragged-masking lint (analysis/masking.py)
+    "M001": (ERROR, "reduction over a point axis without an n_valid mask / sentinel fill"),
+    # repo lint (analysis/repolint.py)
+    "A001": (ERROR, "jax.random.choice call (length-dependent host fallback; use index_uniform)"),
+    "A002": (ERROR, "module-level repro.dist import reachable from the mesh=None fast path"),
+    "A003": (ERROR, "wall-clock call inside traced/jitted package scope"),
+    # meta
+    "S001": (WARNING, "suppression comment without a '-- justification' is inactive"),
+}
+
+
+@dataclass
+class Finding:
+    rule: str
+    message: str
+    where: str            # "path:line" or a logical jaxpr location
+    severity: str = ""    # defaults from RULES at __post_init__
+    file: str | None = None
+    line: int | None = None
+    suppressed: bool = False
+    justification: str | None = None
+
+    def __post_init__(self):
+        if not self.severity:
+            self.severity = RULES.get(self.rule, (ERROR, ""))[0]
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["description"] = RULES.get(self.rule, ("", ""))[1]
+        return d
+
+    def __str__(self):
+        tag = " [suppressed]" if self.suppressed else ""
+        return f"{self.severity.upper()} {self.rule} {self.where}: {self.message}{tag}"
+
+
+@dataclass(frozen=True)
+class Suppression:
+    rule: str
+    pattern: str          # fnmatch pattern vs Finding.where ("*" = any)
+    justification: str
+    file: str
+    line: int
+
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*analysis:\s*allow\s+(?P<rule>[A-Z]\d{3})"
+    r"(?:\s+(?P<pattern>[^\s#]+))?"
+    r"(?:\s*--\s*(?P<why>.+?))?\s*$"
+)
+
+
+def scan_suppressions(path: str, text: str | None = None):
+    """Collect inline suppressions from one source file.
+
+    Returns ``(suppressions, meta_findings)`` where meta_findings holds
+    an S001 for every justification-less (and therefore inactive)
+    suppression comment.
+    """
+    if text is None:
+        with open(path, "r", encoding="utf-8") as fh:
+            text = fh.read()
+    sups: list[Suppression] = []
+    meta: list[Finding] = []
+    for lineno, raw in enumerate(text.splitlines(), start=1):
+        m = _SUPPRESS_RE.search(raw)
+        if not m:
+            continue
+        why = (m.group("why") or "").strip()
+        if not why:
+            meta.append(Finding(
+                "S001",
+                f"suppression for {m.group('rule')} has no '-- justification'",
+                where=f"{path}:{lineno}", file=path, line=lineno))
+            continue
+        sups.append(Suppression(
+            rule=m.group("rule"), pattern=m.group("pattern") or "*",
+            justification=why, file=path, line=lineno))
+    return sups, meta
+
+
+def _matches(sup: Suppression, finding: Finding) -> bool:
+    if sup.rule != finding.rule:
+        return False
+    # AST findings are line-scoped: the comment must sit on the flagged
+    # line or the line directly above it, in the same file.
+    if finding.file is not None and finding.line is not None:
+        return (sup.file == finding.file
+                and sup.line in (finding.line, finding.line - 1)
+                and fnmatch.fnmatch(finding.where, sup.pattern))
+    # jaxpr/logical findings match purely on the location pattern.
+    return fnmatch.fnmatch(finding.where, sup.pattern)
+
+
+def apply_suppressions(findings, suppressions):
+    """Mark findings matched by a suppression; returns the same list."""
+    for f in findings:
+        for s in suppressions:
+            if _matches(s, f):
+                f.suppressed = True
+                f.justification = s.justification
+                break
+    return findings
+
+
+def active(findings, severity: str | None = None):
+    """Unsuppressed findings, optionally filtered by severity."""
+    out = [f for f in findings if not f.suppressed]
+    if severity is not None:
+        out = [f for f in out if f.severity == severity]
+    return out

@@ -1,0 +1,211 @@
+"""Repo lint: AST-level forbidden-pattern rules over ``src/repro``.
+
+* **A001** — ``jax.random.choice`` anywhere: its CPU lowering is
+  length-dependent (gathers over the full operand) and it retraces per
+  length class; the repo's samplers use ``index_uniform`` / Morton
+  order instead.
+* **A002** — a *module-level* ``repro.dist`` import in any module
+  reachable (module-level import graph) from the ``mesh=None`` fast
+  path roots (``repro.engine``, ``repro.serve``).  The compliant
+  pattern is a function-level deferred import on the ``mesh`` branch
+  (see ``engine/engine.py``), keeping single-device serving free of
+  the dist subsystem.
+* **A003** — wall-clock calls (``time.time``/``perf_counter``/
+  ``monotonic``/..., ``datetime.now``) inside packages whose code runs
+  under ``jit`` (``core``, ``kernels``, ``engine``, ``models``,
+  ``nn``): a clock read at trace time is frozen into the executable.
+  Host-side layers (``serve``, ``launch``, ``ckpt``, ``data``) may
+  read clocks freely.
+
+Inline suppressions (``# analysis: allow A00x -- why``) on the flagged
+line or the line above apply; see :mod:`repro.analysis.findings`.
+"""
+from __future__ import annotations
+
+import ast
+import os
+
+from .findings import Finding, apply_suppressions, scan_suppressions
+
+#: packages whose module code is (partially) traced under jit
+TRACED_PACKAGES = ("repro.core", "repro.kernels", "repro.engine",
+                   "repro.models", "repro.nn")
+
+#: mesh=None fast-path roots for the A002 reachability check
+FAST_PATH_ROOTS = ("repro.engine", "repro.serve")
+
+_WALLCLOCK = {
+    "time.time", "time.perf_counter", "time.monotonic",
+    "time.process_time", "time.thread_time", "time.perf_counter_ns",
+    "time.time_ns", "time.monotonic_ns",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+}
+
+
+def _module_name(root: str, path: str) -> str:
+    rel = os.path.relpath(path, root)
+    parts = rel[:-3].split(os.sep)          # strip .py; starts with "repro"
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def _iter_sources(src_root: str):
+    pkg = os.path.join(src_root, "repro")
+    for dirpath, _dirnames, filenames in os.walk(pkg):
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                yield os.path.join(dirpath, fn)
+
+
+class _ModuleScan(ast.NodeVisitor):
+    """One file: alias map, module-level repro imports, flagged calls."""
+
+    def __init__(self, module: str, path: str):
+        self.module = module
+        self.path = path
+        self.aliases: dict[str, str] = {}       # local name -> dotted path
+        self.top_imports: list[tuple[str, int]] = []   # (module, line)
+        self.calls: list[tuple[str, int]] = []  # (resolved dotted call, line)
+        self._fn_depth = 0
+
+    # -- imports ---------------------------------------------------------
+    def _resolve_from(self, node: ast.ImportFrom) -> str | None:
+        if node.level == 0:
+            return node.module
+        # relative import: anchor at this module's package
+        base = self.module.split(".")
+        if self.path.endswith("__init__.py"):
+            base = base + ["_"]                  # package itself counts as level-1
+        anchor = base[:-node.level]
+        if node.module:
+            anchor = anchor + node.module.split(".")
+        return ".".join(anchor) if anchor else None
+
+    def visit_Import(self, node: ast.Import):
+        for a in node.names:
+            self.aliases[a.asname or a.name.split(".")[0]] = (
+                a.name if a.asname else a.name.split(".")[0])
+            if a.asname:
+                self.aliases[a.asname] = a.name
+            if self._fn_depth == 0 and a.name.startswith("repro"):
+                self.top_imports.append((a.name, node.lineno))
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom):
+        mod = self._resolve_from(node)
+        if mod:
+            for a in node.names:
+                self.aliases[a.asname or a.name] = f"{mod}.{a.name}"
+            if self._fn_depth == 0 and mod.startswith("repro"):
+                self.top_imports.append((mod, node.lineno))
+                for a in node.names:
+                    sub = f"{mod}.{a.name}"
+                    self.top_imports.append((sub, node.lineno))
+        self.generic_visit(node)
+
+    # -- calls -----------------------------------------------------------
+    def _dotted(self, node) -> str | None:
+        parts = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        head = self.aliases.get(node.id, node.id)
+        return ".".join([head] + list(reversed(parts)))
+
+    def visit_Call(self, node: ast.Call):
+        dotted = self._dotted(node.func)
+        if dotted:
+            self.calls.append((dotted, node.lineno))
+        self.generic_visit(node)
+
+    def visit_FunctionDef(self, node):
+        self._fn_depth += 1
+        self.generic_visit(node)
+        self._fn_depth -= 1
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+
+def _scan_modules(src_root: str) -> dict[str, _ModuleScan]:
+    scans = {}
+    for path in _iter_sources(src_root):
+        mod = _module_name(src_root, path)
+        with open(path, "r", encoding="utf-8") as fh:
+            text = fh.read()
+        scan = _ModuleScan(mod, path)
+        scan.source = text
+        try:
+            scan.visit(ast.parse(text, filename=path))
+        except SyntaxError as e:
+            raise SyntaxError(f"{path}: {e}") from e
+        scans[mod] = scan
+    return scans
+
+
+def _reachable(scans: dict[str, _ModuleScan], roots) -> set[str]:
+    known = set(scans)
+    seen, frontier = set(), [r for r in roots if r in known]
+    while frontier:
+        mod = frontier.pop()
+        if mod in seen:
+            continue
+        seen.add(mod)
+        # importing a module imports every package __init__ above it
+        parts = mod.split(".")
+        for i in range(1, len(parts)):
+            parent = ".".join(parts[:i])
+            if parent in known and parent not in seen:
+                frontier.append(parent)
+        for imp, _line in scans[mod].top_imports:
+            if imp in known and imp not in seen:
+                frontier.append(imp)
+    return seen
+
+
+def repo_findings(src_root: str | None = None) -> list[Finding]:
+    """Run A001–A003 (plus S001 for malformed suppressions) over the
+    repo source tree rooted at ``src_root`` (default: the ``src/``
+    directory this package was imported from)."""
+    if src_root is None:
+        here = os.path.dirname(os.path.abspath(__file__))   # .../src/repro/analysis
+        src_root = os.path.dirname(os.path.dirname(here))
+    scans = _scan_modules(src_root)
+    findings: list[Finding] = []
+    suppressions = []
+    for scan in scans.values():
+        sups, meta = scan_suppressions(scan.path, scan.source)
+        suppressions.extend(sups)
+        findings.extend(meta)
+
+    for mod, scan in sorted(scans.items()):
+        for dotted, line in scan.calls:
+            if dotted == "jax.random.choice":
+                findings.append(Finding(
+                    "A001",
+                    "jax.random.choice is forbidden (length-dependent "
+                    "lowering; use core.sampling.index_uniform)",
+                    where=f"{scan.path}:{line}", file=scan.path, line=line))
+            if dotted in _WALLCLOCK and mod.startswith(TRACED_PACKAGES):
+                findings.append(Finding(
+                    "A003",
+                    f"wall-clock call {dotted} in traced package scope "
+                    f"({mod}) — a clock read under jit is frozen at "
+                    f"trace time; move it to the host-side caller",
+                    where=f"{scan.path}:{line}", file=scan.path, line=line))
+
+    reach = _reachable(scans, FAST_PATH_ROOTS)
+    for mod in sorted(reach):
+        for imp, line in scans[mod].top_imports:
+            if imp == "repro.dist" or imp.startswith("repro.dist."):
+                findings.append(Finding(
+                    "A002",
+                    f"module-level import of {imp} in {mod}, which is "
+                    f"reachable from the mesh=None fast path — defer it "
+                    f"into the mesh branch (see engine/engine.py)",
+                    where=f"{scans[mod].path}:{line}",
+                    file=scans[mod].path, line=line))
+                break
+    return apply_suppressions(findings, suppressions)

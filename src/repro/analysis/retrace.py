@@ -1,0 +1,116 @@
+"""Recompile-hazard lint: catch operands that defeat the jit cache.
+
+``jax.jit`` caches on (abstract shapes, static values, *and leaf
+types*): a ``numpy.ndarray`` leaf hashes to a different cache entry
+than the equal ``jax.Array`` — PR 6 chased a per-bucket recompile down
+to exactly that (numpy key stacks reaching ``Batch.make``).  These
+rules find the hazard statically:
+
+* **R001** — ``numpy.ndarray`` (or other non-``jax.Array`` array) leaf
+  in a traced operand tree.
+* **R002** — bare python scalar leaf in traced position (warning: same
+  cache entry, but weak-type promotion can change results vs an
+  explicit dtype).
+* **R003** — unhashable value in a *static* argument position.
+* **R004** — observed shape-cache growth across representative input
+  mixes (the executable generalization of the compile-once fixtures in
+  ``tests/test_engine.py`` / ``tests/test_serve.py``).
+
+:func:`compile_cache_size` is the one implementation of the
+compile-count probe those tests now share.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from .findings import Finding
+
+
+def _leaf_paths(tree):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in leaves:
+        yield jax.tree_util.keystr(path), leaf
+
+
+def leaf_findings(tree, where: str = "operands") -> list[Finding]:
+    """R001/R002 over every leaf of a traced-operand pytree."""
+    out: list[Finding] = []
+    for path, leaf in _leaf_paths(tree):
+        loc = f"{where}{path}"
+        if isinstance(leaf, jax.Array):
+            continue
+        if isinstance(leaf, np.ndarray) or (
+                hasattr(leaf, "shape") and hasattr(leaf, "dtype")
+                and hasattr(leaf, "__array__")):
+            out.append(Finding(
+                "R001",
+                f"{type(leaf).__module__}.{type(leaf).__name__} leaf "
+                f"(shape {getattr(leaf, 'shape', '?')}) — each call site "
+                f"passing a different leaf type gets its own jit cache "
+                f"entry; canonicalize with jnp.asarray at the boundary",
+                where=loc))
+        elif isinstance(leaf, (bool, int, float, complex)) and not isinstance(
+                leaf, np.generic):
+            out.append(Finding(
+                "R002",
+                f"python {type(leaf).__name__} leaf {leaf!r} in traced "
+                f"position — weak-type promotion hazard; wrap with "
+                f"jnp.asarray(..., dtype=...)",
+                where=loc))
+    return out
+
+
+def static_findings(statics: dict, where: str = "statics") -> list[Finding]:
+    """R003 over values bound to static (hashed, not traced) argument
+    positions."""
+    out: list[Finding] = []
+    for name, value in statics.items():
+        try:
+            hash(value)
+        except TypeError:
+            out.append(Finding(
+                "R003",
+                f"static argument {name!r} = {type(value).__name__} is "
+                f"unhashable — jit cannot cache on it (freeze it: tuple, "
+                f"frozen dataclass, or a registered hashable wrapper)",
+                where=f"{where}.{name}"))
+    return out
+
+
+def compile_cache_size(fn) -> int:
+    """Number of compiled entries behind ``fn``.
+
+    Accepts a ``jax.jit``-wrapped callable (uses its ``_cache_size``),
+    or any object exposing ``compile_count`` (e.g. ``PCNEngine``).
+    This is the single compile-count probe shared by the compile-once
+    tests and the R004 check.
+    """
+    if hasattr(fn, "_cache_size"):
+        return int(fn._cache_size())
+    if hasattr(fn, "compile_count"):
+        return int(fn.compile_count)
+    owner = getattr(fn, "__self__", None)   # bound method, e.g. eng.apply
+    if owner is not None and hasattr(owner, "compile_count"):
+        return int(owner.compile_count)
+    raise TypeError(
+        f"cannot read a compile-cache size from {type(fn).__name__}; "
+        f"expected a jax.jit callable or an object with .compile_count")
+
+
+def cache_growth_findings(fn, arg_sets, *, expected: int = 1,
+                          where: str = "jit") -> list[Finding]:
+    """R004: call ``fn`` once per argument tuple in ``arg_sets`` (all of
+    one logical shape class) and flag if the cache ends up larger than
+    ``expected``.  This executes the function — keep the inputs small."""
+    for args in arg_sets:
+        fn(*args)
+    size = compile_cache_size(fn)
+    if size > expected:
+        return [Finding(
+            "R004",
+            f"shape cache grew to {size} entries across "
+            f"{len(arg_sets)} same-shape input mixes (expected "
+            f"{expected}) — some input form retraces",
+            where=where)]
+    return []

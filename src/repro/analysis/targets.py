@@ -1,0 +1,192 @@
+"""Analysis targets: what `python -m repro.analysis` traces and checks.
+
+A :class:`Target` is one (entry point, input shape class) pair: a
+closure that traces it to a ``ClosedJaxpr`` (nothing executes), the
+operand pytree a caller would pass (for the recompile-hazard leaf
+scan), the static arguments (for the hashability check), and the
+*point sizes* — the axis lengths that carry potentially-padded point
+rows, which the masking lint treats as protected.
+
+The default matrix mirrors ``tests/test_batched_fc.py``: all four
+model families × both modes × the ``reference`` and batched ``pallas``
+backends at reduced N=96 shapes, plus the serve dispatcher's
+partial-batch ``Batch`` construction and the mesh-sharded entry point.
+(The ``pallas_vmap`` A/B backend is excluded: its per-cloud kernels
+are traced under vmap with mapped block dims that the static grid
+checks can't see through; the batched path is the serving path.)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.kernels.tiling import DEFAULT_VMEM_BUDGET_MB
+
+MODELS = ("pointnet2", "dgcnn", "pointnext", "pointvector")
+MODES = ("traditional", "lpcn")
+BACKENDS = ("reference", "pallas")
+
+_N = 96
+_SIZES = (96, 70, 57)
+
+
+@dataclass
+class Target:
+    name: str
+    trace: Callable[[], Any]            # -> ClosedJaxpr
+    operands: Any = None                # pytree for the R001/R002 leaf scan
+    statics: dict = field(default_factory=dict)   # for the R003 check
+    point_sizes: frozenset = frozenset()
+    vmem_budget_mb: float = DEFAULT_VMEM_BUDGET_MB
+
+
+def reduced_specs() -> dict:
+    """The 4 reduced model specs the analyzer (and the batched-FC test
+    matrix) runs at: N=96, two small blocks per family."""
+    from repro.engine import BlockSpec
+    from repro.models import MODEL_ZOO, dgcnn, pointnet2
+    return {
+        "pointnet2": replace(pointnet2.POINTNET2_C, blocks=(
+            BlockSpec(48, 8, (16, 32)), BlockSpec(16, 8, (32, 48)))),
+        "dgcnn": replace(dgcnn.with_points(dgcnn.DGCNN_C, _N), blocks=(
+            BlockSpec(_N, 8, (24,), kind="edge", sampler="all"),
+            BlockSpec(_N, 8, (32,), kind="edge", sampler="all"))),
+        "pointnext": replace(MODEL_ZOO["pointnext_s"][1], blocks=(
+            BlockSpec(48, 8, (24,)), BlockSpec(16, 8, (32,)))),
+        "pointvector": replace(MODEL_ZOO["pointvector_l"][1], blocks=(
+            BlockSpec(48, 8, (24,)), BlockSpec(16, 8, (48,)))),
+    }
+
+
+def spec_point_sizes(spec, n: int) -> frozenset:
+    """Axis lengths where padded point rows can appear for ``spec`` at
+    padded cloud length ``n``: the cloud axis, every neighbor axis, and
+    center axes of blocks that keep all rows (``sampler="all"``).
+    Downsampled center axes are fully valid by construction (the engine
+    drops ``n_valid`` below a downsampling block) and are excluded."""
+    sizes = {n}
+    for b in spec.blocks:
+        sizes.add(b.k)
+        if b.sampler == "all":
+            sizes.add(min(b.n_centers, n))
+    return frozenset(sizes)
+
+
+def _make_batch(spec, sizes=_SIZES, seed=0):
+    import jax
+    import jax.numpy as jnp
+    from repro.data.synthetic import make_cloud
+    from repro.engine import Batch
+    rng = np.random.default_rng(seed)
+    b = len(sizes)
+    xyz = jnp.asarray(np.stack([make_cloud(rng, _N) for _ in range(b)]))
+    f_in = spec.in_feats
+    feats = xyz if f_in == 3 else jnp.concatenate(
+        [xyz, jnp.asarray(rng.uniform(0, 1, (b, _N, f_in - 3)),
+                          jnp.float32)], -1)
+    return Batch.make(xyz, feats, key=jax.random.PRNGKey(7),
+                      n_valid=jnp.asarray(sizes, jnp.int32))
+
+
+def _engine_target(model: str, mode: str, backend: str, spec,
+                   mesh=None, tag: str = "engine") -> Target:
+    import jax
+    from repro import engine
+    from repro.engine import Batch
+
+    batch = _make_batch(spec)
+    params = engine.init(jax.random.PRNGKey(0), spec)
+    statics = {"spec": spec, "mode": mode, "fc_backend": backend}
+
+    def trace():
+        def fn(params, xyz, feats, keys, n_valid):
+            b = Batch(xyz=xyz, feats=feats, keys=keys, n_valid=n_valid)
+            return engine.apply(params, b, spec=spec, mode=mode,
+                                fc_backend=backend, mesh=mesh)
+        return jax.make_jaxpr(fn)(params, batch.xyz, batch.feats,
+                                  batch.keys, batch.n_valid)
+
+    return Target(
+        name=f"{tag}:{model}/{mode}/{backend}",
+        trace=trace,
+        operands={"params": params, "batch": batch},
+        statics=statics,
+        point_sizes=spec_point_sizes(spec, _N),
+    )
+
+
+def _serve_target(spec) -> Target:
+    """The dispatcher's partial-batch path: numpy clouds + a stacked
+    numpy key array through ``Batch.from_clouds`` (the PR-6 numpy-leaf
+    site), then the bucket-shaped engine trace."""
+    import jax
+    from jax.random import key_data
+    from repro import engine
+    from repro.engine import Batch
+
+    rng = np.random.default_rng(0)
+    clouds = [np.asarray(rng.standard_normal((sz, 3)), np.float32)
+              for sz in (96, 70)] + [np.zeros((0, 3), np.float32)]
+    fill_key = key_data(jax.random.PRNGKey(0))
+    keys = np.stack([key_data(jax.random.PRNGKey(i + 1))
+                     for i in range(2)] + [fill_key]).astype(np.uint32)
+    batch = Batch.from_clouds(clouds, key=keys, n_pad=_N)
+    params = engine.init(jax.random.PRNGKey(0), spec)
+
+    def trace():
+        def fn(params, xyz, feats, keys, n_valid):
+            b = Batch(xyz=xyz, feats=feats, keys=keys, n_valid=n_valid)
+            return engine.apply(params, b, spec=spec, mode="lpcn",
+                                fc_backend="pallas")
+        return jax.make_jaxpr(fn)(params, batch.xyz, batch.feats,
+                                  batch.keys, batch.n_valid)
+
+    return Target(
+        name="serve:pointnet2/lpcn/pallas",
+        trace=trace,
+        operands={"params": params, "batch": batch},
+        statics={"spec": spec, "mode": "lpcn", "fc_backend": "pallas"},
+        point_sizes=spec_point_sizes(spec, _N),
+    )
+
+
+def _dist_target(spec) -> Target:
+    """The mesh-sharded entry point (PR 5): engine.apply(mesh=...) over
+    whatever devices this process has."""
+    import jax
+    from repro.launch.mesh import make_mesh
+
+    n_dev = len(jax.devices())
+    mesh = make_mesh((n_dev, 1), ("data", "model"))
+    t = _engine_target("pointnet2", "lpcn", "reference", spec,
+                       mesh=mesh, tag="dist")
+    return t
+
+
+# The level-2 SA pools reduce over neighbors gathered from FPS-downsampled
+# centers, which are fully valid by construction (the engine's nv_levels
+# goes None below the first downsampling block — see core/pipeline.py), so
+# they intentionally run the unmasked kernel/reference path.  M001 cannot
+# see that from the jaxpr (K=8 collides with the masked level-1 pools), so
+# the three level-2 pool shapes of the reduced matrix are suppressed here,
+# next to the matrix they belong to.  dgcnn (sampler="all") keeps masks
+# live at every level and is checked unsuppressed.
+# analysis: allow M001 */reduce_max(3x16x8x48)@axes(2) -- level-2 SA pool over fully-valid FPS centers (pointnet2/pointvector reference path)
+# analysis: allow M001 */reduce_max(3x16x8x32)@axes(2) -- level-2 SA pool over fully-valid FPS centers (pointnext reference path)
+# analysis: allow M001 */reduce_max(16x8x128)@axes(1) -- level-2 SA pool over fully-valid FPS centers (batched pallas kernel, lane-padded)
+def default_targets(models=MODELS, modes=MODES, backends=BACKENDS,
+                    include_serve: bool = True,
+                    include_dist: bool = True) -> list[Target]:
+    specs = reduced_specs()
+    out = []
+    for model in models:
+        for mode in modes:
+            for backend in backends:
+                out.append(_engine_target(model, mode, backend, specs[model]))
+    if include_serve:
+        out.append(_serve_target(specs["pointnet2"]))
+    if include_dist:
+        out.append(_dist_target(specs["pointnet2"]))
+    return out

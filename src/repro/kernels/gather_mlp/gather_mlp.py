@@ -43,7 +43,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.tiling import (DEFAULT_VMEM_BUDGET_MB, F32_BYTES, LANE,
-                                  largest_tile, pad_axis, pad_lanes, round_up)
+                                  gather_mlp_footprint_elems, largest_tile,
+                                  pad_axis, pad_lanes, round_up)
 
 BIG = 3.4e38
 
@@ -162,20 +163,21 @@ def gather_mlp_tile_plan(s: int, k: int, d: int, dc: int, hdim: int,
     hp = round_up(hdim, LANE)
     fp = round_up(fout, LANE)
     budget = int(vmem_budget_mb * 2 ** 20)
-    weights = dp * hp + hp + hp * fp + fp
 
     def fits(t: int) -> bool:
-        streamed = 2 * t * (k * (dp + 1) + dc)       # double-buffered in
-        inter = t * k * (hp + fp)                    # x@W1, h@W2
-        out = t * fp
-        return F32_BYTES * (streamed + inter + out + weights) <= budget
+        return F32_BYTES * gather_mlp_footprint_elems(
+            t, k, dp, dc, hp, fp) <= budget
 
+    provenance = "heuristic" if ts is None else "override"
     if ts is None:
         ts = largest_tile(s, fits)
     ts = max(1, min(ts, s))
     return {"ts": ts, "d_pad": dp, "h_pad": hp, "f_pad": fp,
             "grid_tiles": pl.cdiv(s, ts),
-            "vmem_budget_mb": vmem_budget_mb}
+            "vmem_budget_mb": vmem_budget_mb,
+            "footprint_bytes": F32_BYTES * gather_mlp_footprint_elems(
+                ts, k, dp, dc, hp, fp),
+            "provenance": provenance}
 
 
 def gather_mlp_batched_pallas(raw: jnp.ndarray, centers: jnp.ndarray,

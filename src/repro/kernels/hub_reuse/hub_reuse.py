@@ -54,7 +54,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.tiling import (DEFAULT_VMEM_BUDGET_MB, F32_BYTES, LANE,
-                                  largest_tile, pad_axis, pad_lanes, round_up)
+                                  hub_reuse_footprint_elems, largest_tile,
+                                  pad_axis, pad_lanes, round_up)
 
 BIG = 3.4e38
 
@@ -229,22 +230,21 @@ def hub_reuse_tile_plan(hn: int, c: int, m: int, k: int, d: int, hdim: int,
     hp = round_up(hdim, LANE)
     fp = round_up(fout, LANE)
     budget = int(vmem_budget_mb * 2 ** 20)
-    weights = dp * hp + hp + hp * fp + fp
 
     def fits(t: int) -> bool:
-        streamed = 2 * t * (c * dp + 2 * m * k + m * fp)
-        onehot = (t * m * k) * (t * c)
-        inter = t * c * (hp + fp) + t * m * k * fp
-        out = t * m * fp
-        return F32_BYTES * (streamed + onehot + inter + out
-                            + weights) <= budget
+        return F32_BYTES * hub_reuse_footprint_elems(
+            t, c, m, k, dp, hp, fp) <= budget
 
+    provenance = "heuristic" if th is None else "override"
     if th is None:
         th = largest_tile(hn, fits, base=1)
     th = max(1, min(th, hn))
     return {"th": th, "d_pad": dp, "h_pad": hp, "f_pad": fp,
             "grid_tiles": pl.cdiv(hn, th),
-            "vmem_budget_mb": vmem_budget_mb}
+            "vmem_budget_mb": vmem_budget_mb,
+            "footprint_bytes": F32_BYTES * hub_reuse_footprint_elems(
+                th, c, m, k, dp, hp, fp),
+            "provenance": provenance}
 
 
 def hub_reuse_batched_pallas(pool_in: jnp.ndarray, slot: jnp.ndarray,

@@ -36,6 +36,54 @@ def pad_lanes(x: jnp.ndarray, multiple: int = LANE) -> jnp.ndarray:
     return pad_axis(x, x.ndim - 1, round_up(x.shape[-1], multiple))
 
 
+def block_bytes(block_shape, dtype=jnp.float32) -> int:
+    """Bytes of one VMEM block buffer (non-int dims — e.g. vmap-mapped
+    entries — count as 1)."""
+    n = 1
+    for d in block_shape:
+        n *= d if isinstance(d, int) else 1
+    return n * jnp.dtype(dtype).itemsize
+
+
+def call_footprint_bytes(streamed_bytes: int, resident_bytes: int) -> int:
+    """Jaxpr-visible VMEM footprint of one pallas_call grid step: streamed
+    blocks are double-buffered, resident (constant-index-map) blocks are
+    not.  This is the byte model ``repro.analysis`` lints against."""
+    return 2 * streamed_bytes + resident_bytes
+
+
+def mlp_weight_elems(dp: int, hp: int, fp: int) -> int:
+    """Elements of the lane-padded 2-layer MLP weights (W1+b1+W2+b2) —
+    the resident set both FC kernels pin in VMEM."""
+    return dp * hp + hp + hp * fp + fp
+
+
+def gather_mlp_footprint_elems(t: int, k: int, dp: int, dc: int, hp: int,
+                               fp: int) -> int:
+    """Per-grid-step VMEM elements of the gather-MLP kernel at subset
+    tile ``t``: double-buffered streamed blocks (raw tile + mask +
+    centers), the (t·K, H/F) matmul intermediates, the output tile, and
+    the resident weights.  Shared by :func:`gather_mlp_tile_plan`'s
+    feasibility predicate and the ``repro.analysis`` kernel linter /
+    future tile autotuner (ROADMAP item 1)."""
+    streamed = 2 * t * (k * (dp + 1) + dc)       # double-buffered in
+    inter = t * k * (hp + fp)                    # x@W1, h@W2
+    out = t * fp
+    return streamed + inter + out + mlp_weight_elems(dp, hp, fp)
+
+
+def hub_reuse_footprint_elems(t: int, c: int, m: int, k: int, dp: int,
+                              hp: int, fp: int) -> int:
+    """Per-grid-step VMEM elements of the hub-reuse kernel at island
+    tile ``t``; the one-hot gather's t² term is the binding constraint.
+    Shared by :func:`hub_reuse_tile_plan` and ``repro.analysis``."""
+    streamed = 2 * t * (c * dp + 2 * m * k + m * fp)
+    onehot = (t * m * k) * (t * c)
+    inter = t * c * (hp + fp) + t * m * k * fp
+    out = t * m * fp
+    return streamed + onehot + inter + out + mlp_weight_elems(dp, hp, fp)
+
+
 def largest_tile(limit: int, fits, base: int = SUBLANE) -> int:
     """Largest power-of-two multiple of ``base`` (capped at ``limit``) for
     which ``fits(tile) -> bool`` holds.  When even the base tile busts the

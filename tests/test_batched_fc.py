@@ -77,19 +77,10 @@ def test_batched_pallas_matches_reference_and_vmap(model, mode, mix):
                                rtol=1e-4, atol=1e-4)
 
 
-def _count_pallas_calls(jaxpr, grids):
-    n = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "pallas_call":
-            n += 1
-            gm = eqn.params.get("grid_mapping")
-            grids.append(tuple(getattr(gm, "grid", ())))
-        for v in eqn.params.values():
-            for sub in jax.tree_util.tree_leaves(
-                    v, is_leaf=lambda x: hasattr(x, "eqns")):
-                if hasattr(sub, "eqns"):
-                    n += _count_pallas_calls(sub, grids)
-    return n
+# one implementation of the dispatch-count invariant: the repro.analysis
+# jaxpr walker (also used by the scripts/ci.sh batched-kernel smoke and
+# the kernel linter)
+from repro.analysis import count_pallas_calls as _count_pallas_calls
 
 
 @pytest.mark.parametrize("mode,per_block", [("traditional", 1),

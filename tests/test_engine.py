@@ -9,6 +9,7 @@ import numpy as np
 import pytest
 
 from repro import engine
+from repro.analysis import compile_cache_size
 from repro.data.synthetic import make_cloud
 from repro.engine import Batch, BlockSpec, PCNParams, PCNSpec
 from repro.models import MODEL_ZOO, dgcnn, pointnet2
@@ -102,7 +103,7 @@ def test_jit_compiles_once():
     out1 = f(params, b1)
     out2 = f(params, b2)
     assert out1.shape == out2.shape == (2, 40)
-    assert f._cache_size() == 1
+    assert compile_cache_size(f) == 1
     assert bool(jnp.isfinite(out1).all() and jnp.isfinite(out2).all())
 
 
@@ -118,7 +119,7 @@ def test_engine_apply_no_retrace_across_input_forms():
     eng.apply(params, Batch.make(xyz, key=jax.random.key(5)))  # typed key
     eng.apply(engine.to_legacy(params, "pointnet2"),  # legacy dict params
               Batch.make(xyz))
-    assert eng._japply._cache_size() == 1
+    assert compile_cache_size(eng) == 1
 
 
 def test_registry_rejects_duplicates_and_unknown():

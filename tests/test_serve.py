@@ -10,6 +10,7 @@ import numpy as np
 import pytest
 
 from repro import engine, serve
+from repro.analysis import compile_cache_size
 from repro.data.synthetic import make_cloud
 from repro.engine import BlockSpec
 from repro.models import pointnet2
@@ -162,14 +163,14 @@ def test_exactly_once_and_equivalence(eng_params):
 def test_compile_once_per_bucket():
     """A ragged trace spanning two buckets costs exactly one engine
     compilation per (bucket, spec, mode, backend), independent of the
-    n_valid mix (same fixture pattern as tests/test_engine.py:
-    the jit cache size IS the compile count)."""
+    n_valid mix (the compile-count probe is repro.analysis's
+    compile_cache_size — the jit cache size IS the compile count)."""
     eng = engine.PCNEngine(SPEC, mode="lpcn", fc_backend="reference")
     params = eng.init(jax.random.PRNGKey(1))
-    assert eng.compile_count == 0
+    assert compile_cache_size(eng) == 0
     clock = FakeClock()
     srv = PCNServer(eng, params, BUCKETS, timeout_s=0.1, clock=clock)
-    assert eng.compile_count == len(BUCKETS)      # warmup: one per bucket
+    assert compile_cache_size(eng) == len(BUCKETS)   # warmup: one per bucket
     rng = np.random.default_rng(3)
     for n in (40, 64, 90, 17, 96, 65, 1, 50):     # every n_valid different
         srv.submit(_cloud(int(n), seed=int(rng.integers(1 << 30))))
@@ -179,7 +180,7 @@ def test_compile_once_per_bucket():
     assert srv.pending() == 0
     used = {r.bucket for r in srv.metrics.requests}
     assert used == {(2, 64), (2, 96)}             # trace spanned both
-    assert eng.compile_count == len(BUCKETS)      # and compiled nothing new
+    assert compile_cache_size(eng) == len(BUCKETS)   # compiled nothing new
     # the report records the same count
     assert srv.report()["compile_count"] == len(BUCKETS)
 
@@ -189,10 +190,10 @@ def test_lazy_warmup_compiles_on_first_use():
     params = eng.init(jax.random.PRNGKey(2))
     srv = PCNServer(eng, params, BUCKETS, timeout_s=10.0,
                     clock=FakeClock(), warmup=False)
-    assert eng.compile_count == 0
+    assert compile_cache_size(eng) == 0
     for s in range(2):
         srv.submit(_cloud(60, seed=20 + s))       # fills the 64-bucket
-    assert eng.compile_count == 1                 # only the used bucket
+    assert compile_cache_size(eng) == 1              # only the used bucket
 
 
 # ---- mesh validation --------------------------------------------------------
