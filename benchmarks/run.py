@@ -365,8 +365,10 @@ def bench_serve(rows, quick: bool):
     sizes) through the continuous-batching layer and records the
     user-facing serving metrics — e2e/queue-wait percentiles,
     throughput, padding waste, dispatch mix — at two offered loads:
-    light (timeouts fire partial batches) and heavy (batches fill).
-    The JSON row carries the full serve report."""
+    light (timeouts fire partial batches) and heavy (batches fill),
+    plus a chaos load (seeded FaultPlan) that prices the degraded
+    fallback path and records the fault counters.  The JSON row
+    carries the full serve report."""
     import jax
     from dataclasses import replace as _replace
     from repro import engine, serve
@@ -404,6 +406,31 @@ def bench_serve(rows, quick: bool):
               f"p99={lat['p99']:.1f} rps={rep['throughput_rps']:.1f} "
               f"waste={rep['padding_waste_pct']:.1f}%",
               serve=rep)
+
+    # chaos load: a seeded fault plan fails primary dispatches mid-trace
+    # so the row prices the degraded (fallback-retried) path — every
+    # request must still be answered
+    plan = serve.FaultPlan.bernoulli(
+        seed=7, n_steps=n_req, p_fail=0.2, p_nan=0.1)
+    server = serve.PCNServer(eng, params, buckets, timeout_s=0.01,
+                             faults=plan)
+    events = serve.synthetic_trace(
+        n_requests=n_req, rate_hz=2000.0, n_median=n_med, sigma=0.35,
+        n_max=buckets.max_points, seed=1)
+    rng = np.random.default_rng(0)
+    rids = serve.replay(
+        server, events,
+        lambda n, i: (np.asarray(make_cloud(rng, n), np.float32), None))
+    rep = server.report(load="chaos", rate_hz=2000.0)
+    assert all(server.ready(r) and not server.failed(r) for r in rids), \
+        "chaos load: fallback must answer every request"
+    lat = rep["latency_ms"]["e2e"]
+    _emit(rows, f"serve_trace_{spec.name}_chaos",
+          1e3 * lat["mean"],
+          f"p50={lat['p50']:.1f} p99={lat['p99']:.1f} "
+          f"degraded={rep['faults']['degraded_dispatches']} "
+          f"injected={len(rep['fault_plan']['injected'])}",
+          serve=rep)
 
 
 # ---- dist: mesh-sharded engine vs single device -----------------------------

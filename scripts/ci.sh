@@ -1,9 +1,10 @@
 #!/usr/bin/env bash
 # Tier-1 verification + a ~30s engine smoke benchmark + a padding-
 # equivalence smoke (the ragged-batch contract, see tests/test_padding.py
-# for the full oracle) + a mesh-sharded engine smoke (8 forced host
-# devices, subprocess — see tests/test_distributed.py for the full
-# equivalence suite).
+# for the full oracle) + serving smokes (ragged trace, chaos fault
+# injection, overload shed — see tests/test_serve.py) + a mesh-sharded
+# engine smoke (8 forced host devices, subprocess — see
+# tests/test_distributed.py for the full equivalence suite).
 #
 #   bash scripts/ci.sh
 set -euo pipefail
@@ -171,6 +172,55 @@ print(f"serve smoke ok: {rep['requests']} requests, "
       f"{rep['latency_ms']['e2e']['p95']:.1f}/"
       f"{rep['latency_ms']['e2e']['p99']:.1f} ms, "
       f"waste {rep['padding_waste_pct']:.1f}%")
+EOF
+
+echo "== chaos-trace smoke (fault injection, degraded dispatch) =="
+# same trace with a deterministic fault plan: step 1 raises inside the
+# primary dispatch, step 3 NaN-poisons its output.  Both batches must
+# be retried on the reference fallback and every request still
+# answered — the hardened-serving acceptance walk, end to end through
+# the CLI.  Exit code 0 is part of the contract: injected faults are
+# handled, not propagated.
+python -m repro.launch.serve --arch pointnet2_c --reduced --points 96 \
+    --batch 2 --trace 16 --rate 300 --buckets 96,128 --timeout-ms 5 \
+    --faults "fail@1,nan@3" \
+    --serve-json results/serve_chaos_smoke.json
+python - <<'EOF'
+import json
+rep = json.load(open("results/serve_chaos_smoke.json"))
+assert rep["requests"] == 16 and rep["answered"] == 16, rep
+assert rep["failed"] == 0 and rep["shed"] == 0, rep
+fl = rep["faults"]
+assert fl["degraded_dispatches"] == 2, fl          # both injected steps
+assert fl["failed_requests"] == 0, fl
+assert len(rep["fault_plan"]["injected"]) == 2, rep["fault_plan"]
+assert rep["breakers"], rep                        # breaker state in report
+assert all(b["state"] == "closed" for b in rep["breakers"].values()), \
+    rep["breakers"]
+print(f"chaos smoke ok: {rep['answered']}/{rep['requests']} answered "
+      f"despite injected {rep['fault_plan']['injected']}, "
+      f"{fl['degraded_dispatches']} degraded dispatches, 0 failed")
+EOF
+
+echo "== overload smoke (bounded lanes, shed-on-full backpressure) =="
+# batch 4 with a 1-deep lane and a long timeout: the burst trace can
+# admit only one request; the other 11 must shed with QueueFullError
+# at submit (counted, never forever-pending) and the replay still
+# completes with exit 0.
+python -m repro.launch.serve --arch pointnet2_c --reduced --points 96 \
+    --batch 4 --trace 12 --rate 2000 --buckets 96 --timeout-ms 200 \
+    --max-queue 1 \
+    --serve-json results/serve_overload_smoke.json
+python - <<'EOF'
+import json
+rep = json.load(open("results/serve_overload_smoke.json"))
+assert rep["requests"] == 1, rep           # latency stats: admitted only
+assert rep["answered"] == 1, rep
+assert rep["shed"] == 11, rep
+assert rep["faults"]["shed_queue_full"] == 11, rep["faults"]
+print(f"overload smoke ok: answered {rep['answered']}, shed "
+      f"{rep['shed']} at a 1-deep lane (shed_queue_full="
+      f"{rep['faults']['shed_queue_full']})")
 EOF
 
 echo "== sharded engine smoke (8 forced host devices, subprocess) =="

@@ -13,7 +13,8 @@ retrace  R001 numpy leaf · R002 python-scalar leaf · R003
          unhashable static · R004 shape-cache growth
 masking  M001 unguarded reduction over a point axis
 repo     A001 jax.random.choice · A002 dist import on the fast
-         path · A003 wall-clock under trace
+         path · A003 wall-clock under trace · A004 silent
+         error-swallowing except in the serving layer
 =======  ==========================================================
 
 CLI: ``python -m repro.analysis [--strict] [--json PATH]``; inline

@@ -44,6 +44,7 @@ RULES: dict[str, tuple[str, str]] = {
     "A001": (ERROR, "jax.random.choice call (length-dependent host fallback; use index_uniform)"),
     "A002": (ERROR, "module-level repro.dist import reachable from the mesh=None fast path"),
     "A003": (ERROR, "wall-clock call inside traced/jitted package scope"),
+    "A004": (ERROR, "blanket except in repro.serve that neither re-raises nor uses the caught error"),
     # meta
     "S001": (WARNING, "suppression comment without a '-- justification' is inactive"),
 }

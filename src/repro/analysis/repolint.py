@@ -16,6 +16,14 @@
   ``nn``): a clock read at trace time is frozen into the executable.
   Host-side layers (``serve``, ``launch``, ``ckpt``, ``data``) may
   read clocks freely.
+* **A004** — a bare ``except:`` (or blanket ``except Exception`` /
+  ``except BaseException``) inside ``repro.serve`` whose handler body
+  neither re-raises nor *uses* the caught exception (no ``as``-bound
+  name referenced).  The fault-isolation layer's whole contract is
+  that failures become structured :class:`RequestError` outcomes — a
+  handler that swallows an error silently turns a failed request into
+  a forever-pending one.  Converting handlers (``except Exception as
+  e: ... RequestError(..., cause=repr(e))``) reference ``e`` and pass.
 
 Inline suppressions (``# analysis: allow A00x -- why``) on the flagged
 line or the line above apply; see :mod:`repro.analysis.findings`.
@@ -33,6 +41,14 @@ TRACED_PACKAGES = ("repro.core", "repro.kernels", "repro.engine",
 
 #: mesh=None fast-path roots for the A002 reachability check
 FAST_PATH_ROOTS = ("repro.engine", "repro.serve")
+
+#: package whose except handlers the A004 silent-swallow check covers
+#: (the fault-isolation layer: errors must convert, never vanish)
+ERROR_CONVERTING_PACKAGE = "repro.serve"
+
+#: except-clause types A004 treats as blanket catches
+_BLANKET_EXCEPTS = {"Exception", "BaseException", "builtins.Exception",
+                    "builtins.BaseException"}
 
 _WALLCLOCK = {
     "time.time", "time.perf_counter", "time.monotonic",
@@ -67,6 +83,7 @@ class _ModuleScan(ast.NodeVisitor):
         self.aliases: dict[str, str] = {}       # local name -> dotted path
         self.top_imports: list[tuple[str, int]] = []   # (module, line)
         self.calls: list[tuple[str, int]] = []  # (resolved dotted call, line)
+        self.swallows: list[tuple[int, str]] = []      # (line, clause) A004
         self._fn_depth = 0
 
     # -- imports ---------------------------------------------------------
@@ -127,6 +144,27 @@ class _ModuleScan(ast.NodeVisitor):
         self._fn_depth -= 1
 
     visit_AsyncFunctionDef = visit_FunctionDef
+
+    # -- except handlers (A004) ------------------------------------------
+    def visit_ExceptHandler(self, node: ast.ExceptHandler):
+        types = ([] if node.type is None
+                 else node.type.elts if isinstance(node.type, ast.Tuple)
+                 else [node.type])
+        blanket = node.type is None or any(
+            self._dotted(t) in _BLANKET_EXCEPTS for t in types)
+        if blanket:
+            body_nodes = [n for stmt in node.body for n in ast.walk(stmt)]
+            reraises = any(isinstance(n, ast.Raise) for n in body_nodes)
+            uses_caught = node.name is not None and any(
+                isinstance(n, ast.Name) and n.id == node.name
+                for n in body_nodes)
+            if not (reraises or uses_caught):
+                clause = ("bare except" if node.type is None else
+                          "except " + " | ".join(
+                              filter(None, (self._dotted(t)
+                                            for t in types))))
+                self.swallows.append((node.lineno, clause))
+        self.generic_visit(node)
 
 
 def _scan_modules(src_root: str) -> dict[str, _ModuleScan]:
@@ -194,6 +232,16 @@ def repo_findings(src_root: str | None = None) -> list[Finding]:
                     f"wall-clock call {dotted} in traced package scope "
                     f"({mod}) — a clock read under jit is frozen at "
                     f"trace time; move it to the host-side caller",
+                    where=f"{scan.path}:{line}", file=scan.path, line=line))
+        if mod.startswith(ERROR_CONVERTING_PACKAGE):
+            for line, clause in scan.swallows:
+                findings.append(Finding(
+                    "A004",
+                    f"{clause} in {mod} neither re-raises nor uses the "
+                    f"caught exception — the fault-isolation layer must "
+                    f"convert failures to structured errors "
+                    f"(RequestError / a counted rejection), never "
+                    f"swallow them",
                     where=f"{scan.path}:{line}", file=scan.path, line=line))
 
     reach = _reachable(scans, FAST_PATH_ROOTS)

@@ -27,7 +27,8 @@ from .archs import ARCHS, Arch, EngineCtx, feature_propagation, get_arch
 from .engine import (PCNEngine, apply, apply_single, apply_with_reports,
                      init)
 from .fc import two_layer_form
-from .params import Batch, PCNParams, as_batch, from_legacy, to_legacy
+from .params import (Batch, PCNParams, as_batch, from_legacy, to_legacy,
+                     validate_cloud)
 from .spec import BlockSpec, PCNSpec, arch_of, block_in_dim
 
 # legacy-style alias so call sites can write `engine.params.from_legacy`
@@ -36,6 +37,7 @@ params = params_mod
 __all__ = [
     "PCNEngine", "init", "apply", "apply_single", "apply_with_reports",
     "Batch", "PCNParams", "as_batch", "from_legacy", "to_legacy",
+    "validate_cloud",
     "BlockSpec", "PCNSpec", "arch_of", "block_in_dim",
     "Registry", "SAMPLERS", "NEIGHBORS", "FC_BACKENDS", "ARCHS", "Arch",
     "EngineCtx", "register_sampler", "register_neighbor",

@@ -79,6 +79,37 @@ def to_legacy(params: PCNParams, arch: str) -> dict:
             "head": params.head}
 
 
+def validate_cloud(arr, name: str = "xyz", index=None):
+    """Host-side payload validation shared by :meth:`Batch.make`'s /
+    :meth:`Batch.from_clouds`'s ``validate=`` path and the serving
+    admission guard: reject non-finite values, coerce any floating
+    dtype to float32, refuse non-floating dtypes.  Returns the cloud
+    as a float32 numpy array.
+
+    Validation is eager-only (it inspects values, which a traced array
+    cannot do) — run it where the data is still host-side, *before*
+    jit: a NaN that reaches a compiled kernel silently corrupts every
+    reduction that touches it, with no error to catch.
+    """
+    tag = name if index is None else f"{name}[{index}]"
+    a = np.asarray(arr)
+    if not np.issubdtype(a.dtype, np.floating):
+        raise ValueError(
+            f"{tag} has dtype {a.dtype}, which is not a floating point "
+            f"cloud payload; convert to float32 before submitting")
+    if a.dtype != np.float32:
+        a = a.astype(np.float32)     # f64/f16 inputs: coerce, don't trust
+                                     # implicit x64 downcasts
+    if not np.isfinite(a).all():
+        n_bad = int(np.size(a) - np.isfinite(a).sum())
+        rows = np.unique(np.argwhere(~np.isfinite(a))[:, 0])[:4]
+        raise ValueError(
+            f"{tag} contains {n_bad} non-finite value(s) (NaN/Inf), e.g. "
+            f"in row(s) {rows.tolist()}; refuse or clean the cloud before "
+            f"it reaches a compiled kernel")
+    return a
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclass(frozen=True)
 class Batch:
@@ -118,9 +149,19 @@ class Batch:
         return self.xyz.shape[0]
 
     @staticmethod
-    def make(xyz, feats=None, key=None, n_valid=None) -> "Batch":
+    def make(xyz, feats=None, key=None, n_valid=None, *,
+             validate: bool = False) -> "Batch":
         """Wrap pre-stacked (B, N, 3)/(B, N, F) arrays.  ``key`` may be a
-        single PRNG key (split per cloud) or (B, 2) per-cloud keys."""
+        single PRNG key (split per cloud) or (B, 2) per-cloud keys.
+
+        ``validate=True`` runs the host-side payload check
+        (:func:`validate_cloud`): non-finite values are rejected with
+        an actionable error and floating dtypes are coerced to float32
+        — eager inputs only (traced arrays cannot be value-checked)."""
+        if validate:
+            xyz = validate_cloud(xyz, "xyz")
+            if feats is not None:
+                feats = validate_cloud(feats, "feats")
         xyz = jnp.asarray(xyz)
         b, n = xyz.shape[0], xyz.shape[1]
         feats = xyz if feats is None else jnp.asarray(feats)
@@ -146,7 +187,8 @@ class Batch:
                      n_valid=jnp.asarray(n_valid, jnp.int32))
 
     @staticmethod
-    def from_clouds(clouds, feats=None, key=None, n_pad=None) -> "Batch":
+    def from_clouds(clouds, feats=None, key=None, n_pad=None, *,
+                    validate: bool = False) -> "Batch":
         """Stack variable-size clouds into one padded batch.
 
         Each cloud is padded to ``n_pad`` rows (default: the longest
@@ -156,10 +198,22 @@ class Batch:
         batch-fill rows for partial batches — is zero-filled and fully
         masked via ``n_valid == 0``.  Raises if ``n_pad`` is shorter
         than the longest cloud (silent truncation would break the
-        ragged contract)."""
+        ragged contract).
+
+        ``validate=True`` runs :func:`validate_cloud` per cloud (and
+        per feature array): NaN/Inf rejected with the offending cloud
+        index in the message, dtypes coerced to float32 — the serving
+        admission guard runs the same check per request at ``submit``.
+        """
         clouds = [np.asarray(c) for c in clouds]
         if not clouds:
             raise ValueError("from_clouds needs at least one cloud")
+        if validate:
+            clouds = [validate_cloud(c, "clouds", i)
+                      for i, c in enumerate(clouds)]
+            if feats is not None:
+                feats = [validate_cloud(f, "feats", i)
+                         for i, f in enumerate(feats)]
         longest = max(c.shape[0] for c in clouds)
         n = longest if n_pad is None else int(n_pad)
         if n < longest:

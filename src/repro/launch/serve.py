@@ -20,13 +20,19 @@ Two families share one CLI, dispatched on ``--arch``:
     replay a synthetic ragged arrival trace (Poisson arrivals at
     ``--rate`` req/s, log-normal cloud sizes with median ``--points``)
     through the admission queue / size buckets / timeout dispatcher and
-    report per-request p50/p95/p99 latency, throughput and padding
-    waste as JSON.  Composes with ``--mesh-data`` (bucket batches must
-    divide the mesh) and ``--kernel-kw`` unchanged.
+    report per-request p50/p95/p99 latency, throughput, padding waste
+    and the fault counters as JSON.  Composes with ``--mesh-data``
+    (bucket batches must divide the mesh) and ``--kernel-kw``
+    unchanged.  The hardened-serving knobs ride along: ``--faults``
+    injects a deterministic chaos plan into primary dispatches,
+    ``--max-queue`` bounds each bucket lane (shed-on-full),
+    ``--deadline-ms`` stamps per-request TTLs, ``--fallback`` picks the
+    degraded backend ('' disables it).
 
         PYTHONPATH=src python -m repro.launch.serve --arch pointnet2_c \
             --trace 64 --rate 200 --buckets 512,1024 --batch 4 \
-            --timeout-ms 10 --serve-json results/serve_trace.json
+            --timeout-ms 10 --faults "fail@1,nan@3" \
+            --serve-json results/serve_trace.json
 
   * LM serving — batched prefill + decode loop with continuous-batching
     slots (unchanged behavior).
@@ -138,7 +144,15 @@ def serve_pcn(args):
 def serve_trace(args):
     """Replay a synthetic ragged arrival trace through the
     continuous-batching layer (``repro.serve``) and write the latency /
-    throughput / padding-waste report as JSON."""
+    throughput / padding-waste / fault report as JSON.
+
+    ``--faults "fail@1,nan@3,slow@5:80"`` injects a deterministic chaos
+    schedule into the primary engine callables (the fallback retry path
+    stays clean); ``--max-queue`` bounds each bucket lane
+    (shed-on-full), ``--deadline-ms`` stamps every request with a TTL
+    past which poll sheds it.  Shed requests count in the report's
+    ``faults`` section rather than aborting the replay.
+    """
     from repro import serve
     from repro.data.synthetic import make_cloud
 
@@ -157,9 +171,14 @@ def serve_trace(args):
         n_requests=args.trace, rate_hz=args.rate, n_median=args.points,
         sigma=args.size_sigma, n_max=buckets.max_points, seed=args.seed)
 
+    faults = serve.FaultPlan.parse(args.faults) if args.faults else None
     t0 = time.perf_counter()
-    server = serve.PCNServer(eng, params, buckets,
-                             timeout_s=args.timeout_ms / 1e3)
+    server = serve.PCNServer(
+        eng, params, buckets, timeout_s=args.timeout_ms / 1e3,
+        faults=faults,
+        max_lane_depth=args.max_queue or None,
+        deadline_s=(args.deadline_ms / 1e3) if args.deadline_ms else None,
+        fallback=args.fallback or None)
     warmup_s = time.perf_counter() - t0
 
     rng = np.random.default_rng(args.seed)
@@ -172,12 +191,18 @@ def serve_trace(args):
         return xyz, feats
 
     rids = serve.replay(server, events, make_request)
-    answered = sum(server.ready(r) for r in rids)
+    admitted = [r for r in rids if r is not None]
+    answered = sum(server.ready(r) and not server.failed(r)
+                   for r in admitted)
+    failed = sum(server.failed(r) for r in admitted)
     report = server.report(arch=args.arch, mode=args.mode,
                            backend=args.backend, rate_hz=args.rate,
                            mesh_data=args.mesh_data or None,
-                           warmup_s=warmup_s, answered=answered)
+                           warmup_s=warmup_s, answered=answered,
+                           failed=failed,
+                           shed=len(rids) - len(admitted))
     lat = report["latency_ms"]["e2e"]
+    fl = report["faults"]
     per_dev = "" if mesh is None else f" over {args.mesh_data} devices"
     print(f"{eng}: {buckets}, timeout={args.timeout_ms:.1f}ms; warmed "
           f"{len(buckets)} buckets in {warmup_s:.2f}s; answered "
@@ -188,6 +213,11 @@ def serve_trace(args):
           f"{report['dispatches']} ({report['partial_batches']} partial)")
     print(f"e2e latency ms: p50={lat['p50']:.2f} p95={lat['p95']:.2f} "
           f"p99={lat['p99']:.2f} max={lat['max']:.2f}")
+    print(f"faults: degraded={fl['degraded_dispatches']} "
+          f"failed={fl['failed_requests']} "
+          f"shed_queue_full={fl['shed_queue_full']} "
+          f"deadline_miss={fl['deadline_miss']} "
+          f"breaker_opened={fl['breaker_opened']}")
     if args.serve_json:
         os.makedirs(os.path.dirname(args.serve_json) or ".", exist_ok=True)
         with open(args.serve_json, "w") as fh:
@@ -281,6 +311,19 @@ def main(argv=None):
                          "the trace); per-bucket batch is --batch")
     ap.add_argument("--timeout-ms", type=float, default=10.0,
                     help="partial-batch dispatch timeout")
+    ap.add_argument("--faults", default=None,
+                    help="deterministic fault plan for the primary "
+                         "engine path, e.g. 'fail@1,nan@3,slow@5:80' "
+                         "(kind@dispatch-step[:arg_ms])")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="per-bucket lane depth bound; submits into a "
+                         "full lane are shed (0 = unbounded)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request deadline; expired queued requests "
+                         "are shed at poll time (0 = none)")
+    ap.add_argument("--fallback", default="reference",
+                    help="FC backend for the one-shot degraded retry of "
+                         "a failed batch ('' disables)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--serve-json", default="results/serve_trace.json",
                     help="where the trace report JSON goes ('' = skip)")

@@ -20,12 +20,25 @@ throughput and padding-waste reporting.
     logits = server.take(rid)         # answered exactly once
     print(server.report())            # percentiles, throughput, waste
 
+The failure-handling layer hardens this for an adverse world: a typed
+error taxonomy (:mod:`~repro.serve.errors`) behind an admission guard
+(NaN/Inf/dtype validation, size ceilings, bounded lanes with
+shed-on-full), per-bucket circuit breakers with a one-shot
+``"reference"``-backend fallback for failed batches, per-request
+deadlines with poll-time shedding, and a deterministic fault-injection
+harness (:mod:`~repro.serve.faults`) so chaos replays are reproducible
+in tests, ``launch/serve.py --faults`` and CI.
+
 CLI: ``python -m repro.launch.serve --arch pointnet2_c --trace 64``.
 """
-from .buckets import AdmissionError, Bucket, BucketSet
+from .breaker import CircuitBreaker
+from .buckets import Bucket, BucketSet
 from .dispatcher import PCNServer
-from .metrics import (DispatchRecord, RequestRecord, ServeMetrics,
-                      percentile_summary)
+from .errors import (AdmissionError, QueueFullError, RequestError,
+                     ServeError, UnknownRequestError, ValidationError)
+from .faults import Fault, FaultPlan, InjectedFault
+from .metrics import (FAULT_COUNTERS, DispatchRecord, RequestRecord,
+                      ServeMetrics, percentile_summary)
 from .queue import AdmissionQueue, Request
 from .trace import TraceEvent, replay, synthetic_trace
 
@@ -34,4 +47,7 @@ __all__ = [
     "AdmissionQueue", "Request", "ServeMetrics", "RequestRecord",
     "DispatchRecord", "percentile_summary", "TraceEvent",
     "synthetic_trace", "replay",
+    "ServeError", "ValidationError", "QueueFullError", "RequestError",
+    "UnknownRequestError", "CircuitBreaker", "Fault", "FaultPlan",
+    "InjectedFault", "FAULT_COUNTERS",
 ]

@@ -21,10 +21,9 @@ from typing import Iterable, Sequence
 
 import numpy as np
 
-
-class AdmissionError(ValueError):
-    """A request the bucket policy cannot serve (empty, or larger than
-    every configured bucket)."""
+from .errors import AdmissionError  # noqa: F401  (canonical home moved
+                                    # to serve/errors.py; re-exported
+                                    # here for pre-taxonomy importers)
 
 
 @dataclass(frozen=True)

@@ -1,4 +1,5 @@
-"""The dispatcher: continuous batching over pre-compiled size buckets.
+"""The dispatcher: continuous batching over pre-compiled size buckets,
+hardened for an adverse world.
 
 :class:`PCNServer` is the serving handle.  It coalesces admitted
 requests into the tightest bucket's batch shape and fires on either of
@@ -21,6 +22,40 @@ and every kernel/sharding win lands on the same executables traffic
 uses.  Responses are exact: batch row i over its valid prefix equals
 ``engine.apply_single`` on that request's cloud and key.
 
+Failure handling (the hardened layer):
+
+* **Admission guard** — ``submit`` refuses poisoned payloads
+  (:class:`ValidationError`: NaN/Inf, wrong shape/dtype), oversize
+  clouds (:class:`AdmissionError`) and overload
+  (:class:`QueueFullError` once a lane hits ``max_lane_depth``) with
+  structured errors *before* anything reaches a compiled kernel.
+* **Fault isolation** — an engine failure (raised exception *or*
+  non-finite output) fails only that batch: the dispatcher retries the
+  batch exactly once on the ``fallback`` backend (default
+  ``"reference"``, through the same ``register_fc_backend`` registry
+  the engine resolves), and only if that also fails do the batch's
+  requests surface a structured :class:`RequestError` via ``take``.
+  Other buckets, and other batches of the same bucket, are untouched.
+* **Circuit breaker** — per bucket: ``breaker_fail_streak`` consecutive
+  primary failures trip it open, after which dispatches skip the
+  primary entirely (straight to the fallback — degraded, not broken;
+  with no fallback they fail fast) until a half-open probe after
+  ``breaker_cooldown_s`` finds the primary healthy again.
+* **Deadlines** — a request may carry a deadline (per-request
+  ``deadline_s`` or the server default); ``poll``/``drain`` shed
+  queued requests that can no longer be answered in time (their
+  ``take`` raises ``RequestError(reason="deadline")``) instead of
+  spending device compute on answers nobody is waiting for.
+* **Fault injection** — pass ``faults=``
+  :class:`~repro.serve.faults.FaultPlan` to wrap the *primary* engine
+  callables with a deterministic chaos schedule (exceptions, NaN
+  poisoning, latency spikes); the fallback path stays clean, which is
+  exactly what makes injected chaos recoverable and testable.
+
+Every non-happy path increments a counter in the metrics ``faults``
+section (rejected/shed/deadline-miss/degraded/failed/breaker-opened),
+so a chaos trace's report quantifies the damage.
+
 Thread model: admission and polling may come from different threads
 (queue state is lock-protected); engine execution runs outside the lock
 so submissions keep landing while a batch is in flight.  Single-threaded
@@ -33,9 +68,17 @@ import time
 
 import numpy as np
 
+from .breaker import CircuitBreaker
 from .buckets import Bucket, BucketSet
+from .errors import (AdmissionError, QueueFullError, RequestError,
+                     UnknownRequestError, ValidationError)
 from .metrics import ServeMetrics
 from .queue import AdmissionQueue, key_data
+
+
+class _PoisonedOutput(RuntimeError):
+    """Internal: the engine returned non-finite values for a request's
+    valid rows — a fault even though nothing raised."""
 
 
 class PCNServer:
@@ -51,15 +94,37 @@ class PCNServer:
     timeout_s: max queue-wait of a lane's oldest request before a
                partial batch fires.
     clock:     injectable monotonic clock (tests pass a fake one to make
-               timeout policy deterministic).
+               timeout/deadline/breaker policy deterministic).
     warmup:    compile every bucket at construction (one engine
                compilation per bucket; the first traffic batch then hits
                the jit cache).  ``False`` compiles lazily on each
                bucket's first dispatch.
+    max_lane_depth: per-bucket queue bound; a submit into a full lane
+               sheds with :class:`QueueFullError` (None = unbounded).
+    deadline_s: default per-request deadline (seconds from arrival);
+               ``submit(..., deadline_s=)`` overrides per request.
+               None = requests never expire.
+    fallback:  FC backend name for the one-shot degraded retry when a
+               dispatch fails (``None`` disables: failures surface
+               immediately).  The fallback engine compiles lazily, per
+               bucket, on first use.
+    breaker_fail_streak / breaker_cooldown_s: per-bucket circuit
+               breaker: consecutive primary failures to trip, and how
+               long it stays open before a half-open probe.
+    faults:    optional :class:`~repro.serve.faults.FaultPlan`; wraps
+               the primary engine callables with a deterministic chaos
+               schedule (the fallback path is never wrapped).
+    validate:  run the payload guard (NaN/Inf/dtype) on every submit.
     """
 
     def __init__(self, engine, params, buckets, *, timeout_s: float = 0.01,
-                 clock=time.monotonic, warmup: bool = True, seed: int = 0):
+                 clock=time.monotonic, warmup: bool = True, seed: int = 0,
+                 max_lane_depth: int | None = None,
+                 deadline_s: float | None = None,
+                 fallback: str | None = "reference",
+                 breaker_fail_streak: int = 3,
+                 breaker_cooldown_s: float = 1.0,
+                 faults=None, validate: bool = True):
         import jax
         self.engine = engine
         self.params = params
@@ -75,11 +140,22 @@ class PCNServer:
                     f"multiples of {n_data}")
         self.timeout_s = float(timeout_s)
         self.clock = clock
-        self.queue = AdmissionQueue(self.buckets)
+        self.deadline_s = deadline_s
+        self.fallback = fallback
+        self.faults = faults
+        self.queue = AdmissionQueue(self.buckets,
+                                    max_lane_depth=max_lane_depth,
+                                    validate=validate)
         self.metrics = ServeMetrics()
+        self.breakers: dict[tuple[int, int], CircuitBreaker] = {
+            b.key: CircuitBreaker(breaker_fail_streak, breaker_cooldown_s,
+                                  clock=clock)
+            for b in self.buckets}
         self._base_key = jax.random.PRNGKey(seed)
-        self._results: dict[int, np.ndarray] = {}
+        self._results: dict[int, object] = {}   # ndarray | RequestError
         self._callables: dict[tuple[int, int], object] = {}
+        self._fallback_engine = None
+        self._fallback_callables: dict[tuple[int, int], object] = {}
         self._lock = threading.Lock()
         if warmup:
             for b in self.buckets:
@@ -89,32 +165,78 @@ class PCNServer:
 
     def _callable_for(self, bucket: Bucket):
         """Per-bucket compiled callable (engine seam; compiles on first
-        use of the bucket, cached thereafter)."""
+        use of the bucket, cached thereafter).  With a fault plan, the
+        returned callable is the chaos-wrapped one."""
         fn = self._callables.get(bucket.key)
         if fn is None:
             fn = self.engine.bucket_callable(self.params, bucket.batch,
                                              bucket.n_points)
+            if self.faults is not None:
+                fn = self.faults.wrap(fn)
             self._callables[bucket.key] = fn
+        return fn
+
+    def _fallback_callable_for(self, bucket: Bucket):
+        """The degraded-path callable: same spec/mode/mesh, FC backend
+        swapped to ``self.fallback`` through the registry seam.  Built
+        and compiled lazily — healthy serving never pays for it (the
+        first degraded dispatch of a bucket absorbs the compile; that
+        cost lands in its service time, visibly)."""
+        fn = self._fallback_callables.get(bucket.key)
+        if fn is None:
+            if self._fallback_engine is None:
+                eng = self.engine
+                self._fallback_engine = type(eng)(
+                    eng.spec, mode=eng.mode, fc_backend=self.fallback,
+                    isl_kw=eng.isl_kw, kernel_kw=eng.kernel_kw,
+                    mesh=eng.mesh)
+            fn = self._fallback_engine.bucket_callable(
+                self.params, bucket.batch, bucket.n_points)
+            self._fallback_callables[bucket.key] = fn
         return fn
 
     @property
     def compile_count(self) -> int:
-        """Distinct engine executables built so far (one per bucket)."""
+        """Distinct *primary*-engine executables built so far (one per
+        bucket; the lazy fallback engine has its own cache)."""
         return self.engine.compile_count
 
     # -- admission ----------------------------------------------------------
 
-    def submit(self, xyz, feats=None, key=None) -> int:
+    def submit(self, xyz, feats=None, key=None, *,
+               deadline_s: float | None = None) -> int:
         """Admit one cloud; returns its request id.  Fires immediately
-        if this request fills its bucket's batch.  Raises
-        :class:`AdmissionError` for clouds no bucket fits."""
+        if this request fills its bucket's batch.
+
+        Raises the structured admission taxonomy: :class:`ValidationError`
+        (NaN/Inf, bad shape/dtype), :class:`AdmissionError` (no bucket
+        fits), :class:`QueueFullError` (lane at its depth bound) — each
+        counted in the metrics ``faults`` section.
+
+        ``deadline_s`` (seconds from now; default: the server-level
+        ``deadline_s``) marks when the answer stops being useful:
+        ``poll``/``drain`` shed the request once it expires.
+        """
         import jax
         now = self.clock()
+        ttl = self.deadline_s if deadline_s is None else deadline_s
+        t_deadline = None if ttl is None else now + ttl
         with self._lock:
             if key is None:
                 key = jax.random.fold_in(self._base_key,
                                          self.queue._next_rid)
-            req = self.queue.submit(xyz, feats, key, now)
+            try:
+                req = self.queue.submit(xyz, feats, key, now, t_deadline)
+            except QueueFullError:
+                self.metrics.record_rejection("shed_queue_full")
+                raise
+            except ValidationError:
+                self.metrics.record_rejection("rejected_invalid")
+                raise
+            except AdmissionError:
+                # bucket-policy refusal (empty / beyond the size ceiling)
+                self.metrics.record_rejection("rejected_invalid")
+                raise
             fire = (len(self.queue.lane(req.bucket)) >= req.bucket.batch)
             reqs = self.queue.take(req.bucket, req.bucket.batch) \
                 if fire else None
@@ -124,10 +246,24 @@ class PCNServer:
 
     # -- dispatch -----------------------------------------------------------
 
+    def _shed_expired(self) -> list[int]:
+        """Drop queued requests past their deadline; each becomes a
+        ``RequestError(reason="deadline")`` outcome and a
+        ``deadline_miss`` count."""
+        now = self.clock()
+        with self._lock:
+            shed = self.queue.shed_expired(now)
+            for r in shed:
+                self.metrics.record_shed()
+                self._results[r.rid] = RequestError(
+                    r.rid, "deadline", bucket=r.bucket.key)
+        return [r.rid for r in shed]
+
     def poll(self) -> list[int]:
-        """Fire every lane that is due (full, or oldest request past the
-        timeout); returns the rids answered by this call."""
-        done: list[int] = []
+        """Shed expired requests, then fire every lane that is due
+        (full, or oldest request past the timeout); returns the rids
+        resolved by this call (answered, failed, or shed)."""
+        done: list[int] = self._shed_expired()
         for bucket in self.buckets:
             while True:
                 now = self.clock()
@@ -144,9 +280,10 @@ class PCNServer:
         return done
 
     def drain(self) -> list[int]:
-        """Fire everything still queued regardless of timeout (end of a
-        trace / shutdown)."""
-        done: list[int] = []
+        """Shed expired requests, then fire everything still queued
+        regardless of timeout (end of a trace / shutdown).  Afterwards
+        ``pending() == 0``: every admitted rid has an outcome."""
+        done: list[int] = self._shed_expired()
         for bucket in self.buckets:
             while True:
                 with self._lock:
@@ -156,13 +293,12 @@ class PCNServer:
                 done += self._fire(bucket, reqs)
         return done
 
-    def _fire(self, bucket: Bucket, reqs) -> list[int]:
-        """Pad ``reqs`` to the bucket shape, run the engine, record
-        metrics and stash per-request responses."""
+    # -- execution ----------------------------------------------------------
+
+    def _build_batch(self, bucket: Bucket, reqs):
         import jax
         from repro.engine import Batch
 
-        fn = self._callable_for(bucket)
         n_fill = bucket.batch - len(reqs)
         feat_dim = self.engine.spec.in_feats
         clouds = [r.xyz for r in reqs] + [
@@ -174,35 +310,123 @@ class PCNServer:
         fill_key = key_data(jax.random.PRNGKey(0))
         keys = np.stack([r.key for r in reqs]
                         + [fill_key] * n_fill).astype(np.uint32)
-        batch = Batch.from_clouds(clouds, feats=feats, key=keys,
-                                  n_pad=bucket.n_points)
-        t_dispatch = self.clock()
+        return Batch.from_clouds(clouds, feats=feats, key=keys,
+                                 n_pad=bucket.n_points)
+
+    def _run(self, fn, batch, reqs) -> dict[int, np.ndarray]:
+        """Execute one callable and slice out per-request rows,
+        checking every valid row is finite (a backend returning NaN is
+        a fault even when nothing raised)."""
+        import jax
         out = fn(batch)
         jax.block_until_ready(out)
-        t_done = self.clock()
         out = np.asarray(out)
+        rows: dict[int, np.ndarray] = {}
+        for i, r in enumerate(reqs):
+            row = out[i]
+            # seg heads return (N, n_classes); valid prefix only
+            row = row[:r.n_points] if row.ndim == 2 else row
+            if not np.isfinite(row).all():
+                raise _PoisonedOutput(
+                    f"non-finite output for rid {r.rid} "
+                    f"(bucket {bucket_str(r.bucket)})")
+            rows[r.rid] = row
+        return rows
+
+    def _fire(self, bucket: Bucket, reqs) -> list[int]:
+        """Pad ``reqs`` to the bucket shape and run the engine behind
+        the bucket's circuit breaker: primary (unless the breaker is
+        open), one-shot fallback retry on failure, structured
+        :class:`RequestError` outcomes if both sides fail.  Records
+        metrics and stashes per-request outcomes."""
+        batch = self._build_batch(bucket, reqs)
+        br = self.breakers[bucket.key]
+        t_dispatch = self.clock()
+        rows = None
+        err: Exception | None = None
+        try_primary = br.allow_primary()
+        if try_primary:
+            opened_before = br.open_count
+            try:
+                rows = self._run(self._callable_for(bucket), batch, reqs)
+                br.record_success()
+            except Exception as e:      # noqa: BLE001 — converted to a
+                err = e                 # RequestError / fallback below
+                br.record_failure()
+                if br.open_count > opened_before:
+                    with self._lock:
+                        self.metrics.record_breaker_opened()
+        degraded = False
+        if rows is None and self.fallback is not None:
+            try:
+                rows = self._run(self._fallback_callable_for(bucket),
+                                 batch, reqs)
+                degraded = True
+            except Exception as e:      # noqa: BLE001 — both sides down;
+                err = err or e          # surfaces as RequestError below
+        t_done = self.clock()
         with self._lock:
-            self.metrics.record_dispatch(
-                bucket, [(r.rid, r.n_points, r.t_arrival) for r in reqs],
-                t_dispatch, t_done)
-            for i, r in enumerate(reqs):
-                row = out[i]
-                # seg heads return (N, n_classes); valid prefix only
-                self._results[r.rid] = (row[:r.n_points]
-                                        if row.ndim == 2 else row)
+            if rows is not None:
+                self.metrics.record_dispatch(
+                    bucket, [(r.rid, r.n_points, r.t_arrival)
+                             for r in reqs],
+                    t_dispatch, t_done, degraded=degraded)
+                self._results.update(rows)
+            else:
+                if not try_primary and self.fallback is None:
+                    reason = "circuit_open"
+                elif isinstance(err, _PoisonedOutput):
+                    reason = "poisoned_output"
+                else:
+                    reason = "engine"
+                self.metrics.record_failed_dispatch(len(reqs))
+                for r in reqs:
+                    self._results[r.rid] = RequestError(
+                        r.rid, reason, bucket=bucket.key,
+                        cause=None if err is None else repr(err),
+                        degraded_attempted=(try_primary
+                                            and self.fallback is not None))
         return [r.rid for r in reqs]
 
     # -- responses ----------------------------------------------------------
 
     def take(self, rid: int) -> np.ndarray:
-        """Pop the response for ``rid`` (each answered exactly once);
-        KeyError if not yet dispatched or already taken."""
+        """Pop the outcome for ``rid`` (each resolved exactly once).
+
+        Returns the logits for an answered request; raises its
+        :class:`RequestError` for a failed/shed one (also popped —
+        failures are observed exactly once, like responses); raises
+        :class:`UnknownRequestError` (a ``KeyError``) with a diagnosis
+        when there is nothing to pop: still pending, already taken, or
+        never submitted."""
         with self._lock:
-            return self._results.pop(rid)
+            if rid in self._results:
+                out = self._results.pop(rid)
+            elif rid in self.queue.pending_rids():
+                raise UnknownRequestError(
+                    rid, "still pending — poll()/drain() until "
+                         "ready(rid) before taking")
+            elif isinstance(rid, int) and 0 <= rid < self.queue._next_rid:
+                raise UnknownRequestError(
+                    rid, "already taken (outcomes pop on first take — "
+                         "exactly-once semantics)")
+            else:
+                raise UnknownRequestError(
+                    rid, "never submitted to this server")
+        if isinstance(out, RequestError):
+            raise out
+        return out
 
     def ready(self, rid: int) -> bool:
+        """An outcome (response *or* structured failure) is available."""
         with self._lock:
             return rid in self._results
+
+    def failed(self, rid: int) -> bool:
+        """The available outcome is a :class:`RequestError` (peek —
+        does not consume it)."""
+        with self._lock:
+            return isinstance(self._results.get(rid), RequestError)
 
     def pending(self) -> int:
         with self._lock:
@@ -210,9 +434,20 @@ class PCNServer:
 
     def report(self, **extra) -> dict:
         """Serving report (see :meth:`ServeMetrics.report`) annotated
-        with the bucket config and compile count."""
+        with the bucket config, compile count, per-bucket breaker
+        states and the fault plan (if any)."""
         return self.metrics.report(
             buckets=[list(b.key) for b in self.buckets],
             timeout_ms=1e3 * self.timeout_s,
             compile_count=self.compile_count,
-            engine=repr(self.engine), **extra)
+            engine=repr(self.engine),
+            fallback=self.fallback,
+            breakers={bucket_str(k): br.snapshot()
+                      for k, br in self.breakers.items()},
+            fault_plan=(None if self.faults is None
+                        else self.faults.summary()),
+            **extra)
+
+
+def bucket_str(key) -> str:
+    return f"{key[0]}x{key[1]}"

@@ -13,12 +13,35 @@ reported as p50/p95/p99/mean/max in milliseconds, alongside throughput
 (requests per second over the active window) and padding waste — the
 fraction of padded (B, N) slots·rows that carried no real points, the
 price of quantizing ragged traffic onto pre-compiled bucket shapes.
+
+The failure-handling layer reports through the same object: a
+``faults`` section counts everything that did *not* go down the happy
+path — admission rejections (``rejected_invalid``,
+``shed_queue_full``), post-admission sheds (``deadline_miss``),
+dispatch outcomes (``degraded_dispatches`` answered by the fallback
+backend, ``failed_dispatches``/``failed_requests`` that surfaced a
+structured :class:`~repro.serve.errors.RequestError`) and breaker
+trips (``breaker_opened``) — so a chaos trace's report shows exactly
+how much traffic was refused, degraded or failed, per counter.
 """
 from __future__ import annotations
 
+from collections import Counter
 from dataclasses import dataclass, field
 
 import numpy as np
+
+#: the fault counters every report carries (schema-stable: all present,
+#: zero when nothing went wrong)
+FAULT_COUNTERS = (
+    "rejected_invalid",      # admission: ValidationError (bad payload)
+    "shed_queue_full",       # admission: QueueFullError (backpressure)
+    "deadline_miss",         # queued request shed past its deadline
+    "degraded_dispatches",   # answered by the fallback backend
+    "failed_dispatches",     # batch failed outright (primary + fallback)
+    "failed_requests",       # requests riding failed batches + sheds
+    "breaker_opened",        # circuit-breaker trips across buckets
+)
 
 PERCENTILES = (50, 95, 99)
 
@@ -67,26 +90,49 @@ class DispatchRecord:
     valid_points: int                # sum of true sizes
     partial: bool                    # fired by timeout below capacity
     service_s: float
+    degraded: bool = False           # answered by the fallback backend
 
 
 @dataclass
 class ServeMetrics:
-    """Accumulates request/dispatch records; ``report()`` renders the
-    benchmark-JSON section."""
+    """Accumulates request/dispatch records plus the fault counters;
+    ``report()`` renders the benchmark-JSON section."""
     requests: list = field(default_factory=list)
     dispatches: list = field(default_factory=list)
+    counters: Counter = field(default_factory=Counter)
 
-    def record_dispatch(self, bucket, reqs, t_dispatch, t_done):
+    def record_dispatch(self, bucket, reqs, t_dispatch, t_done, *,
+                        degraded: bool = False):
         """``reqs``: the fired requests as (rid, n_points, t_arrival)."""
         self.dispatches.append(DispatchRecord(
             bucket=bucket.key, n_requests=len(reqs),
             valid_points=sum(n for _, n, _ in reqs),
             partial=len(reqs) < bucket.batch,
-            service_s=t_done - t_dispatch))
+            service_s=t_done - t_dispatch, degraded=degraded))
+        if degraded:
+            self.counters["degraded_dispatches"] += 1
         for rid, n, t_arr in reqs:
             self.requests.append(RequestRecord(
                 rid=rid, bucket=bucket.key, n_points=n, t_arrival=t_arr,
                 t_dispatch=t_dispatch, t_done=t_done))
+
+    def record_rejection(self, counter: str):
+        """Admission-guard refusal (``rejected_invalid`` /
+        ``shed_queue_full``); the request never queued."""
+        self.counters[counter] += 1
+
+    def record_shed(self, n_requests: int = 1):
+        """Queued requests shed past their deadline."""
+        self.counters["deadline_miss"] += n_requests
+        self.counters["failed_requests"] += n_requests
+
+    def record_failed_dispatch(self, n_requests: int):
+        """A batch whose every request surfaced a RequestError."""
+        self.counters["failed_dispatches"] += 1
+        self.counters["failed_requests"] += n_requests
+
+    def record_breaker_opened(self):
+        self.counters["breaker_opened"] += 1
 
     def report(self, **extra) -> dict:
         """The serving report: latency percentiles (ms), throughput,
@@ -110,10 +156,12 @@ class ServeMetrics:
         for d in disp:
             k = f"{d.bucket[0]}x{d.bucket[1]}"
             pb = per_bucket.setdefault(
-                k, {"dispatches": 0, "partial": 0, "requests": 0})
+                k, {"dispatches": 0, "partial": 0, "requests": 0,
+                    "degraded": 0})
             pb["dispatches"] += 1
             pb["partial"] += int(d.partial)
             pb["requests"] += d.n_requests
+            pb["degraded"] += int(d.degraded)
         return {
             "requests": len(reqs),
             "dispatches": len(disp),
@@ -124,5 +172,7 @@ class ServeMetrics:
             "padding_waste_pct":
                 100.0 * (1.0 - valid / padded) if padded else 0.0,
             "per_bucket": per_bucket,
+            "faults": {k: int(self.counters.get(k, 0))
+                       for k in FAULT_COUNTERS},
             **extra,
         }

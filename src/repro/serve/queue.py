@@ -1,11 +1,27 @@
-"""Admission queue: where ragged traffic meets the bucket policy.
+"""Admission queue: where ragged traffic meets the bucket policy — and
+the admission *guard*: where poisoned or excess traffic is refused.
 
-``submit`` validates a request (non-empty, fits some bucket), assigns it
-the tightest bucket and a per-request PRNG key, stamps its arrival time
-and appends it to that bucket's FIFO lane.  Lanes keep arrival order
-*within* a bucket — the dispatcher drains each lane front-first, so no
-request can be overtaken by a later one of the same bucket (the
-starvation bound is the dispatch timeout, not queue discipline).
+``submit`` validates a request before anything else touches it —
+shape/dtype policy and NaN/Inf rejection via the engine's own
+:func:`~repro.engine.params.validate_cloud` (a non-finite cloud that
+reaches a jit-compiled kernel corrupts its whole batch silently, so it
+must be stopped here, with a structured
+:class:`~repro.serve.errors.ValidationError`), then assigns it the
+tightest bucket and a per-request PRNG key, stamps its arrival time
+(and deadline, if any) and appends it to that bucket's FIFO lane.
+
+Lanes are *bounded*: ``max_lane_depth`` caps how many requests a bucket
+may hold, and a submit into a full lane is shed with
+:class:`~repro.serve.errors.QueueFullError` (tail drop — the newest
+request is refused; everything already admitted keeps its FIFO place
+and its bounded queue wait).  An unbounded queue under overload is a
+latency time bomb: every admitted request would wait behind the whole
+backlog.
+
+Lanes keep arrival order *within* a bucket — the dispatcher drains each
+lane front-first, so no request can be overtaken by a later one of the
+same bucket (the starvation bound is the dispatch timeout, not queue
+discipline).
 
 The queue is host-side only: payloads stay numpy until the dispatcher
 pads a fired lane slice into a device :class:`~repro.engine.Batch`.
@@ -17,7 +33,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from .buckets import AdmissionError, Bucket, BucketSet
+from .buckets import Bucket, BucketSet
+from .errors import AdmissionError, QueueFullError, ValidationError
 
 
 def key_data(key) -> np.ndarray:
@@ -38,6 +55,7 @@ class Request:
     key: np.ndarray                  # (2,) uint32 raw PRNG key data
     bucket: Bucket
     t_arrival: float
+    t_deadline: float | None = None  # absolute clock value; None = none
 
     @property
     def n_points(self) -> int:
@@ -45,28 +63,70 @@ class Request:
 
 
 class AdmissionQueue:
-    """Per-bucket FIFO lanes with admission-time validation."""
+    """Per-bucket bounded FIFO lanes behind the admission guard.
 
-    def __init__(self, buckets: BucketSet):
+    ``max_lane_depth``: per-bucket queue bound (None = unbounded, the
+    pre-backpressure behavior).  ``validate``: run the payload guard on
+    every submit (on by default; the engine benchmark loops that
+    synthesize their own clouds may turn it off).
+    """
+
+    def __init__(self, buckets: BucketSet, *,
+                 max_lane_depth: int | None = None, validate: bool = True):
+        if max_lane_depth is not None and max_lane_depth < 1:
+            raise ValueError(
+                f"max_lane_depth must be >= 1 (or None), got "
+                f"{max_lane_depth}")
         self.buckets = buckets
+        self.max_lane_depth = max_lane_depth
+        self.validate = validate
         self._lanes: dict[tuple[int, int], deque[Request]] = {
             b.key: deque() for b in buckets}
         self._next_rid = 0
 
-    def submit(self, xyz, feats, key, now: float) -> Request:
-        """Admit one cloud; raises :class:`AdmissionError` if no bucket
-        fits.  Returns the enqueued :class:`Request`."""
-        xyz = np.asarray(xyz, np.float32)
+    def submit(self, xyz, feats, key, now: float,
+               t_deadline: float | None = None) -> Request:
+        """Admit one cloud; raises :class:`ValidationError` for a bad
+        payload, :class:`AdmissionError` if no bucket fits,
+        :class:`QueueFullError` if the bucket's lane is at its depth
+        bound.  Returns the enqueued :class:`Request`."""
+        from repro.engine.params import validate_cloud
+        xyz = np.asarray(xyz)
         if xyz.ndim != 2 or xyz.shape[-1] != 3:
-            raise AdmissionError(
+            raise ValidationError(
                 f"a request is one cloud, shape (N, 3); got {xyz.shape}")
+        if self.validate:
+            try:
+                xyz = validate_cloud(xyz, "xyz")
+            except ValueError as e:
+                raise ValidationError(str(e)) from e
+        else:
+            xyz = np.asarray(xyz, np.float32)
+        if feats is not None:
+            feats = np.asarray(feats)
+            if feats.ndim != 2 or feats.shape[0] != xyz.shape[0]:
+                raise ValidationError(
+                    f"feats must be (N, F) aligned with xyz "
+                    f"({xyz.shape[0]} points); got "
+                    f"{getattr(feats, 'shape', None)}")
+            if self.validate:
+                try:
+                    feats = validate_cloud(feats, "feats")
+                except ValueError as e:
+                    raise ValidationError(str(e)) from e
+            else:
+                feats = np.asarray(feats, np.float32)
         bucket = self.buckets.bucket_for(xyz.shape[0])
+        lane = self._lanes[bucket.key]
+        if (self.max_lane_depth is not None
+                and len(lane) >= self.max_lane_depth):
+            raise QueueFullError(bucket.key, len(lane))
         req = Request(
-            rid=self._next_rid, xyz=xyz,
-            feats=None if feats is None else np.asarray(feats, np.float32),
-            key=key_data(key), bucket=bucket, t_arrival=now)
+            rid=self._next_rid, xyz=xyz, feats=feats,
+            key=key_data(key), bucket=bucket, t_arrival=now,
+            t_deadline=t_deadline)
         self._next_rid += 1
-        self._lanes[bucket.key].append(req)
+        lane.append(req)
         return req
 
     def lane(self, bucket: Bucket) -> deque:
@@ -77,8 +137,28 @@ class AdmissionQueue:
         lane = self._lanes[bucket.key]
         return [lane.popleft() for _ in range(min(count, len(lane)))]
 
+    def shed_expired(self, now: float) -> list[Request]:
+        """Remove (from any lane position) every queued request whose
+        deadline has passed — device compute spent on them would be
+        wasted; the dispatcher records them as deadline misses.
+        Surviving requests keep their FIFO order."""
+        shed: list[Request] = []
+        for key, lane in self._lanes.items():
+            expired = {r.rid for r in lane
+                       if r.t_deadline is not None and now >= r.t_deadline}
+            if expired:
+                shed.extend(r for r in lane if r.rid in expired)
+                self._lanes[key] = deque(
+                    r for r in lane if r.rid not in expired)
+        return shed
+
     def pending(self) -> int:
         return sum(len(lane) for lane in self._lanes.values())
+
+    def pending_rids(self) -> set[int]:
+        """The rids currently queued (the dispatcher's unknown-rid
+        diagnosis needs to tell pending from never-submitted)."""
+        return {r.rid for lane in self._lanes.values() for r in lane}
 
     def oldest_wait(self, bucket: Bucket, now: float) -> float:
         """Age of the lane's front request (0.0 for an empty lane)."""

@@ -45,15 +45,25 @@ def synthetic_trace(*, n_requests: int, rate_hz: float, n_median: int,
     return [TraceEvent(float(t), int(n)) for t, n in zip(ts, sizes)]
 
 
-def replay(server, events, make_request, *, sleep=time.sleep) -> list[int]:
+def replay(server, events, make_request, *, sleep=time.sleep,
+           deadline_s: float | None = None) -> list[int | None]:
     """Replay ``events`` through ``server`` in real time.
 
     ``make_request(n_points, index) -> (xyz, feats)`` synthesizes each
-    cloud (feats may be None).  Returns the rids in submission order;
-    every one is answered (the trailing ``drain`` fires leftovers).
+    cloud (feats may be None).  Returns one entry per event, in
+    submission order: the rid, or ``None`` for a request the admission
+    guard shed (queue full / invalid payload — already counted in the
+    server's ``faults`` metrics; under chaos or overload, sheds are
+    part of the measurement, not an abort).  Every admitted rid has an
+    outcome after the trailing ``drain``.
+
+    ``deadline_s`` stamps each submitted request with that TTL (on top
+    of the server-level default when None).
     """
+    from .errors import AdmissionError
+
     t0 = server.clock()
-    rids: list[int] = []
+    rids: list[int | None] = []
     for i, ev in enumerate(events):
         while True:
             dt = (t0 + ev.t) - server.clock()
@@ -62,7 +72,11 @@ def replay(server, events, make_request, *, sleep=time.sleep) -> list[int]:
             server.poll()                    # timeouts fire while we wait
             sleep(min(dt, max(server.timeout_s / 4, 1e-4)))
         xyz, feats = make_request(ev.n_points, i)
-        rids.append(server.submit(xyz, feats))
+        try:
+            rids.append(server.submit(xyz, feats, deadline_s=deadline_s))
+        except AdmissionError:
+            rids.append(None)                # shed at the door; counted
+                                             # by the admission guard
         server.poll()
     server.drain()
     return rids

@@ -236,6 +236,50 @@ def bad_repo(tmp_path):
             idx = jax.random.choice(key, n, shape=(4,))  # analysis: allow A001
             return idx
         """)
+    _write(src, "repro/serve/__init__.py", "")
+    _write(src, "repro/serve/bad.py", """\
+        def fire_swallowing(fn, batch):          # A004: silently eaten
+            try:
+                return fn(batch)
+            except Exception:
+                pass
+
+
+        def fire_bare(fn, batch):                # A004: bare except
+            try:
+                return fn(batch)
+            except:
+                return None
+
+
+        def fire_converting(fn, batch, outcomes):  # ok: uses the error
+            try:
+                return fn(batch)
+            except Exception as e:
+                outcomes.append(repr(e))
+
+
+        def fire_reraising(fn, batch):           # ok: re-raises
+            try:
+                return fn(batch)
+            except Exception:
+                raise RuntimeError("dispatch failed")
+
+
+        def fire_narrow(fn, batch):              # ok: not a blanket catch
+            try:
+                return fn(batch)
+            except KeyError:
+                return None
+        """)
+    # the same swallow OUTSIDE repro.serve is not A004's business
+    _write(src, "repro/launch/swallow.py", """\
+        def best_effort(fn):
+            try:
+                return fn()
+            except Exception:
+                return None
+        """)
     return src
 
 
@@ -243,6 +287,14 @@ def test_forbidden_ast_patterns_flagged(bad_repo):
     fs = repo_findings(bad_repo)
     rules = _rules(fs, unsuppressed_only=True)
     assert "A001" in rules and "A002" in rules and "A003" in rules, fs
+    # A004: exactly the two swallowing handlers in repro.serve — the
+    # converting / re-raising / narrow ones and the swallow outside the
+    # serving layer stay clean
+    a004 = [f for f in active(fs) if f.rule == "A004"]
+    assert len(a004) == 2, a004
+    assert all("serve/bad.py" in f.where for f in a004)
+    assert any("bare except" in f.message for f in a004)
+    assert any("except Exception" in f.message for f in a004)
     # the justified suppression took effect...
     suppressed = [f for f in fs if f.suppressed]
     assert [f.rule for f in suppressed] == ["A001"]

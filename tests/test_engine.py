@@ -221,6 +221,33 @@ def test_batch_from_clouds_empty_cloud():
         Batch.from_clouds([])
 
 
+def test_validate_cloud_and_batch_validate():
+    """validate_cloud (the serving admission guard's seam) rejects
+    non-finite payloads and non-floating dtypes, coerces f64 -> f32;
+    Batch.make/from_clouds expose the same checks via validate=."""
+    from repro.engine import validate_cloud
+    good = np.asarray(make_cloud(np.random.default_rng(0), 32), np.float32)
+    np.testing.assert_array_equal(validate_cloud(good), good)
+    # f64 coerces rather than trusting an implicit downcast
+    assert validate_cloud(good.astype(np.float64)).dtype == np.float32
+    with pytest.raises(ValueError, match="not a floating point"):
+        validate_cloud(np.zeros((4, 3), np.int32))
+    bad = good.copy()
+    bad[5, 2] = np.nan
+    with pytest.raises(ValueError, match=r"non-finite.*row\(s\) \[5\]"):
+        validate_cloud(bad)
+    # the per-cloud index lands in the message (serving diagnosis)
+    with pytest.raises(ValueError, match=r"clouds\[1\]"):
+        Batch.from_clouds([good, bad], validate=True)
+    with pytest.raises(ValueError, match="non-finite"):
+        Batch.make(bad[None], validate=True)
+    # validate=True also coerces dtypes through the Batch constructors
+    b = Batch.from_clouds([good.astype(np.float64)], validate=True)
+    assert b.xyz.dtype == jnp.float32
+    # default stays permissive: trusted in-process callers skip the scan
+    Batch.make(bad[None])
+
+
 def test_apply_with_reports_batched():
     params = engine.init(KEY, SMALL_PN2)
     logits, rep = engine.apply_with_reports(

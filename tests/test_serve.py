@@ -1,7 +1,9 @@
 """Continuous-batching serving layer: bucket policy, admission, dispatch
 triggers (batch-full / timeout), exactly-once responses numerically equal
 to per-cloud apply_single, compile-once per bucket, and the metrics
-report."""
+report — plus the hardened-failure layer: the admission guard
+(validation, bounded lanes), fault isolation (fallback retry, circuit
+breaker), deadlines, and deterministic chaos via FaultPlan."""
 from dataclasses import replace
 
 import jax
@@ -14,8 +16,10 @@ from repro.analysis import compile_cache_size
 from repro.data.synthetic import make_cloud
 from repro.engine import BlockSpec
 from repro.models import pointnet2
-from repro.serve import (AdmissionError, Bucket, BucketSet, PCNServer,
-                         ServeMetrics, percentile_summary, synthetic_trace)
+from repro.serve import (AdmissionError, Bucket, BucketSet, FaultPlan,
+                         PCNServer, QueueFullError, RequestError,
+                         ServeMetrics, UnknownRequestError, ValidationError,
+                         percentile_summary, synthetic_trace)
 
 SPEC = replace(pointnet2.POINTNET2_C, blocks=(
     BlockSpec(24, 8, (16, 32)), BlockSpec(8, 8, (32, 48))))
@@ -235,11 +239,365 @@ def test_padding_waste_accounting():
     assert rep["padding_waste_pct"] == pytest.approx(
         100.0 * (1 - 150 / 400))
     assert rep["per_bucket"]["2x100"] == {
-        "dispatches": 2, "partial": 1, "requests": 3}
+        "dispatches": 2, "partial": 1, "requests": 3, "degraded": 0}
     # queue_wait of rid 2: dispatched at 1.0, arrived 0.5
     rec = [r for r in m.requests if r.rid == 2][0]
     assert rec.queue_wait_s == pytest.approx(0.5)
     assert rec.e2e_s == pytest.approx(1.5)
+
+
+# ---- admission guard (validation + backpressure) ----------------------------
+
+def test_validation_rejects_poisoned_clouds(eng_params):
+    """NaN/Inf payloads are refused at the door with a structured
+    ValidationError (and counted), long before any compiled kernel."""
+    eng, params = eng_params
+    srv = PCNServer(eng, params, BUCKETS, timeout_s=1.0, clock=FakeClock())
+    bad = _cloud(50)
+    bad[3, 1] = np.nan
+    with pytest.raises(ValidationError, match="non-finite"):
+        srv.submit(bad)
+    inf = _cloud(50)
+    inf[0, 0] = np.inf
+    with pytest.raises(ValidationError, match="non-finite"):
+        srv.submit(inf)
+    with pytest.raises(ValidationError, match="not a floating point"):
+        srv.submit(np.zeros((10, 3), np.int32))
+    assert srv.pending() == 0
+    assert srv.report()["faults"]["rejected_invalid"] == 3
+
+
+def test_validation_coerces_float64(eng_params):
+    """float64 clouds are coerced (not trusted to implicit downcasts)
+    and serve normally."""
+    eng, params = eng_params
+    clock = FakeClock()
+    srv = PCNServer(eng, params, BUCKETS, timeout_s=0.1, clock=clock)
+    key = jax.random.PRNGKey(5)
+    rid = srv.submit(_cloud(40, 3).astype(np.float64), key=key)
+    clock.advance(1.0)
+    srv.poll()
+    ref, _ = eng.apply_single(params, jnp.asarray(_cloud(40, 3)), key=key)
+    np.testing.assert_allclose(srv.take(rid), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_bounded_lane_sheds_on_full_fifo(eng_params):
+    """A lane at max_lane_depth sheds the NEWEST submit (tail drop)
+    with QueueFullError; admitted requests keep their FIFO order and
+    are all answered."""
+    eng, params = eng_params
+    clock = FakeClock()
+    srv = PCNServer(eng, params, BucketSet.make([64], batch=4),
+                    timeout_s=100.0, clock=clock, max_lane_depth=2)
+    r0 = srv.submit(_cloud(30, 0))
+    r1 = srv.submit(_cloud(30, 1))
+    with pytest.raises(QueueFullError, match="lane is full"):
+        srv.submit(_cloud(30, 2))
+    with pytest.raises(QueueFullError):
+        srv.submit(_cloud(30, 3))
+    assert srv.pending() == 2            # shed requests never queued
+    assert srv.drain() == [r0, r1]       # FIFO preserved for admitted
+    assert srv.ready(r0) and srv.ready(r1)
+    rep = srv.report()
+    assert rep["faults"]["shed_queue_full"] == 2
+    assert rep["requests"] == 2          # latency stats: admitted only
+
+
+# ---- exactly-once bookkeeping (typed) ---------------------------------------
+
+def test_take_unknown_rid_diagnosis(eng_params):
+    """take() raises UnknownRequestError (a KeyError) with a hint that
+    distinguishes pending / already-taken / never-submitted."""
+    eng, params = eng_params
+    clock = FakeClock()
+    srv = PCNServer(eng, params, BUCKETS, timeout_s=10.0, clock=clock)
+    with pytest.raises(UnknownRequestError, match="never submitted"):
+        srv.take(123)
+    rid = srv.submit(_cloud(40, 1))
+    with pytest.raises(KeyError):        # taxonomy keeps KeyError compat
+        srv.take(rid)
+    with pytest.raises(UnknownRequestError, match="still pending"):
+        srv.take(rid)
+    srv.drain()
+    srv.take(rid)
+    with pytest.raises(UnknownRequestError, match="already taken"):
+        srv.take(rid)
+
+
+# ---- fault isolation --------------------------------------------------------
+
+def test_injected_failure_isolated_and_degraded(eng_params):
+    """Chaos plan fails one batch mid-trace: untouched batches answer
+    from the primary, the failed batch is retried exactly once on the
+    fallback backend, and EVERY request still equals apply_single."""
+    eng, params = eng_params
+    clock = FakeClock()
+    plan = FaultPlan.parse("fail@1")
+    srv = PCNServer(eng, params, BUCKETS, timeout_s=0.1, clock=clock,
+                    faults=plan)
+    keys = [jax.random.PRNGKey(100 + i) for i in range(6)]
+    clouds = [_cloud(60, 30 + i) for i in range(6)]
+    rids = [srv.submit(c, key=k) for c, k in zip(clouds, keys)]
+    assert srv.pending() == 0            # three full batches, all fired
+    assert plan.injected == [(1, "fail")]
+    for rid, c, k in zip(rids, clouds, keys):
+        ref, _ = eng.apply_single(params, jnp.asarray(c), key=k)
+        np.testing.assert_allclose(srv.take(rid), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+    rep = srv.report()
+    assert rep["faults"]["degraded_dispatches"] == 1
+    assert rep["faults"]["failed_requests"] == 0
+    assert rep["per_bucket"]["2x64"]["degraded"] == 1
+
+
+def test_nan_poisoned_output_detected(eng_params):
+    """A backend returning NaNs (nothing raised!) is a fault: detected,
+    retried on the fallback, answered correctly."""
+    eng, params = eng_params
+    clock = FakeClock()
+    srv = PCNServer(eng, params, BUCKETS, timeout_s=0.1, clock=clock,
+                    faults=FaultPlan.parse("nan@0"))
+    key = jax.random.PRNGKey(7)
+    rid0 = srv.submit(_cloud(50, 40), key=key)
+    srv.submit(_cloud(50, 41))           # fills the batch -> fires
+    got = srv.take(rid0)
+    assert np.isfinite(got).all()
+    ref, _ = eng.apply_single(params, jnp.asarray(_cloud(50, 40)), key=key)
+    np.testing.assert_allclose(got, np.asarray(ref), rtol=1e-5, atol=1e-5)
+    assert srv.report()["faults"]["degraded_dispatches"] == 1
+
+
+def test_failure_without_fallback_surfaces_request_error(eng_params):
+    """fallback=None: the failed batch's requests surface a structured
+    RequestError via take (never forever-pending), other batches are
+    untouched."""
+    eng, params = eng_params
+    clock = FakeClock()
+    srv = PCNServer(eng, params, BUCKETS, timeout_s=0.1, clock=clock,
+                    faults=FaultPlan.parse("fail@0"), fallback=None)
+    r0 = srv.submit(_cloud(50, 0))
+    r1 = srv.submit(_cloud(50, 1))       # same batch: fails with r0
+    r2 = srv.submit(_cloud(50, 2))
+    r3 = srv.submit(_cloud(50, 3))       # second batch: healthy
+    assert srv.pending() == 0
+    assert srv.ready(r0) and srv.failed(r0) and srv.failed(r1)
+    assert not srv.failed(r2) and not srv.failed(r3)
+    with pytest.raises(RequestError, match="engine") as ei:
+        srv.take(r0)
+    assert ei.value.rid == r0 and ei.value.bucket == (2, 64)
+    assert "InjectedFault" in ei.value.cause
+    assert not ei.value.degraded_attempted
+    with pytest.raises(RequestError):
+        srv.take(r1)
+    # failures pop exactly once, like responses
+    with pytest.raises(UnknownRequestError, match="already taken"):
+        srv.take(r0)
+    assert np.isfinite(srv.take(r2)).all()
+    rep = srv.report()
+    assert rep["faults"]["failed_dispatches"] == 1
+    assert rep["faults"]["failed_requests"] == 2
+
+
+def test_breaker_opens_and_half_open_probe(eng_params):
+    """Deterministic breaker walk under a FakeClock: K consecutive
+    primary failures open the bucket's breaker (dispatches then skip
+    the primary entirely — degraded, and the fault plan's step counter
+    proves the primary was never called); after the cooldown a
+    half-open probe finds the primary healthy and closes it."""
+    eng, params = eng_params
+    clock = FakeClock()
+    plan = FaultPlan.parse("fail@0,fail@1")
+    srv = PCNServer(eng, params, BucketSet.make([64], batch=2),
+                    timeout_s=0.1, clock=clock, faults=plan,
+                    breaker_fail_streak=2, breaker_cooldown_s=5.0)
+    br = srv.breakers[(2, 64)]
+    for i in range(4):                   # two batches, both injected
+        srv.submit(_cloud(30, i))
+    assert br.state == "open" and br.open_count == 1
+    assert srv.report()["faults"]["breaker_opened"] == 1
+    # open: dispatch goes straight to the fallback; primary untouched
+    step_before = plan.step
+    srv.submit(_cloud(30, 8))
+    srv.submit(_cloud(30, 9))
+    assert plan.step == step_before
+    assert br.state == "open"
+    # cooldown elapses -> half-open probe on the (now healthy) primary
+    clock.advance(6.0)
+    srv.submit(_cloud(30, 10))
+    srv.submit(_cloud(30, 11))
+    assert plan.step == step_before + 1  # the probe ran the primary
+    assert br.state == "closed" and br.failures == 0
+    # every request got a real answer throughout
+    for rid in range(8):
+        assert np.isfinite(srv.take(rid)).all()
+    assert srv.report()["faults"]["degraded_dispatches"] == 3
+
+
+def test_breaker_reopens_on_failed_probe(eng_params):
+    """A half-open probe that fails re-opens the breaker (fresh
+    cooldown) instead of closing it."""
+    eng, params = eng_params
+    clock = FakeClock()
+    plan = FaultPlan.parse("fail@0,fail@1,fail@2")
+    srv = PCNServer(eng, params, BucketSet.make([64], batch=2),
+                    timeout_s=0.1, clock=clock, faults=plan,
+                    breaker_fail_streak=2, breaker_cooldown_s=5.0)
+    br = srv.breakers[(2, 64)]
+    for i in range(4):
+        srv.submit(_cloud(30, i))
+    assert br.state == "open"
+    clock.advance(6.0)
+    srv.submit(_cloud(30, 5))
+    srv.submit(_cloud(30, 6))            # probe consumes fail@2 -> reopen
+    assert br.state == "open" and br.open_count == 2
+
+
+def test_circuit_open_without_fallback_fails_fast(eng_params):
+    """Open breaker + no fallback: requests fail fast with
+    reason='circuit_open' — no engine call, no spinning."""
+    eng, params = eng_params
+    clock = FakeClock()
+    plan = FaultPlan.parse("fail@0")
+    srv = PCNServer(eng, params, BucketSet.make([64], batch=2),
+                    timeout_s=0.1, clock=clock, faults=plan,
+                    fallback=None, breaker_fail_streak=1,
+                    breaker_cooldown_s=100.0)
+    srv.submit(_cloud(30, 0))
+    srv.submit(_cloud(30, 1))            # breaker trips
+    step_before = plan.step
+    r2 = srv.submit(_cloud(30, 2))
+    srv.submit(_cloud(30, 3))
+    assert plan.step == step_before      # primary never called
+    with pytest.raises(RequestError, match="circuit_open"):
+        srv.take(r2)
+
+
+# ---- deadlines --------------------------------------------------------------
+
+def test_deadline_shed_at_poll(eng_params):
+    """An expired queued request is shed at poll time — RequestError
+    with reason='deadline', deadline_miss counted, no device compute
+    spent — while unexpired queued requests still dispatch and answer."""
+    eng, params = eng_params
+    clock = FakeClock()
+    srv = PCNServer(eng, params, BUCKETS, timeout_s=100.0, clock=clock,
+                    deadline_s=1.0)
+    r0 = srv.submit(_cloud(40, 0))                   # default 1s deadline
+    clock.advance(0.5)
+    r1 = srv.submit(_cloud(90, 1), deadline_s=10.0)  # other bucket, own TTL
+    clock.advance(1.0)                   # r0 expired, r1 alive
+    resolved = srv.poll()
+    assert r0 in resolved
+    with pytest.raises(RequestError, match="deadline"):
+        srv.take(r0)
+    assert srv.pending() == 1            # r1 still queued, not shed
+    srv.drain()
+    assert np.isfinite(srv.take(r1)).all()
+    rep = srv.report()
+    assert rep["faults"]["deadline_miss"] == 1
+    assert rep["requests"] == 1          # only r1 reached a dispatch
+
+
+def test_drain_sheds_expired_and_clears_pending(eng_params):
+    eng, params = eng_params
+    clock = FakeClock()
+    srv = PCNServer(eng, params, BUCKETS, timeout_s=100.0, clock=clock)
+    srv.submit(_cloud(40, 0), deadline_s=0.5)
+    srv.submit(_cloud(90, 1), deadline_s=0.5)        # other bucket
+    clock.advance(1.0)
+    srv.drain()
+    assert srv.pending() == 0
+    assert srv.report()["faults"]["deadline_miss"] == 2
+
+
+# ---- chaos trace: the acceptance criterion ----------------------------------
+
+def test_chaos_trace_acceptance(eng_params):
+    """The ISSUE-8 acceptance walk: under a seeded FaultPlan that fails
+    >= 1 batch mid-trace, every non-injected request is answered equal
+    to apply_single (<= 1e-5), injected ones surface structured errors,
+    nothing deadlocks or leaks (pending() == 0 after drain), and the
+    report records the shed/deadline/degraded counters."""
+    eng, params = eng_params
+    clock = FakeClock()
+    plan = FaultPlan.bernoulli(seed=3, n_steps=8, p_fail=0.3)
+    assert plan.events                    # the seed does schedule faults
+    srv = PCNServer(eng, params, BUCKETS, timeout_s=0.1, clock=clock,
+                    faults=plan, fallback=None)
+    sizes = (60, 90, 33, 64, 72, 96, 17, 50)
+    clouds = [_cloud(n, seed=60 + i) for i, n in enumerate(sizes)]
+    keys = [jax.random.PRNGKey(200 + i) for i in range(len(sizes))]
+    rids = []
+    for c, k in zip(clouds, keys):
+        rids.append(srv.submit(c, key=k))
+        clock.advance(0.2)
+        srv.poll()
+    srv.drain()
+    assert srv.pending() == 0            # no leaked rids
+    n_failed = 0
+    for rid, c, k in zip(rids, clouds, keys):
+        assert srv.ready(rid)            # every request has an outcome
+        if srv.failed(rid):
+            n_failed += 1
+            with pytest.raises(RequestError) as ei:
+                srv.take(rid)
+            assert ei.value.rid == rid and ei.value.reason == "engine"
+        else:
+            ref, _ = eng.apply_single(params, jnp.asarray(c), key=k)
+            np.testing.assert_allclose(srv.take(rid), np.asarray(ref),
+                                       rtol=1e-5, atol=1e-5)
+    rep = srv.report()
+    assert n_failed >= 1                 # >= 1 batch really failed
+    assert rep["faults"]["failed_requests"] == n_failed
+    assert set(serve.FAULT_COUNTERS) <= set(rep["faults"])
+    assert rep["fault_plan"]["injected"]  # the plan is in the report
+    # rerunning the same seeded plan injects at the same steps
+    plan2 = FaultPlan.bernoulli(seed=3, n_steps=8, p_fail=0.3)
+    assert plan2.events == plan.events
+
+
+def test_chaos_trace_with_fallback_answers_everything(eng_params):
+    """Same chaos, fallback enabled: every request is answered exactly
+    (the degraded path is numerically the reference backend)."""
+    eng, params = eng_params
+    clock = FakeClock()
+    plan = FaultPlan.bernoulli(seed=3, n_steps=8, p_fail=0.3)
+    srv = PCNServer(eng, params, BUCKETS, timeout_s=0.1, clock=clock,
+                    faults=plan)
+    sizes = (60, 90, 33, 64, 72, 96, 17, 50)
+    clouds = [_cloud(n, seed=60 + i) for i, n in enumerate(sizes)]
+    keys = [jax.random.PRNGKey(200 + i) for i in range(len(sizes))]
+    rids = []
+    for c, k in zip(clouds, keys):
+        rids.append(srv.submit(c, key=k))
+        clock.advance(0.2)
+        srv.poll()
+    srv.drain()
+    assert srv.pending() == 0
+    for rid, c, k in zip(rids, clouds, keys):
+        ref, _ = eng.apply_single(params, jnp.asarray(c), key=k)
+        np.testing.assert_allclose(srv.take(rid), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+    rep = srv.report()
+    assert rep["faults"]["degraded_dispatches"] >= 1
+    assert rep["faults"]["failed_requests"] == 0
+
+
+def test_fault_plan_parse_and_slow():
+    plan = FaultPlan.parse("fail@1,nan@3,slow@5:80")
+    assert plan.events[1].kind == "fail"
+    assert plan.events[3].kind == "nan"
+    assert plan.events[5] == serve.Fault("slow", 80.0)
+    with pytest.raises(ValueError, match="bad fault item"):
+        FaultPlan.parse("explode@1")
+    with pytest.raises(ValueError, match="duplicate fault step"):
+        FaultPlan.parse("fail@1,nan@1")
+    # slow: injected stall goes through the injectable sleep
+    stalls = []
+    plan = FaultPlan.parse("slow@0:40", sleep=stalls.append)
+    out = plan.wrap(lambda b: np.ones(3))(None)
+    assert np.all(out == 1.0) and stalls == [0.04]
 
 
 def test_synthetic_trace_shape():
