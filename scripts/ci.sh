@@ -128,7 +128,41 @@ print(f"engine smoke ok: {len(rows)} rows "
       f"{len(ragged)} ragged)")
 EOF
 
-echo "== fc_kernel A/B benchmark (vmap-of-kernels vs batched grid) =="
+echo "== tile-plan autotune smoke (tiny budget, 1 model x 1 shape) =="
+# a from-scratch tune run: the cache file must be written, every
+# promoted winner must carry provenance "autotuned" and re-pass the
+# K001-K005 kernel lint at its own budget (what repro.analysis --strict
+# holds traced calls to).  The workflow uploads results/tile_plans.json
+# with the other benchmark artifacts.
+rm -f results/tile_plans.json
+python -m repro.launch.autotune --models pointnet2_c --reduced \
+    --points 96 --batches 2 --budget 4 --reps 2 \
+    --out results/tile_plans.json
+python - <<'EOF'
+import json
+from repro.kernels import plans
+from repro.launch import autotune
+
+raw = json.load(open("results/tile_plans.json"))
+assert raw["version"] == plans.VERSION, raw
+assert raw["plans"], "autotune smoke promoted no plans"
+for key, entry in raw["plans"].items():
+    kernel, dimstr = key.split("|", 1)
+    assert entry["provenance"] == "autotuned", (key, entry)
+    assert plans.entry_error(kernel, entry) is None, (key, entry)
+    dims = dict(kv.split("=") for kv in dimstr.split(","))
+    dims = {k: int(v) for k, v in dims.items()}
+    knobs = {"tile": entry[plans.TILE_FIELD[kernel]],
+             "lanes": entry["lanes"],
+             "vmem_budget_mb": entry["vmem_budget_mb"],
+             "dimension_semantics": tuple(entry["dimension_semantics"])}
+    findings = autotune.lint_knobs(kernel, dims, knobs)
+    assert not findings, (key, [f.rule for f in findings])
+print(f"autotune smoke ok: {len(raw['plans'])} plans promoted, all "
+      f"provenance=autotuned and K001-K005 clean")
+EOF
+
+echo "== fc_kernel A/B benchmark (vmap vs heuristic vs autotuned) =="
 python -m benchmarks.run --quick --only fc_kernel \
     --out results/fc_kernel_smoke.json
 python - <<'EOF'
@@ -143,8 +177,21 @@ kern = [r for r in batched if "tile" in r]
 assert kern, "fc_kernel smoke missing kernel-level tile plans"
 for r in kern:
     assert "grid" in r and len(r["grid"]) == 2, r
+    # provenance is observed from the plan the trace actually resolved
+    expect = "autotuned" if "autotuned" in r["name"] else "heuristic"
+    assert r["tile_provenance"] == expect, r
+tuned = [r for r in kern if r["tile_provenance"] == "autotuned"]
+assert tuned, "fc_kernel smoke has no autotuned rows"
+curve = [r for r in rows if "speedup_curve" in r["name"]]
+assert curve and all(r["curve"] for r in curve), \
+    "fc_kernel smoke missing the speedup-vs-B curve rows"
+eng_tuned = [r for r in rows if r.get("backend") == "pallas_autotuned"]
+assert eng_tuned and all(r["tile_provenance"] == ["autotuned"]
+                         for r in eng_tuned), eng_tuned
 print(f"fc_kernel smoke ok: {len(rows)} rows "
-      f"({len(vmap)} vmap vs {len(batched)} batched-grid)")
+      f"({len(vmap)} vmap vs {len(batched)} batched-grid, "
+      f"{len(tuned)} autotuned kernel rows, "
+      f"{len(eng_tuned)} autotuned engine rows)")
 EOF
 
 echo "== serve-trace smoke (continuous batching, ragged trace) =="

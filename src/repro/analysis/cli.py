@@ -42,12 +42,21 @@ def _src_suppressions(src_root: str | None):
 
 def analyze_targets(target_list, suppressions=()):
     """Trace each target and run the jaxpr rule families (K*, M001,
-    R001–R003).  Returns ``(findings, kernel_inventory)``."""
+    R001–R003).  Returns ``(findings, kernel_inventory)``.
+
+    Targets trace under ``plans.bypass()``: the analysis contract (and
+    its shape-specific inline suppressions, e.g. the lane-padded M001
+    allows in ``targets.py``) is pinned to the *heuristic* tile plans,
+    independent of whatever ``results/tile_plans.json`` a host happens
+    to carry.  Autotuned store entries are linted separately, at
+    promotion time, by ``repro.launch.autotune``."""
+    from repro.kernels import plans
     findings: list[Finding] = []
     inventory: list[dict] = []
     for t in target_list:
         try:
-            closed = t.trace()
+            with plans.bypass():
+                closed = t.trace()
         except Exception as e:  # a target that cannot trace is itself a defect
             findings.append(Finding(
                 "K003", f"target failed to trace: {type(e).__name__}: {e}",

@@ -73,7 +73,8 @@ class EngineCtx:
     kernel_kw: tuple = ()         # sorted (key, value) pairs — hashable
     mesh: object = None           # jax.sharding.Mesh | None (hashable)
 
-    KERNEL_KW_KEYS = frozenset({"ts", "th", "vmem_budget_mb"})
+    KERNEL_KW_KEYS = frozenset({"ts", "th", "vmem_budget_mb", "lanes",
+                                "dimension_semantics"})
 
     @staticmethod
     def make(mode="lpcn", fc_backend="reference", isl_kw=None,
@@ -85,6 +86,16 @@ class EngineCtx:
                 f"unknown kernel_kw key(s) {sorted(unknown)}; valid knobs: "
                 f"{sorted(EngineCtx.KERNEL_KW_KEYS)} (a typo here would "
                 f"silently fall back to the VMEM-budget heuristic)")
+        sem = kernel_kw.get("dimension_semantics")
+        if sem is not None:
+            # JSON/CLI callers pass a list; the ctx must stay hashable and
+            # the values must be real Mosaic semantics (K005 territory)
+            sem = tuple(sem)
+            if len(sem) != 2 or not set(sem) <= {"parallel", "arbitrary"}:
+                raise ValueError(
+                    f"dimension_semantics must be a pair drawn from "
+                    f"('parallel', 'arbitrary'); got {sem!r}")
+            kernel_kw["dimension_semantics"] = sem
         if mesh is not None and "data" not in mesh.axis_names:
             raise ValueError(
                 f"engine meshes shard the batch along a 'data' axis; got "

@@ -24,9 +24,11 @@ Two registry entries share these lowerings:
   ``reuse_batched`` entries run the natively batched kernels (grid
   ``(B, ⌈S/TS⌉)`` / ``(B, ⌈H/TH⌉)``, weight-resident, lane-aligned) so
   ONE pallas_call per FC call site serves the whole cloud stack.  Tile
-  sizes come from a VMEM-budget heuristic, overridable through the
-  ``kernel_kw`` knob (``{"ts", "th", "vmem_budget_mb"}``) threaded down
-  from ``engine.apply`` / ``PCNEngine``.
+  plans resolve per shape: an explicit ``kernel_kw`` knob (``{"ts",
+  "th", "vmem_budget_mb", "lanes", "dimension_semantics"}``, threaded
+  down from ``engine.apply`` / ``PCNEngine``) wins, else an autotuned
+  plan from the ``repro.kernels.plans`` store (cache hit), else the
+  VMEM-budget heuristic (see ``repro.launch.autotune``).
 * ``"pallas_vmap"`` — the pre-batching behavior (per-cloud kernels under
   ``jax.vmap``), kept registered for A/B measurement in
   ``benchmarks/run.py``.
@@ -162,7 +164,8 @@ def _dense_pallas_batched(mlp: MLP, kind, xyz, feats, nbr_idx, centers_xyz,
     )(xyz, feats, nbr_idx, centers_xyz, center_feats, nbr_valid)
     return gather_mlp_batched(raw, ctr, w1, b1, w2, b2, mask=nbr_valid,
                               **_kernel_kw(kernel_kw, "ts",
-                                           "vmem_budget_mb"))
+                                           "vmem_budget_mb", "lanes",
+                                           "dimension_semantics"))
 
 
 def _reuse_pallas_batched(mlp: MLP, pool_in, slot, comp, live=None,
@@ -173,7 +176,8 @@ def _reuse_pallas_batched(mlp: MLP, pool_in, slot, comp, live=None,
     x = pool_in if prologue is None else prologue(pool_in)
     return hub_reuse_batched(x, slot, comp, w1, b1, w2, b2, live=live,
                              **_kernel_kw(kernel_kw, "th",
-                                          "vmem_budget_mb"))
+                                          "vmem_budget_mb", "lanes",
+                                          "dimension_semantics"))
 
 
 FC_BACKENDS.register("pallas", FCBackend(

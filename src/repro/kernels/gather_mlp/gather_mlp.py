@@ -36,15 +36,19 @@ e.g. TS=64, K=32, D'=H'=F'=128: 2·64·(32·129+3)·4 ≈ 2.1 MB streamed
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import plans
 from repro.kernels.tiling import (DEFAULT_VMEM_BUDGET_MB, F32_BYTES, LANE,
                                   gather_mlp_footprint_elems, largest_tile,
-                                  pad_axis, pad_lanes, round_up)
+                                  pad_axis, round_up)
+
+DEFAULT_SEMANTICS = ("parallel", "arbitrary")
 
 BIG = 3.4e38
 
@@ -153,57 +157,102 @@ def _gather_mlp_batched_masked_kernel(raw_ref, ctr_ref, mask_ref, w1_ref,
 
 def gather_mlp_tile_plan(s: int, k: int, d: int, dc: int, hdim: int,
                          fout: int, ts: int | None = None,
-                         vmem_budget_mb: float = DEFAULT_VMEM_BUDGET_MB
-                         ) -> dict:
-    """Derive the batched kernel's tile plan: lane-padded dims and the
+                         vmem_budget_mb: float | None = None,
+                         lanes: int | None = None,
+                         dimension_semantics=None,
+                         b: int | None = None) -> dict:
+    """Resolve the batched kernel's tile plan: lane-padded dims and the
     subset tile ``TS`` that fills (but does not bust) the VMEM budget.
 
-    ``ts`` overrides the heuristic (the ``kernel_kw`` knob)."""
-    dp = round_up(d, LANE)
-    hp = round_up(hdim, LANE)
-    fp = round_up(fout, LANE)
-    budget = int(vmem_budget_mb * 2 ** 20)
+    Resolution order: explicit ``ts``/``lanes``/``dimension_semantics``
+    (the ``kernel_kw`` knobs → ``provenance="override"``) > a
+    ``repro.kernels.plans`` store hit for this ``(b, shape)`` cell
+    (``"autotuned"``) > the VMEM heuristic at 128 lanes
+    (``"heuristic"``).  A stale store entry — one whose recomputed
+    footprint busts its own budget — warns and degrades to the
+    heuristic instead of raising."""
+    dims = {"b": b, "s": s, "k": k, "d": d, "dc": dc, "h": hdim, "f": fout}
 
-    def fits(t: int) -> bool:
-        return F32_BYTES * gather_mlp_footprint_elems(
-            t, k, dp, dc, hp, fp) <= budget
+    def build(ts, lanes, vmem_budget_mb, sem, provenance):
+        lanes = LANE if lanes is None else int(lanes)
+        mb = (DEFAULT_VMEM_BUDGET_MB if vmem_budget_mb is None
+              else float(vmem_budget_mb))
+        sem = DEFAULT_SEMANTICS if sem is None else tuple(sem)
+        dp = round_up(d, lanes)
+        hp = round_up(hdim, lanes)
+        fp = round_up(fout, lanes)
+        budget = int(mb * 2 ** 20)
 
-    provenance = "heuristic" if ts is None else "override"
-    if ts is None:
-        ts = largest_tile(s, fits)
-    ts = max(1, min(ts, s))
-    return {"ts": ts, "d_pad": dp, "h_pad": hp, "f_pad": fp,
-            "grid_tiles": pl.cdiv(s, ts),
-            "vmem_budget_mb": vmem_budget_mb,
-            "footprint_bytes": F32_BYTES * gather_mlp_footprint_elems(
-                ts, k, dp, dc, hp, fp),
-            "provenance": provenance}
+        def fits(t: int) -> bool:
+            return F32_BYTES * gather_mlp_footprint_elems(
+                t, k, dp, dc, hp, fp) <= budget
+
+        if ts is None:
+            ts = largest_tile(s, fits)
+        ts = max(1, min(int(ts), s))
+        return {"ts": ts, "lanes": lanes, "d_pad": dp, "h_pad": hp,
+                "f_pad": fp, "grid_tiles": pl.cdiv(s, ts),
+                "vmem_budget_mb": mb,
+                "dimension_semantics": sem,
+                "footprint_bytes": F32_BYTES * gather_mlp_footprint_elems(
+                    ts, k, dp, dc, hp, fp),
+                "provenance": provenance}
+
+    overridden = (ts is not None or lanes is not None
+                  or dimension_semantics is not None)
+    hit = None
+    if not overridden and vmem_budget_mb is None and b is not None:
+        hit = plans.lookup("gather_mlp", **dims)
+    if hit is not None:
+        plan = build(hit["ts"], hit.get("lanes"), hit.get("vmem_budget_mb"),
+                     hit.get("dimension_semantics"), "autotuned")
+        if plan["footprint_bytes"] > int(plan["vmem_budget_mb"] * 2 ** 20):
+            warnings.warn(
+                f"stale tile plan for {plans.plan_key('gather_mlp', dims)}: "
+                f"footprint {plan['footprint_bytes']} B busts its "
+                f"{plan['vmem_budget_mb']} MB budget; using the heuristic "
+                f"(re-run python -m repro.launch.autotune)",
+                RuntimeWarning, stacklevel=2)
+            plan = build(None, None, None, None, "heuristic")
+    else:
+        plan = build(ts, lanes, vmem_budget_mb, dimension_semantics,
+                     "override" if overridden else "heuristic")
+    plans.note_plan("gather_mlp", dims, plan)
+    return plan
 
 
 def gather_mlp_batched_pallas(raw: jnp.ndarray, centers: jnp.ndarray,
                               w1, b1, w2, b2, ts: int | None = None,
-                              vmem_budget_mb: float = DEFAULT_VMEM_BUDGET_MB,
+                              vmem_budget_mb: float | None = None,
+                              lanes: int | None = None,
+                              dimension_semantics=None,
                               interpret: bool = False, mask=None):
     """Natively batched gather-MLP: raw (B, S, K, D), centers (B, S, Dc),
     optional mask (B, S, K).  -> (B, S, F_out) in ONE pallas_call with
     grid (B, ⌈S/TS⌉).
 
     Weights ride constant index maps (VMEM-resident across the grid);
-    D/H/F are lane-padded to 128-multiples (sliced back on return);
-    ``ts`` / ``vmem_budget_mb`` are the ``kernel_kw`` knobs."""
+    D/H/F are zero-padded to ``lanes``-multiples (sliced back on
+    return); ``ts`` / ``vmem_budget_mb`` / ``lanes`` /
+    ``dimension_semantics`` are the ``kernel_kw`` knobs — left None,
+    the plan comes from the autotuned store (on a hit) or the VMEM
+    heuristic (see :func:`gather_mlp_tile_plan`)."""
     b, s, k, d = raw.shape
     dc = centers.shape[2]
     hdim, fout = w1.shape[1], w2.shape[1]
     plan = gather_mlp_tile_plan(s, k, d, dc, hdim, fout, ts=ts,
-                                vmem_budget_mb=vmem_budget_mb)
+                                vmem_budget_mb=vmem_budget_mb,
+                                lanes=lanes,
+                                dimension_semantics=dimension_semantics,
+                                b=b)
     ts = plan["ts"]
     dp, hp, fp = plan["d_pad"], plan["h_pad"], plan["f_pad"]
 
-    raw = pad_lanes(raw)
-    w1 = pad_axis(pad_lanes(w1), 0, dp)
-    b1 = pad_lanes(b1)
-    w2 = pad_axis(pad_lanes(w2), 0, hp)
-    b2 = pad_lanes(b2)
+    raw = pad_axis(raw, 3, dp)
+    w1 = pad_axis(pad_axis(w1, 1, hp), 0, dp)
+    b1 = pad_axis(b1, 0, hp)
+    w2 = pad_axis(pad_axis(w2, 1, fp), 0, hp)
+    b2 = pad_axis(b2, 0, fp)
 
     weight_specs = [
         pl.BlockSpec((dp, hp), lambda bi, i: (0, 0)),
@@ -232,7 +281,7 @@ def gather_mlp_batched_pallas(raw: jnp.ndarray, centers: jnp.ndarray,
         out_specs=pl.BlockSpec((1, ts, fp), lambda bi, i: (bi, i, 0)),
         out_shape=jax.ShapeDtypeStruct((b, s, fp), raw.dtype),
         compiler_params=pltpu.TPUCompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
+            dimension_semantics=tuple(plan["dimension_semantics"])),
         interpret=interpret,
     )(*args)
     return out[..., :fout]

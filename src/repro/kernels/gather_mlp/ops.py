@@ -5,6 +5,7 @@ from functools import partial
 
 import jax
 
+from repro.kernels import plans
 from .gather_mlp import (gather_mlp_batched_pallas, gather_mlp_pallas,
                          gather_mlp_tile_plan)
 from .ref import gather_mlp_ref
@@ -22,20 +23,32 @@ def gather_mlp(raw, centers, w1, b1, w2, b2, ts: int = 8,
                              interpret=interpret, mask=mask)
 
 
-@partial(jax.jit, static_argnames=("ts", "vmem_budget_mb", "interpret"))
+@partial(jax.jit, static_argnames=("ts", "vmem_budget_mb", "lanes",
+                                   "dimension_semantics", "interpret"))
 def gather_mlp_batched(raw, centers, w1, b1, w2, b2, ts: int | None = None,
                        vmem_budget_mb: float | None = None,
+                       lanes: int | None = None,
+                       dimension_semantics: tuple | None = None,
                        interpret: bool | None = None, mask=None):
     """Natively batched gather-MLP: (B, S, K, D) → (B, S, F_out) through
     ONE pallas_call with grid (B, ⌈S/TS⌉); weights stay VMEM-resident
-    across the whole grid and D/H/F lanes are 128-aligned.  ``ts`` (None =
-    VMEM-budget heuristic) and ``vmem_budget_mb`` are the ``kernel_kw``
-    knobs; ``mask`` (B, S, K) as in :func:`gather_mlp`."""
+    across the whole grid and D/H/F lanes are padded to ``lanes``
+    multiples.  ``ts`` / ``vmem_budget_mb`` / ``lanes`` /
+    ``dimension_semantics`` are the ``kernel_kw`` knobs (all None = the
+    autotuned plan store, else the VMEM-budget heuristic); ``mask``
+    (B, S, K) as in :func:`gather_mlp`."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    kw = {} if vmem_budget_mb is None else {"vmem_budget_mb": vmem_budget_mb}
-    return gather_mlp_batched_pallas(raw, centers, w1, b1, w2, b2, ts=ts,
-                                     interpret=interpret, mask=mask, **kw)
+    return gather_mlp_batched_pallas(
+        raw, centers, w1, b1, w2, b2, ts=ts,
+        vmem_budget_mb=vmem_budget_mb, lanes=lanes,
+        dimension_semantics=dimension_semantics, interpret=interpret,
+        mask=mask)
+
+
+# the tile plan resolves inside the trace: a plan-store mutation (or a
+# plans.bypass() boundary) must drop traces made under the old plan
+plans.register_cache_clearer(gather_mlp_batched.clear_cache)
 
 
 __all__ = ["gather_mlp", "gather_mlp_batched", "gather_mlp_ref",

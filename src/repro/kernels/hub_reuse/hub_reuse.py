@@ -47,15 +47,19 @@ default).
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import plans
 from repro.kernels.tiling import (DEFAULT_VMEM_BUDGET_MB, F32_BYTES, LANE,
                                   hub_reuse_footprint_elems, largest_tile,
-                                  pad_axis, pad_lanes, round_up)
+                                  pad_axis, round_up)
+
+DEFAULT_SEMANTICS = ("parallel", "arbitrary")
 
 BIG = 3.4e38
 
@@ -221,58 +225,103 @@ def _hub_reuse_batched_masked_kernel(pool_ref, slot_ref, comp_ref, live_ref,
 
 def hub_reuse_tile_plan(hn: int, c: int, m: int, k: int, d: int, hdim: int,
                         fout: int, th: int | None = None,
-                        vmem_budget_mb: float = DEFAULT_VMEM_BUDGET_MB
-                        ) -> dict:
-    """Derive the batched kernel's tile plan: lane-padded dims and the
+                        vmem_budget_mb: float | None = None,
+                        lanes: int | None = None,
+                        dimension_semantics=None,
+                        b: int | None = None) -> dict:
+    """Resolve the batched kernel's tile plan: lane-padded dims and the
     island tile ``TH`` under the VMEM budget (the one-hot's TH² term is
-    the binding constraint).  ``th`` overrides the heuristic."""
-    dp = round_up(d, LANE)
-    hp = round_up(hdim, LANE)
-    fp = round_up(fout, LANE)
-    budget = int(vmem_budget_mb * 2 ** 20)
+    the binding constraint).
 
-    def fits(t: int) -> bool:
-        return F32_BYTES * hub_reuse_footprint_elems(
-            t, c, m, k, dp, hp, fp) <= budget
+    Resolution order mirrors :func:`gather_mlp_tile_plan`: explicit
+    ``th``/``lanes``/``dimension_semantics`` ("override") > a
+    ``repro.kernels.plans`` store hit for this ``(b, shape)`` cell
+    ("autotuned") > the VMEM heuristic at 128 lanes ("heuristic"); a
+    stale store entry warns and degrades to the heuristic."""
+    dims = {"b": b, "hn": hn, "c": c, "m": m, "k": k, "d": d, "h": hdim,
+            "f": fout}
 
-    provenance = "heuristic" if th is None else "override"
-    if th is None:
-        th = largest_tile(hn, fits, base=1)
-    th = max(1, min(th, hn))
-    return {"th": th, "d_pad": dp, "h_pad": hp, "f_pad": fp,
-            "grid_tiles": pl.cdiv(hn, th),
-            "vmem_budget_mb": vmem_budget_mb,
-            "footprint_bytes": F32_BYTES * hub_reuse_footprint_elems(
-                th, c, m, k, dp, hp, fp),
-            "provenance": provenance}
+    def build(th, lanes, vmem_budget_mb, sem, provenance):
+        lanes = LANE if lanes is None else int(lanes)
+        mb = (DEFAULT_VMEM_BUDGET_MB if vmem_budget_mb is None
+              else float(vmem_budget_mb))
+        sem = DEFAULT_SEMANTICS if sem is None else tuple(sem)
+        dp = round_up(d, lanes)
+        hp = round_up(hdim, lanes)
+        fp = round_up(fout, lanes)
+        budget = int(mb * 2 ** 20)
+
+        def fits(t: int) -> bool:
+            return F32_BYTES * hub_reuse_footprint_elems(
+                t, c, m, k, dp, hp, fp) <= budget
+
+        if th is None:
+            th = largest_tile(hn, fits, base=1)
+        th = max(1, min(int(th), hn))
+        return {"th": th, "lanes": lanes, "d_pad": dp, "h_pad": hp,
+                "f_pad": fp, "grid_tiles": pl.cdiv(hn, th),
+                "vmem_budget_mb": mb,
+                "dimension_semantics": sem,
+                "footprint_bytes": F32_BYTES * hub_reuse_footprint_elems(
+                    th, c, m, k, dp, hp, fp),
+                "provenance": provenance}
+
+    overridden = (th is not None or lanes is not None
+                  or dimension_semantics is not None)
+    hit = None
+    if not overridden and vmem_budget_mb is None and b is not None:
+        hit = plans.lookup("hub_reuse", **dims)
+    if hit is not None:
+        plan = build(hit["th"], hit.get("lanes"), hit.get("vmem_budget_mb"),
+                     hit.get("dimension_semantics"), "autotuned")
+        if plan["footprint_bytes"] > int(plan["vmem_budget_mb"] * 2 ** 20):
+            warnings.warn(
+                f"stale tile plan for {plans.plan_key('hub_reuse', dims)}: "
+                f"footprint {plan['footprint_bytes']} B busts its "
+                f"{plan['vmem_budget_mb']} MB budget; using the heuristic "
+                f"(re-run python -m repro.launch.autotune)",
+                RuntimeWarning, stacklevel=2)
+            plan = build(None, None, None, None, "heuristic")
+    else:
+        plan = build(th, lanes, vmem_budget_mb, dimension_semantics,
+                     "override" if overridden else "heuristic")
+    plans.note_plan("hub_reuse", dims, plan)
+    return plan
 
 
 def hub_reuse_batched_pallas(pool_in: jnp.ndarray, slot: jnp.ndarray,
                              comp: jnp.ndarray, w1, b1, w2, b2,
                              th: int | None = None,
-                             vmem_budget_mb: float = DEFAULT_VMEM_BUDGET_MB,
+                             vmem_budget_mb: float | None = None,
+                             lanes: int | None = None,
+                             dimension_semantics=None,
                              interpret: bool = False, live=None):
     """Natively batched hub-reuse: pool_in (B, H, C, D), slot (B, H, M, K),
     comp (B, H, M, F), optional live (B, H, M, K).  -> (B, H, M, F_out) in
     ONE pallas_call with grid (B, ⌈H/TH⌉).
 
     Weights ride constant index maps (VMEM-resident across the grid);
-    D/H/F are lane-padded to 128-multiples (sliced back on return);
-    ``th`` / ``vmem_budget_mb`` are the ``kernel_kw`` knobs."""
+    D/H/F are zero-padded to ``lanes``-multiples (sliced back on
+    return); ``th`` / ``vmem_budget_mb`` / ``lanes`` /
+    ``dimension_semantics`` are the ``kernel_kw`` knobs — left None,
+    the plan comes from the autotuned store (on a hit) or the VMEM
+    heuristic (see :func:`hub_reuse_tile_plan`)."""
     b, hn, c, d = pool_in.shape
     _, _, m, k = slot.shape
     hdim, fout = w1.shape[1], w2.shape[1]
     plan = hub_reuse_tile_plan(hn, c, m, k, d, hdim, fout, th=th,
-                               vmem_budget_mb=vmem_budget_mb)
+                               vmem_budget_mb=vmem_budget_mb, lanes=lanes,
+                               dimension_semantics=dimension_semantics,
+                               b=b)
     th = plan["th"]
     dp, hp, fp = plan["d_pad"], plan["h_pad"], plan["f_pad"]
 
-    pool_in = pad_lanes(pool_in)
-    comp = pad_lanes(comp)
-    w1 = pad_axis(pad_lanes(w1), 0, dp)
-    b1 = pad_lanes(b1)
-    w2 = pad_axis(pad_lanes(w2), 0, hp)
-    b2 = pad_lanes(b2)
+    pool_in = pad_axis(pool_in, 3, dp)
+    comp = pad_axis(comp, 3, fp)
+    w1 = pad_axis(pad_axis(w1, 1, hp), 0, dp)
+    b1 = pad_axis(b1, 0, hp)
+    w2 = pad_axis(pad_axis(w2, 1, fp), 0, hp)
+    b2 = pad_axis(b2, 0, fp)
 
     weight_specs = [
         pl.BlockSpec((dp, hp), lambda bi, j: (0, 0)),
@@ -303,7 +352,7 @@ def hub_reuse_batched_pallas(pool_in: jnp.ndarray, slot: jnp.ndarray,
         out_specs=pl.BlockSpec((1, th, m, fp), lambda bi, j: (bi, j, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b, hn, m, fp), pool_in.dtype),
         compiler_params=pltpu.TPUCompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
+            dimension_semantics=tuple(plan["dimension_semantics"])),
         interpret=interpret,
     )(*args)
     return out[..., :fout]

@@ -5,6 +5,7 @@ from functools import partial
 
 import jax
 
+from repro.kernels import plans
 from .hub_reuse import (hub_reuse_batched_pallas, hub_reuse_pallas,
                         hub_reuse_tile_plan)
 from .ref import hub_reuse_ref
@@ -23,23 +24,34 @@ def hub_reuse(pool_in, slot, comp, w1, b1, w2, b2,
                             interpret=interpret, live=live)
 
 
-@partial(jax.jit, static_argnames=("th", "vmem_budget_mb", "interpret"))
+@partial(jax.jit, static_argnames=("th", "vmem_budget_mb", "lanes",
+                                   "dimension_semantics", "interpret"))
 def hub_reuse_batched(pool_in, slot, comp, w1, b1, w2, b2,
                       th: int | None = None,
                       vmem_budget_mb: float | None = None,
+                      lanes: int | None = None,
+                      dimension_semantics: tuple | None = None,
                       interpret: bool | None = None, live=None):
     """Natively batched hub-reuse: (B, H, C, D) → (B, H, M, F_out) through
     ONE pallas_call with grid (B, ⌈H/TH⌉); TH islands share one pool
     matmul and one offset-one-hot reuse matmul per step, weights stay
-    VMEM-resident and D/H/F lanes are 128-aligned.  ``th`` (None = VMEM-
-    budget heuristic) and ``vmem_budget_mb`` are the ``kernel_kw`` knobs;
-    ``live`` (B, H, M, K) as in :func:`hub_reuse`."""
+    VMEM-resident and D/H/F lanes are padded to ``lanes`` multiples.
+    ``th`` / ``vmem_budget_mb`` / ``lanes`` / ``dimension_semantics``
+    are the ``kernel_kw`` knobs (all None = the autotuned plan store,
+    else the VMEM-budget heuristic); ``live`` (B, H, M, K) as in
+    :func:`hub_reuse`."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    kw = {} if vmem_budget_mb is None else {"vmem_budget_mb": vmem_budget_mb}
-    return hub_reuse_batched_pallas(pool_in, slot, comp, w1, b1, w2, b2,
-                                    th=th, interpret=interpret, live=live,
-                                    **kw)
+    return hub_reuse_batched_pallas(
+        pool_in, slot, comp, w1, b1, w2, b2, th=th,
+        vmem_budget_mb=vmem_budget_mb, lanes=lanes,
+        dimension_semantics=dimension_semantics, interpret=interpret,
+        live=live)
+
+
+# the tile plan resolves inside the trace: a plan-store mutation (or a
+# plans.bypass() boundary) must drop traces made under the old plan
+plans.register_cache_clearer(hub_reuse_batched.clear_cache)
 
 
 __all__ = ["hub_reuse", "hub_reuse_batched", "hub_reuse_ref",

@@ -1,0 +1,279 @@
+"""Shape-keyed tile-plan store for the batched FC kernels.
+
+The autotuner (``repro.launch.autotune``) measures candidate tile plans
+per ``(kernel, B, shape)`` cell and persists winners here
+(``results/tile_plans.json`` by default).  The tile planners in
+``gather_mlp``/``hub_reuse`` consult the active store at trace time, so
+a cached plan silently replaces the VMEM-budget heuristic anywhere the
+default ``kernel_kw`` resolution path runs — ``engine.apply`` /
+``PCNEngine`` / ``FCBackend.{dense,reuse}_batched`` — and a cache miss
+(or a stale/corrupt entry) falls back to the heuristic instead of
+raising.
+
+Resolution order inside the planners (see ``gather_mlp_tile_plan``):
+
+    explicit kernel_kw override  >  store hit ("autotuned")  >  heuristic
+
+Entry format (one per :func:`plan_key`)::
+
+    {"ts": 64, "lanes": 8, "vmem_budget_mb": 8.0,
+     "dimension_semantics": ["parallel", "arbitrary"],
+     "provenance": "autotuned", ...measurement metadata...}
+
+``lanes`` is the lane-padding multiple for the D/H/F dims.  On real TPU
+hardware only 128 is Mosaic-aligned, and 128-lane candidates win the
+measurement there; in interpret mode (CPU) the padding FLOPs are real
+work, so smaller lane pads measure faster — which is exactly why the
+knob is measured per host rather than hardcoded.  The K002 linter
+accepts sub-128 lanes only when the block spans the full (padded) array
+width, which these kernels always do for their lane dims.
+
+Mutating the store (or toggling :func:`bypass`) clears the jit caches
+the kernel ops registered via :func:`register_cache_clearer`: the
+planners resolve at trace time, so an already-traced executable would
+otherwise keep serving the plan that was active when it traced.
+
+This module runs at trace time (``repro.kernels`` is an A003-traced
+package): no wall-clock reads here — timing lives in
+``repro.launch.autotune``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import warnings
+from contextlib import contextmanager
+
+VERSION = 1
+DEFAULT_PATH = os.path.join("results", "tile_plans.json")
+ENV_VAR = "REPRO_TILE_PLANS"
+
+#: per-kernel tile field name (the knob the heuristic would otherwise set)
+TILE_FIELD = {"gather_mlp": "ts", "hub_reuse": "th"}
+
+_SEMANTICS = {"parallel", "arbitrary"}
+
+
+def plan_key(kernel: str, dims: dict) -> str:
+    """Canonical store key, e.g.
+    ``"gather_mlp|b=2,d=35,dc=3,f=128,h=64,k=8,s=64"``."""
+    if kernel not in TILE_FIELD:
+        raise ValueError(f"unknown kernel {kernel!r}; "
+                         f"expected one of {sorted(TILE_FIELD)}")
+    return kernel + "|" + ",".join(
+        f"{k}={int(v)}" for k, v in sorted(dims.items()))
+
+
+def entry_error(kernel: str, entry) -> str | None:
+    """Why ``entry`` is not a usable plan for ``kernel`` (None = valid).
+    Checked on load AND on record, so a hand-edited or version-skewed
+    cache degrades to the heuristic instead of crashing a trace."""
+    if not isinstance(entry, dict):
+        return "entry is not an object"
+    tf = TILE_FIELD[kernel]
+    t = entry.get(tf)
+    if not isinstance(t, int) or isinstance(t, bool) or t < 1:
+        return f"{tf!r} must be a positive int, got {t!r}"
+    lanes = entry.get("lanes", 128)
+    if not isinstance(lanes, int) or isinstance(lanes, bool) or lanes < 1:
+        return f"'lanes' must be a positive int, got {lanes!r}"
+    mb = entry.get("vmem_budget_mb", None)
+    if not isinstance(mb, (int, float)) or isinstance(mb, bool) or mb <= 0:
+        return f"'vmem_budget_mb' must be a positive number, got {mb!r}"
+    sem = entry.get("dimension_semantics")
+    if sem is not None:
+        if (not isinstance(sem, (list, tuple)) or len(sem) != 2
+                or not set(sem) <= _SEMANTICS):
+            return ("'dimension_semantics' must be a pair from "
+                    f"{sorted(_SEMANTICS)}, got {sem!r}")
+    if entry.get("provenance") != "autotuned":
+        return (f"provenance {entry.get('provenance')!r} != 'autotuned' "
+                f"(only measured winners belong in the store)")
+    return None
+
+
+class PlanStore:
+    """A dict of :func:`plan_key` -> plan entries with JSON persistence.
+
+    ``load`` never raises on bad files: a corrupt/mis-versioned file or
+    an invalid entry warns (``RuntimeWarning``) and is dropped, so the
+    planners fall back to the heuristic."""
+
+    def __init__(self, entries: dict | None = None,
+                 path: str | None = None):
+        self.entries: dict = dict(entries or {})
+        self.path = path
+
+    @classmethod
+    def load(cls, path: str) -> "PlanStore":
+        store = cls(path=path)
+        if not os.path.exists(path):
+            return store
+        try:
+            with open(path, encoding="utf-8") as fh:
+                raw = json.load(fh)
+        except (json.JSONDecodeError, OSError, UnicodeDecodeError) as e:
+            warnings.warn(
+                f"tile-plan store {path!r} is unreadable "
+                f"({type(e).__name__}: {e}); falling back to the "
+                f"heuristic tile planner", RuntimeWarning, stacklevel=2)
+            return store
+        if not isinstance(raw, dict) or raw.get("version") != VERSION:
+            warnings.warn(
+                f"tile-plan store {path!r} has version "
+                f"{raw.get('version') if isinstance(raw, dict) else '?'} "
+                f"!= {VERSION}; ignoring it (re-run "
+                f"python -m repro.launch.autotune)",
+                RuntimeWarning, stacklevel=2)
+            return store
+        for key, entry in (raw.get("plans") or {}).items():
+            kernel = str(key).split("|", 1)[0]
+            if kernel not in TILE_FIELD:
+                warnings.warn(
+                    f"tile-plan store {path!r}: dropping entry {key!r} "
+                    f"(unknown kernel)", RuntimeWarning, stacklevel=2)
+                continue
+            err = entry_error(kernel, entry)
+            if err:
+                warnings.warn(
+                    f"tile-plan store {path!r}: dropping entry {key!r} "
+                    f"({err}); the heuristic covers this cell",
+                    RuntimeWarning, stacklevel=2)
+                continue
+            store.entries[key] = entry
+        return store
+
+    def lookup(self, kernel: str, **dims) -> dict | None:
+        entry = self.entries.get(plan_key(kernel, dims))
+        return dict(entry) if entry is not None else None
+
+    def record(self, kernel: str, dims: dict, entry: dict) -> str:
+        """Insert a winner (validated — we produced it, so a bad entry
+        is a bug, not a degradation) and invalidate kernel jit caches."""
+        err = entry_error(kernel, entry)
+        if err:
+            raise ValueError(f"refusing to record invalid plan for "
+                             f"{plan_key(kernel, dims)}: {err}")
+        key = plan_key(kernel, dims)
+        self.entries[key] = dict(entry)
+        _clear_kernel_caches()
+        return key
+
+    def save(self, path: str | None = None) -> str:
+        path = path or self.path or default_path()
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w", encoding="utf-8") as fh:
+            json.dump({"version": VERSION,
+                       "plans": {k: self.entries[k]
+                                 for k in sorted(self.entries)}},
+                      fh, indent=1, sort_keys=True)
+        self.path = path
+        return path
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+
+# ---- module state: the active store + bypass/capture contexts ---------------
+
+_lock = threading.Lock()
+_store: PlanStore | None = None
+_configured: bool = False        # configure() called (None = in-memory)
+_configured_path: str | None = None
+_bypass_depth = 0
+_captures: list[list] = []
+_clearers: list = []
+
+
+def default_path() -> str:
+    return os.environ.get(ENV_VAR) or DEFAULT_PATH
+
+
+def register_cache_clearer(fn) -> None:
+    """Kernel ops modules register their jitted wrappers'
+    ``clear_cache`` here so store mutations invalidate stale traces."""
+    _clearers.append(fn)
+
+
+def _clear_kernel_caches() -> None:
+    for fn in _clearers:
+        fn()
+
+
+def configure(path: str | None) -> None:
+    """Point the active store at ``path`` (None = fresh in-memory store,
+    nothing read from or written to disk).  Clears kernel jit caches."""
+    global _store, _configured, _configured_path
+    with _lock:
+        _configured = True
+        _configured_path = path
+        _store = PlanStore() if path is None else PlanStore.load(path)
+    _clear_kernel_caches()
+
+
+def refresh() -> None:
+    """Re-read the configured (or default) store from disk."""
+    global _store
+    with _lock:
+        path = _configured_path if _configured else default_path()
+        _store = PlanStore() if path is None else PlanStore.load(path)
+    _clear_kernel_caches()
+
+
+def active_store() -> PlanStore:
+    """The store the planners consult (lazily loaded from
+    ``$REPRO_TILE_PLANS`` or ``results/tile_plans.json``)."""
+    global _store
+    with _lock:
+        if _store is None:
+            _store = PlanStore.load(default_path())
+        return _store
+
+
+def enabled() -> bool:
+    return _bypass_depth == 0
+
+
+@contextmanager
+def bypass():
+    """Disable store lookups inside the block — the planners resolve
+    with the pure heuristic (explicit overrides still apply).  Clears
+    kernel jit caches on entry and exit so traces made either side of
+    the boundary can't serve the wrong plan."""
+    global _bypass_depth
+    _bypass_depth += 1
+    _clear_kernel_caches()
+    try:
+        yield
+    finally:
+        _bypass_depth -= 1
+        _clear_kernel_caches()
+
+
+@contextmanager
+def capture():
+    """Record every plan the planners resolve inside the block — the
+    plans *actually used*, post-fallback.  Yields a list of
+    ``{"kernel", "dims", "plan"}`` dicts; benchmarks assert provenance
+    from it instead of trusting the requested plan."""
+    log: list = []
+    _captures.append(log)
+    try:
+        yield log
+    finally:
+        _captures.remove(log)
+
+
+def note_plan(kernel: str, dims: dict, plan: dict) -> None:
+    """Called by the tile planners with the final resolved plan."""
+    for log in _captures:
+        log.append({"kernel": kernel, "dims": dict(dims),
+                    "plan": dict(plan)})
+
+
+def lookup(kernel: str, **dims) -> dict | None:
+    """Store lookup honoring :func:`bypass`; None on miss."""
+    if not enabled():
+        return None
+    return active_store().lookup(kernel, **dims)

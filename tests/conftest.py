@@ -1,4 +1,18 @@
 import os
 import sys
 
+import pytest
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(autouse=True)
+def _fresh_plan_store():
+    """Pin every test to an empty in-memory tile-plan store: results are
+    independent of whatever results/tile_plans.json the host carries,
+    and tests that seed plans (tests/test_autotune.py) can't leak them
+    into each other."""
+    from repro.kernels import plans
+    plans.configure(None)
+    yield
+    plans.configure(None)

@@ -1,0 +1,321 @@
+"""Plan-cache and autotuner contracts (repro.kernels.plans +
+repro.launch.autotune): save→load round-trips bit-identically; a cache
+hit adds zero jit compilations beyond the plan's own shapes; stale or
+corrupt entries warn and fall back to the heuristic rather than
+raising; the same seed and budget pick the same winner; and a stored
+plan silently replaces the heuristic on the default engine path with
+``provenance == "autotuned"`` and unchanged numerics."""
+import json
+from dataclasses import replace
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.analysis import compile_cache_size
+from repro.data.synthetic import make_cloud
+from repro.engine import Batch, BlockSpec
+from repro.kernels import plans
+from repro.kernels.gather_mlp.ops import gather_mlp_tile_plan
+from repro.launch import autotune
+from repro.models import pointnet2
+
+# small cells: the tuner never executes kernels under the injected
+# timer (only make_jaxpr traces for the lint gate), so these stay fast
+GDIMS = {"b": 2, "s": 16, "k": 4, "d": 6, "dc": 3, "h": 8, "f": 16}
+HDIMS = {"b": 2, "hn": 4, "c": 8, "m": 4, "k": 4, "d": 6, "h": 8, "f": 16}
+
+SPEC = replace(pointnet2.POINTNET2_C, blocks=(
+    BlockSpec(24, 4, (8, 16)), BlockSpec(8, 4, (16, 16))))
+N = 48
+
+
+def cost_model(call, knobs):
+    """Deterministic injected timer: never executes the kernel.  Ranks
+    candidates by (tile, lanes) so the winner is knowable; knobs=None is
+    the vmap baseline."""
+    if knobs is None:
+        return 1000.0
+    return float(knobs["tile"] * 10 + knobs["lanes"])
+
+
+def _entry(ts=8, lanes=8, mb=8.0):
+    return {"ts": ts, "lanes": lanes, "vmem_budget_mb": mb,
+            "dimension_semantics": ["parallel", "arbitrary"],
+            "provenance": "autotuned", "measured_us": 12.5}
+
+
+def _batch(spec, sizes, seed=0):
+    rng = np.random.default_rng(seed)
+    b = len(sizes)
+    xyz = jnp.asarray(np.stack([make_cloud(rng, N) for _ in range(b)]))
+    return Batch.make(xyz, xyz, key=jax.random.PRNGKey(3),
+                      n_valid=jnp.asarray(sizes, jnp.int32))
+
+
+# ---- store round-trip / corruption ------------------------------------------
+
+def test_save_load_round_trips_bit_identically(tmp_path):
+    store = plans.PlanStore()
+    store.record("gather_mlp", GDIMS, _entry(ts=16, lanes=128))
+    store.record("hub_reuse", HDIMS,
+                 {"th": 2, "lanes": 32, "vmem_budget_mb": 4.0,
+                  "dimension_semantics": ["arbitrary", "arbitrary"],
+                  "provenance": "autotuned", "measured_us": 7.25,
+                  "speedup_vs_vmap": 1.5})
+    path = store.save(str(tmp_path / "plans.json"))
+    loaded = plans.PlanStore.load(path)
+    assert loaded.entries == store.entries
+    # and a second save of the loaded store produces the same bytes
+    path2 = loaded.save(str(tmp_path / "plans2.json"))
+    assert open(path).read() == open(path2).read()
+
+
+def test_corrupt_store_warns_and_degrades(tmp_path):
+    p = tmp_path / "plans.json"
+    p.write_text("{not json")
+    with pytest.warns(RuntimeWarning, match="unreadable"):
+        store = plans.PlanStore.load(str(p))
+    assert len(store) == 0
+
+    p.write_text(json.dumps({"version": 999, "plans": {}}))
+    with pytest.warns(RuntimeWarning, match="version"):
+        store = plans.PlanStore.load(str(p))
+    assert len(store) == 0
+
+
+def test_invalid_entries_dropped_not_fatal(tmp_path):
+    good_key = plans.plan_key("gather_mlp", GDIMS)
+    raw = {"version": plans.VERSION, "plans": {
+        good_key: _entry(),
+        "gather_mlp|b=1,s=8": {"ts": -3, "provenance": "autotuned"},
+        "unknown_kernel|b=1": _entry(),
+        "hub_reuse|b=2,hn=4": {"th": 2, "provenance": "heuristic"},
+    }}
+    p = tmp_path / "plans.json"
+    p.write_text(json.dumps(raw))
+    with pytest.warns(RuntimeWarning, match="dropping entry"):
+        store = plans.PlanStore.load(str(p))
+    assert list(store.entries) == [good_key]      # the bad ones degraded
+    assert store.lookup("gather_mlp", **GDIMS) is not None
+
+
+def test_record_rejects_invalid_plans():
+    store = plans.PlanStore()
+    with pytest.raises(ValueError, match="refusing to record"):
+        store.record("gather_mlp", GDIMS, {"ts": 0,
+                                           "provenance": "autotuned"})
+    with pytest.raises(ValueError, match="provenance"):
+        store.record("gather_mlp", GDIMS, _entry() | {"provenance": "guess"})
+    with pytest.raises(ValueError, match="unknown kernel"):
+        plans.plan_key("conv2d", GDIMS)
+
+
+# ---- planner resolution: hit / miss / stale / bypass ------------------------
+
+def _plan_for(dims, **kw):
+    return gather_mlp_tile_plan(dims["s"], dims["k"], dims["d"], dims["dc"],
+                                dims["h"], dims["f"], b=dims["b"], **kw)
+
+
+def test_store_hit_resolves_autotuned_and_miss_falls_back():
+    plans.active_store().record("gather_mlp", GDIMS, _entry(ts=8, lanes=8))
+    plan = _plan_for(GDIMS)
+    assert plan["provenance"] == "autotuned"
+    assert plan["ts"] == 8 and plan["lanes"] == 8
+    # a different shape is a miss -> heuristic, silently
+    miss = _plan_for(GDIMS | {"s": 32})
+    assert miss["provenance"] == "heuristic"
+    # an explicit override beats the store hit
+    over = _plan_for(GDIMS, ts=4)
+    assert over["provenance"] == "override" and over["ts"] == 4
+
+
+def test_stale_entry_warns_and_falls_back():
+    """An entry whose recomputed footprint busts its own recorded budget
+    (e.g. the footprint model changed since it was tuned) must not be
+    served: the planner warns and uses the heuristic."""
+    plans.active_store().record(
+        "gather_mlp", GDIMS, _entry(ts=16, lanes=128, mb=0.001))
+    with pytest.warns(RuntimeWarning, match="stale tile plan"):
+        plan = _plan_for(GDIMS)
+    assert plan["provenance"] == "heuristic"
+
+
+def test_bypass_disables_lookup_and_capture_sees_resolved_plans():
+    plans.active_store().record("gather_mlp", GDIMS, _entry(ts=8, lanes=8))
+    with plans.capture() as cap, plans.bypass():
+        assert not plans.enabled()
+        plan = _plan_for(GDIMS)
+    assert plans.enabled()
+    assert plan["provenance"] == "heuristic"
+    assert [r["plan"]["provenance"] for r in cap] == ["heuristic"]
+    assert cap[0]["kernel"] == "gather_mlp" and cap[0]["dims"] == GDIMS
+
+
+# ---- autotune_cell ----------------------------------------------------------
+
+def test_same_seed_and_budget_pick_same_winner():
+    s1, s2 = plans.PlanStore(), plans.PlanStore()
+    e1 = autotune.autotune_cell("gather_mlp", GDIMS, budget=10, seed=3,
+                                store=s1, timer=cost_model)
+    e2 = autotune.autotune_cell("gather_mlp", GDIMS, budget=10, seed=3,
+                                store=s2, timer=cost_model)
+    assert e1 == e2
+    assert s1.entries == s2.entries
+    h1 = autotune.autotune_cell("hub_reuse", HDIMS, budget=10, seed=3,
+                                store=s1, timer=cost_model)
+    h2 = autotune.autotune_cell("hub_reuse", HDIMS, budget=10, seed=3,
+                                store=s2, timer=cost_model)
+    assert h1 == h2
+
+
+def test_winner_minimizes_cost_and_records_context():
+    store = plans.PlanStore()
+    entry = autotune.autotune_cell("gather_mlp", GDIMS, budget=32,
+                                   store=store, timer=cost_model)
+    cands = autotune.candidate_plans("gather_mlp", GDIMS, 32)
+    best = min(cost_model(None, c) for c in cands)
+    assert cost_model(None, {"tile": entry["ts"],
+                             "lanes": entry["lanes"]}) == best
+    assert entry["provenance"] == "autotuned"
+    assert entry["heuristic_us"] == cost_model(None, cands[0])
+    assert entry["vmap_us"] == 1000.0
+    assert entry["searched"] == len(cands)
+    assert store.lookup("gather_mlp", **GDIMS) == entry
+
+
+def test_candidates_feasible_deduped_heuristic_first():
+    for kernel, dims in (("gather_mlp", GDIMS), ("hub_reuse", HDIMS)):
+        cands = autotune.candidate_plans(kernel, dims, 64)
+        assert cands, kernel
+        h = autotune._heuristic_knobs(kernel, dims)
+        assert cands[0]["tile"] == h["tile"]
+        assert cands[0]["lanes"] == h["lanes"]
+        seen = set()
+        for c in cands:
+            key = (c["tile"], c["lanes"], c["dimension_semantics"])
+            assert key not in seen                   # deduplicated
+            seen.add(key)
+            assert c["footprint_bytes"] <= int(
+                c["vmem_budget_mb"] * 2 ** 20)       # feasible
+        assert len(autotune.candidate_plans(kernel, dims, 3)) == 3
+
+
+def test_ensure_plan_hits_do_not_retune():
+    store = plans.PlanStore()
+    calls = []
+
+    def counting_timer(call, knobs):
+        calls.append(knobs)
+        return cost_model(call, knobs)
+
+    e1 = autotune.ensure_plan("gather_mlp", GDIMS, store=store,
+                              budget=8, timer=counting_timer)
+    n_timed = len(calls)
+    assert n_timed > 0
+    e2 = autotune.ensure_plan("gather_mlp", GDIMS, store=store,
+                              budget=8, timer=counting_timer)
+    assert len(calls) == n_timed                     # hit: nothing re-timed
+    assert e2 == e1
+
+
+# ---- engine integration -----------------------------------------------------
+
+def test_model_cells_match_engine_lookups():
+    """Cell discovery sees exactly the planner calls engine.apply makes:
+    both kernels in lpcn mode, dims carrying the batch size."""
+    cells = autotune.model_cells(SPEC, 2, N, mode="lpcn")
+    kernels = {k for k, _ in cells}
+    assert kernels == {"gather_mlp", "hub_reuse"}
+    assert all(d["b"] == 2 for _, d in cells)
+    # traditional mode has no reuse stage
+    kernels_trad = {k for k, _ in
+                    autotune.model_cells(SPEC, 2, N, mode="traditional")}
+    assert kernels_trad == {"gather_mlp"}
+
+
+def test_autotuned_store_serves_engine_with_unchanged_numerics():
+    """End to end: tune the model's cells (injected timer), then the
+    default engine path resolves only "autotuned" plans and the logits
+    match the heuristic run ≤1e-5."""
+    params = engine.init(jax.random.PRNGKey(0), SPEC)
+    b = _batch(SPEC, [N, 31], seed=7)
+    with plans.bypass():
+        base = engine.apply(params, b, spec=SPEC, mode="lpcn",
+                            fc_backend="pallas")
+    entries = autotune.autotune_model(SPEC, 2, N, mode="lpcn",
+                                      store=plans.active_store(),
+                                      budget=8, timer=cost_model)
+    assert entries
+    with plans.capture() as cap:
+        tuned = engine.apply(params, b, spec=SPEC, mode="lpcn",
+                             fc_backend="pallas")
+    used = [r for r in cap if r["dims"].get("b") is not None]
+    assert used and all(r["plan"]["provenance"] == "autotuned"
+                        for r in used)
+    np.testing.assert_allclose(np.asarray(tuned), np.asarray(base),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_cache_hit_adds_no_jit_compilations():
+    """With autotuned plans active, one executable still serves every
+    ragged mix of the same batch shape (the plan is trace-time static —
+    a hit changes which plan is traced, never how many executables)."""
+    autotune.autotune_model(SPEC, 2, N, mode="lpcn",
+                            store=plans.active_store(), budget=8,
+                            timer=cost_model)
+    params = engine.init(jax.random.PRNGKey(0), SPEC)
+    f = jax.jit(partial(engine.apply, spec=SPEC, mode="lpcn",
+                        fc_backend="pallas"))
+    o1 = f(params, _batch(SPEC, [N, 30]))
+    o2 = f(params, _batch(SPEC, [17, N], seed=9))
+    assert compile_cache_size(f) == 1
+    assert o1.shape == o2.shape
+    assert bool(jnp.isfinite(o1).all() and jnp.isfinite(o2).all())
+
+
+def test_store_mutation_invalidates_kernel_traces():
+    """Recording a new winner must clear the kernel jit caches: the ops
+    resolve plans at trace time, so an already-compiled executable would
+    otherwise keep serving the old plan."""
+    from repro.kernels.gather_mlp.ops import gather_mlp_batched
+    rng = np.random.default_rng(0)
+    d = GDIMS
+    raw = jnp.asarray(rng.normal(
+        size=(d["b"], d["s"], d["k"], d["d"])), jnp.float32)
+    ctr = jnp.asarray(rng.normal(
+        size=(d["b"], d["s"], d["dc"])), jnp.float32)
+    w1 = jnp.asarray(rng.normal(size=(d["d"], d["h"])), jnp.float32)
+    w2 = jnp.asarray(rng.normal(size=(d["h"], d["f"])), jnp.float32)
+    b1, b2 = jnp.zeros(d["h"]), jnp.zeros(d["f"])
+
+    with plans.capture() as cap:
+        out_h = gather_mlp_batched(raw, ctr, w1, b1, w2, b2)
+    assert cap[-1]["plan"]["provenance"] == "heuristic"
+
+    plans.active_store().record("gather_mlp", GDIMS, _entry(ts=8, lanes=8))
+    with plans.capture() as cap:
+        out_a = gather_mlp_batched(raw, ctr, w1, b1, w2, b2)
+    # a fresh trace happened (capture saw it) and resolved the new plan
+    assert cap and cap[-1]["plan"]["provenance"] == "autotuned"
+    np.testing.assert_allclose(np.asarray(out_a), np.asarray(out_h),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_promoted_plans_pass_kernel_lint():
+    """Every entry the tuner records passes K001–K005 at its own budget
+    (what scripts/ci.sh re-checks on the persisted store)."""
+    store = plans.PlanStore()
+    for kernel, dims in (("gather_mlp", GDIMS), ("hub_reuse", HDIMS)):
+        entry = autotune.autotune_cell(kernel, dims, budget=10,
+                                       store=store, timer=cost_model)
+        knobs = {"tile": entry[plans.TILE_FIELD[kernel]],
+                 "lanes": entry["lanes"],
+                 "vmem_budget_mb": entry["vmem_budget_mb"],
+                 "dimension_semantics": tuple(entry["dimension_semantics"]),
+                 "footprint_bytes": entry["footprint_bytes"]}
+        assert autotune.lint_knobs(kernel, dims, knobs) == []

@@ -164,6 +164,93 @@ def test_kernel_kw_overrides_tiles():
                                rtol=1e-5, atol=1e-5)
 
 
+# ---- plan equivalence: the autotuner's search space is numerics-safe --------
+#
+# Every knob combination repro.launch.autotune may promote must produce
+# the same outputs as the heuristic plan — tiles only re-block the same
+# arithmetic.  Named overrides span the search space's corners: tiny
+# tiles forcing grid_tiles > 1 (multi-step grids exercise the index
+# maps), sub-128 lane padding with all-"arbitrary" semantics, and a
+# mid-size mixed configuration.
+
+PLAN_OVERRIDES = {
+    "tiny_tiles": {"ts": 4, "th": 1, "vmem_budget_mb": 2.0},
+    "lanes8_arbitrary": {"lanes": 8,
+                         "dimension_semantics": ("arbitrary", "arbitrary")},
+    "lanes32_mid": {"ts": 8, "th": 2, "lanes": 32},
+}
+
+
+@pytest.mark.parametrize("mode", ["traditional", "lpcn"])
+@pytest.mark.parametrize("model", sorted(SPECS), ids=str)
+def test_plan_override_equivalence(model, mode):
+    """Any feasible (TS, TH, lanes, semantics) override == the heuristic
+    plan ≤1e-5, on a ragged batch, for every model family × mode."""
+    from repro.kernels import plans
+
+    spec = SPECS[model]
+    params = engine.init(KEY, spec)
+    seed = zlib.crc32(f"plan-{model}-{mode}".encode()) % 1000
+    b = _batch(spec, RAGGED_MIXES["mix"], seed=seed)
+    base = engine.apply(params, b, spec=spec, mode=mode,
+                        fc_backend="pallas")
+    for name, kw in PLAN_OVERRIDES.items():
+        with plans.capture() as cap:
+            out = engine.apply(params, b, spec=spec, mode=mode,
+                               fc_backend="pallas", kernel_kw=kw)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                                   rtol=1e-5, atol=1e-5,
+                                   err_msg=f"{model}/{mode}/{name}")
+        assert cap, (model, mode, name)          # planner actually consulted
+        assert all(r["plan"]["provenance"] == "override" for r in cap), name
+
+
+@pytest.mark.parametrize("mix", sorted(RAGGED_MIXES), ids=str)
+def test_tiny_tiles_force_multi_step_grid(mix):
+    """Deliberately tiny tiles push grid_tiles > 1 — the multi-step grid
+    the heuristic never reaches at smoke shapes — and stay equal to the
+    single-tile plan across every ragged mix (incl. a fully-padded
+    cloud, the empty-subset corner a wrong index map would corrupt)."""
+    from repro.kernels import plans
+
+    spec = SPECS["pointnet2"]
+    params = engine.init(KEY, spec)
+    b = _batch(spec, RAGGED_MIXES[mix], seed=5)
+    base = engine.apply(params, b, spec=spec, mode="lpcn",
+                        fc_backend="pallas")
+    with plans.capture() as cap:
+        out = engine.apply(params, b, spec=spec, mode="lpcn",
+                           fc_backend="pallas",
+                           kernel_kw={"ts": 4, "th": 1})
+    np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                               rtol=1e-5, atol=1e-5)
+    gather = [r["plan"] for r in cap if r["kernel"] == "gather_mlp"]
+    hub = [r for r in cap if r["kernel"] == "hub_reuse"]
+    assert gather and all(p["grid_tiles"] > 1 for p in gather)
+    # th=1 walks every island singly — a single-island site (hn=1) can
+    # only ever have one step, so pin grid_tiles == hn instead
+    assert hub and all(r["plan"]["grid_tiles"] == r["dims"]["hn"]
+                       for r in hub)
+
+
+def test_kernel_kw_dimension_semantics_validated():
+    """Bad semantics raise at EngineCtx construction (not deep inside
+    Mosaic); JSON-style lists are canonicalized to hashable tuples."""
+    spec = SPECS["pointnet2"]
+    params = engine.init(KEY, spec)
+    b = _batch(spec, [96])
+    for bad in (("parallel",), ("parallel", "sequential"), "parallel"):
+        with pytest.raises(ValueError, match="dimension_semantics"):
+            engine.apply(params, b, spec=spec, fc_backend="pallas",
+                         kernel_kw={"dimension_semantics": bad})
+    base = engine.apply(params, b, spec=spec, fc_backend="pallas")
+    out = engine.apply(params, b, spec=spec, fc_backend="pallas",
+                       kernel_kw={"dimension_semantics":
+                                  ["arbitrary", "arbitrary"]})
+    np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                               rtol=1e-5, atol=1e-5)
+
+
 def test_hub_reuse_sentinel_guarded_at_merge():
     """Regression (merge-boundary zero-fill): a subset whose positions
     are all cached — so its overflow side is empty (-BIG) — must come

@@ -1,0 +1,175 @@
+"""Property tests for the tiling layer (repro.kernels.tiling) and the
+tile planners' emitted-plan invariants — the contracts the autotuner's
+candidate enumeration and the K001–K003 lint rules both lean on."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # clean env: deterministic fallback sampler
+    from _hyp import given, settings, strategies as st
+
+from repro.kernels.gather_mlp.ops import gather_mlp_tile_plan
+from repro.kernels.hub_reuse.ops import hub_reuse_tile_plan
+from repro.kernels.tiling import (DEFAULT_VMEM_BUDGET_MB, F32_BYTES, LANE,
+                                  SUBLANE, gather_mlp_footprint_elems,
+                                  hub_reuse_footprint_elems, largest_tile,
+                                  pad_axis, pad_lanes, round_up)
+
+
+# ---- round_up ---------------------------------------------------------------
+
+@settings(max_examples=50)
+@given(st.integers(1, 10_000), st.integers(1, 512))
+def test_round_up_properties(n, m):
+    r = round_up(n, m)
+    assert r % m == 0
+    assert n <= r < n + m
+    assert round_up(r, m) == r          # idempotent
+    assert round_up(m * 7, m) == m * 7  # exact at multiples
+
+
+# ---- pad_axis / pad_lanes ---------------------------------------------------
+
+@settings(max_examples=25)
+@given(st.integers(1, 17), st.integers(1, 13), st.integers(0, 40))
+def test_pad_axis_zero_extends(rows, cols, extra):
+    rng = np.random.default_rng(rows * 1000 + cols * 40 + extra)
+    x = jnp.asarray(rng.normal(size=(rows, cols)), jnp.float32)
+    y = pad_axis(x, 1, cols + extra)
+    assert y.shape == (rows, cols + extra)
+    assert jnp.array_equal(y[:, :cols], x)
+    assert not jnp.any(y[:, cols:])
+    if extra == 0:
+        assert y is x                   # exact no-op, no copy
+
+
+@settings(max_examples=25)
+@given(st.integers(1, 200), st.integers(0, 1))
+def test_pad_lanes_alignment(width, which):
+    mult = (SUBLANE, LANE)[which]
+    x = jnp.ones((3, width), jnp.float32)
+    y = pad_lanes(x, mult)
+    assert y.shape[-1] % mult == 0
+    assert y.shape[-1] - width < mult
+
+
+@settings(max_examples=20)
+@given(st.integers(1, 40), st.integers(1, 40), st.integers(1, 40))
+def test_zero_pad_through_matmul_is_noop(n, d, f):
+    """The tiling layer's core legality claim: zero lanes through a
+    matmul are exact no-ops, so lane padding never changes the math."""
+    rng = np.random.default_rng(n * 1601 + d * 40 + f)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(d, f)), jnp.float32)
+    dp, fp = round_up(d, SUBLANE), round_up(f, LANE)
+    xp = pad_axis(x, 1, dp)
+    wp = pad_axis(pad_axis(w, 0, dp), 1, fp)
+    out = (xp @ wp)[:, :f]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x @ w),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---- largest_tile -----------------------------------------------------------
+
+@settings(max_examples=50)
+@given(st.integers(1, 1024), st.integers(1, 10_000), st.integers(0, 1))
+def test_largest_tile_is_maximal_feasible(limit, cap, which):
+    base = (1, SUBLANE)[which]
+    fits = lambda t: t <= cap           # any monotone predicate
+    t = largest_tile(limit, fits, base=base)
+    start = min(base, max(limit, 1))
+    assert 1 <= t <= max(limit, 1)
+    assert fits(t) or t == 1            # feasible, or the floor tile
+    if fits(start):
+        # ladder path: power-of-two multiple of the start tile, maximal
+        # (the next rung busts the limit or the budget)
+        q = t // start
+        assert t == start * q and q & (q - 1) == 0
+        assert (t * 2 > limit) or not fits(t * 2)
+    else:
+        # halving path: repeated floor-halving of the start tile
+        assert any(t == max(start >> j, 1) for j in range(start.bit_length()))
+
+
+# ---- emitted plans: gather_mlp ----------------------------------------------
+
+@settings(max_examples=15)
+@given(st.integers(1, 300), st.integers(1, 48), st.integers(1, 64),
+       st.integers(1, 8), st.integers(1, 96), st.integers(1, 160))
+def test_gather_plan_invariants(s, k, d, dc, h, f):
+    plan = gather_mlp_tile_plan(s, k, d, dc, h, f)
+    ts, lanes = plan["ts"], plan["lanes"]
+    assert plan["provenance"] == "heuristic"
+    assert lanes == LANE
+    for key, dim in (("d_pad", d), ("h_pad", h), ("f_pad", f)):
+        assert plan[key] % lanes == 0 and plan[key] >= dim
+    assert 1 <= ts <= max(s, 1)
+    assert ts % SUBLANE == 0 or ts < SUBLANE or ts == s
+    assert plan["grid_tiles"] * ts >= s          # full grid coverage
+    budget = int(plan["vmem_budget_mb"] * 2 ** 20)
+    assert plan["footprint_bytes"] == F32_BYTES * gather_mlp_footprint_elems(
+        ts, k, plan["d_pad"], dc, plan["h_pad"], plan["f_pad"])
+    assert plan["footprint_bytes"] <= budget or ts == 1
+
+
+@settings(max_examples=15)
+@given(st.integers(1, 80), st.integers(1, 24), st.integers(0, 2))
+def test_gather_plan_override_invariants(s, ts, which):
+    lanes = (8, 32, LANE)[which]
+    plan = gather_mlp_tile_plan(s, 8, 35, 3, 64, 128, ts=ts, lanes=lanes,
+                                dimension_semantics=("arbitrary",
+                                                     "arbitrary"))
+    assert plan["provenance"] == "override"
+    assert plan["ts"] == min(max(ts, 1), s)      # clamped into [1, s]
+    assert plan["lanes"] == lanes
+    assert tuple(plan["dimension_semantics"]) == ("arbitrary", "arbitrary")
+    for key in ("d_pad", "h_pad", "f_pad"):
+        assert plan[key] % lanes == 0
+    assert plan["grid_tiles"] * plan["ts"] >= s
+
+
+# ---- emitted plans: hub_reuse -----------------------------------------------
+
+@settings(max_examples=15)
+@given(st.integers(1, 64), st.integers(1, 64), st.integers(1, 32),
+       st.integers(1, 32), st.integers(1, 64), st.integers(1, 96),
+       st.integers(1, 160))
+def test_hub_plan_invariants(hn, c, m, k, d, h, f):
+    plan = hub_reuse_tile_plan(hn, c, m, k, d, h, f)
+    th, lanes = plan["th"], plan["lanes"]
+    assert plan["provenance"] == "heuristic"
+    assert lanes == LANE
+    for key, dim in (("d_pad", d), ("h_pad", h), ("f_pad", f)):
+        assert plan[key] % lanes == 0 and plan[key] >= dim
+    assert 1 <= th <= max(hn, 1)
+    assert plan["grid_tiles"] * th >= hn         # full grid coverage
+    budget = int(plan["vmem_budget_mb"] * 2 ** 20)
+    assert plan["footprint_bytes"] == F32_BYTES * hub_reuse_footprint_elems(
+        th, c, m, k, plan["d_pad"], plan["h_pad"], plan["f_pad"])
+    assert plan["footprint_bytes"] <= budget or th == 1
+
+
+@settings(max_examples=15)
+@given(st.integers(1, 32), st.integers(1, 48), st.integers(0, 2))
+def test_hub_plan_override_invariants(hn, th, which):
+    lanes = (8, 32, LANE)[which]
+    plan = hub_reuse_tile_plan(hn, 32, 16, 8, 35, 64, 128, th=th,
+                               lanes=lanes)
+    assert plan["provenance"] == "override"
+    assert plan["th"] == min(max(th, 1), hn)
+    assert plan["lanes"] == lanes
+    for key in ("d_pad", "h_pad", "f_pad"):
+        assert plan[key] % lanes == 0
+    assert plan["grid_tiles"] * plan["th"] >= hn
+
+
+def test_default_budget_is_the_planners_default():
+    plan = gather_mlp_tile_plan(64, 8, 35, 3, 64, 128)
+    assert plan["vmem_budget_mb"] == DEFAULT_VMEM_BUDGET_MB
+    tight = gather_mlp_tile_plan(64, 8, 35, 3, 64, 128, vmem_budget_mb=0.5)
+    assert tight["vmem_budget_mb"] == 0.5
+    assert tight["provenance"] == "heuristic"    # budget alone: no override
+    assert tight["ts"] <= plan["ts"]
+    assert tight["footprint_bytes"] <= int(0.5 * 2 ** 20) or tight["ts"] == 1
