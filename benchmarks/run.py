@@ -367,7 +367,10 @@ def bench_fc_kernel(rows, quick: bool):
         _emit(rows, f"fc_kernel_gather_mlp_autotuned_b{b}", us_a,
               f"pallas_calls=1 speedup_vs_vmap={us_v / max(us_a, 1e-9):.2f} "
               f"speedup_vs_heuristic={us_h / max(us_a, 1e-9):.2f}",
-              dispatch="batched_grid", per_cloud_dispatches=1, batch=b,
+              dispatch=("vmap_variant" if plan_a.get("variant") == "vmap"
+                        else "batched_grid"),
+              per_cloud_dispatches=(b if plan_a.get("variant") == "vmap"
+                                    else 1), batch=b,
               shapes=shapes, tile=plan_a, grid=[b, plan_a["grid_tiles"]],
               tile_provenance=plan_a["provenance"], **sf_a)
         curve["gather_mlp"].append((b, us_v / max(us_a, 1e-9)))
@@ -411,7 +414,10 @@ def bench_fc_kernel(rows, quick: bool):
         _emit(rows, f"fc_kernel_hub_reuse_autotuned_b{b}", us_a,
               f"pallas_calls=1 speedup_vs_vmap={us_v / max(us_a, 1e-9):.2f} "
               f"speedup_vs_heuristic={us_h / max(us_a, 1e-9):.2f}",
-              dispatch="batched_grid", per_cloud_dispatches=1, batch=b,
+              dispatch=("vmap_variant" if plan_a.get("variant") == "vmap"
+                        else "batched_grid"),
+              per_cloud_dispatches=(b if plan_a.get("variant") == "vmap"
+                                    else 1), batch=b,
               shapes=shapes, tile=plan_a, grid=[b, plan_a["grid_tiles"]],
               tile_provenance=plan_a["provenance"], **sf_a)
         curve["hub_reuse"].append((b, us_v / max(us_a, 1e-9)))
@@ -505,73 +511,109 @@ def bench_serve(rows, quick: bool):
     """Replays a synthetic ragged trace (Poisson arrivals, log-normal
     sizes) through the continuous-batching layer and records the
     user-facing serving metrics — e2e/queue-wait percentiles,
-    throughput, padding waste, dispatch mix — at two offered loads:
-    light (timeouts fire partial batches) and heavy (batches fill),
-    plus a chaos load (seeded FaultPlan) that prices the degraded
-    fallback path and records the fault counters.  The JSON row
-    carries the full serve report."""
+    throughput, padding waste, dispatch mix, overlap — as a sync-vs-
+    async A/B at three offered loads: light (timeouts fire partial
+    batches), heavy (batches fill; the headline comparison), and chaos
+    (seeded FaultPlan pricing the degraded fallback path).  Each JSON
+    row carries the full serve report; the ``serve_async_ab`` row is
+    the headline: heavy-load p95 e2e latency and throughput, async vs
+    sync, on the identical trace."""
     import jax
     from dataclasses import replace as _replace
     from repro import engine, serve
     from repro.data.synthetic import make_cloud
-    from repro.engine import BlockSpec
     from repro.models import MODEL_ZOO
 
     _, spec = MODEL_ZOO["pointnet2_c"]
     if quick:
-        spec = _replace(spec, blocks=(
-            BlockSpec(24, 8, (16, 32)), BlockSpec(8, 8, (32, 48))))
-        sizes, n_med, n_req = [64, 96], 64, 16
+        # 256-point clouds with launch-style reduced blocks (centers
+        # capped at points//4), not the tiny 64-point spec the other
+        # quick benches use: per-batch service must be big enough that
+        # overlapping padding/readback with in-flight compute beats
+        # the executor handoff cost, or the A/B reads as noise (on
+        # tiny batches sync and async are a wash)
+        spec = _replace(spec, blocks=tuple(
+            _replace(b, n_centers=min(b.n_centers, 64),
+                     k=min(b.k, 16)) for b in spec.blocks))
+        sizes, n_med, n_req = [256, 384], 256, 16
     else:
         sizes, n_med, n_req = [512, 1024], 512, 64
     eng = engine.PCNEngine(spec, mode="lpcn", fc_backend="reference")
     params = eng.init(jax.random.PRNGKey(0))
     buckets = serve.BucketSet.make(sizes, batch=2 if quick else 4)
-    server = serve.PCNServer(eng, params, buckets, timeout_s=0.01)
-    for load, rate in (("light", 30.0), ("heavy", 2000.0)):
-        server.metrics = serve.ServeMetrics()     # fresh window per load
+    reports: dict[tuple[str, str], dict] = {}
+    for dmode, is_sync in (("sync", True), ("async", False)):
+        server = serve.PCNServer(eng, params, buckets, timeout_s=0.01,
+                                 max_in_flight=4, sync=is_sync)
+        for load, rate in (("light", 30.0), ("heavy", 2000.0)):
+            server.metrics = serve.ServeMetrics()  # fresh window per load
+            events = serve.synthetic_trace(
+                n_requests=n_req, rate_hz=rate, n_median=n_med,
+                sigma=0.35, n_max=buckets.max_points, seed=1)
+            rng = np.random.default_rng(0)
+            rids = serve.replay(
+                server, events,
+                lambda n, i: (np.asarray(make_cloud(rng, n), np.float32),
+                              None))
+            rep = server.report(load=load, rate_hz=rate)
+            assert all(server.ready(r) for r in rids), \
+                "unanswered requests"
+            reports[dmode, load] = rep
+            lat = rep["latency_ms"]["e2e"]
+            _emit(rows, f"serve_trace_{spec.name}_{load}_{dmode}",
+                  1e3 * lat["mean"],
+                  f"p50={lat['p50']:.1f} p95={lat['p95']:.1f} "
+                  f"p99={lat['p99']:.1f} rps={rep['throughput_rps']:.1f} "
+                  f"waste={rep['padding_waste_pct']:.1f}% "
+                  f"overlap={rep['overlap']['overlap_pct']:.0f}%",
+                  serve=rep)
+        server.close()
+
+        # chaos load: a seeded fault plan fails primary dispatches
+        # mid-trace so the row prices the degraded (fallback-retried)
+        # path — every request must still be answered, in both modes
+        plan = serve.FaultPlan.bernoulli(
+            seed=7, n_steps=n_req, p_fail=0.2, p_nan=0.1)
+        server = serve.PCNServer(eng, params, buckets, timeout_s=0.01,
+                                 faults=plan, max_in_flight=4,
+                                 sync=is_sync)
         events = serve.synthetic_trace(
-            n_requests=n_req, rate_hz=rate, n_median=n_med, sigma=0.35,
+            n_requests=n_req, rate_hz=2000.0, n_median=n_med, sigma=0.35,
             n_max=buckets.max_points, seed=1)
         rng = np.random.default_rng(0)
         rids = serve.replay(
             server, events,
             lambda n, i: (np.asarray(make_cloud(rng, n), np.float32),
                           None))
-        rep = server.report(load=load, rate_hz=rate)
-        assert all(server.ready(r) for r in rids), "unanswered requests"
+        rep = server.report(load="chaos", rate_hz=2000.0)
+        assert all(server.ready(r) and not server.failed(r)
+                   for r in rids), \
+            "chaos load: fallback must answer every request"
+        server.close()
+        reports[dmode, "chaos"] = rep
         lat = rep["latency_ms"]["e2e"]
-        _emit(rows, f"serve_trace_{spec.name}_{load}",
+        _emit(rows, f"serve_trace_{spec.name}_chaos_{dmode}",
               1e3 * lat["mean"],
-              f"p50={lat['p50']:.1f} p95={lat['p95']:.1f} "
-              f"p99={lat['p99']:.1f} rps={rep['throughput_rps']:.1f} "
-              f"waste={rep['padding_waste_pct']:.1f}%",
+              f"p50={lat['p50']:.1f} p99={lat['p99']:.1f} "
+              f"degraded={rep['faults']['degraded_dispatches']} "
+              f"injected={len(rep['fault_plan']['injected'])}",
               serve=rep)
 
-    # chaos load: a seeded fault plan fails primary dispatches mid-trace
-    # so the row prices the degraded (fallback-retried) path — every
-    # request must still be answered
-    plan = serve.FaultPlan.bernoulli(
-        seed=7, n_steps=n_req, p_fail=0.2, p_nan=0.1)
-    server = serve.PCNServer(eng, params, buckets, timeout_s=0.01,
-                             faults=plan)
-    events = serve.synthetic_trace(
-        n_requests=n_req, rate_hz=2000.0, n_median=n_med, sigma=0.35,
-        n_max=buckets.max_points, seed=1)
-    rng = np.random.default_rng(0)
-    rids = serve.replay(
-        server, events,
-        lambda n, i: (np.asarray(make_cloud(rng, n), np.float32), None))
-    rep = server.report(load="chaos", rate_hz=2000.0)
-    assert all(server.ready(r) and not server.failed(r) for r in rids), \
-        "chaos load: fallback must answer every request"
-    lat = rep["latency_ms"]["e2e"]
-    _emit(rows, f"serve_trace_{spec.name}_chaos",
-          1e3 * lat["mean"],
-          f"p50={lat['p50']:.1f} p99={lat['p99']:.1f} "
-          f"degraded={rep['faults']['degraded_dispatches']} "
-          f"injected={len(rep['fault_plan']['injected'])}",
-          serve=rep)
+    # headline A/B: same heavy trace, sync vs async dispatch
+    hs, ha = reports["sync", "heavy"], reports["async", "heavy"]
+    p95_s = hs["latency_ms"]["e2e"]["p95"]
+    p95_a = ha["latency_ms"]["e2e"]["p95"]
+    _emit(rows, f"serve_async_ab_{spec.name}_heavy", 1e3 * p95_a,
+          f"p95_async={p95_a:.1f}ms p95_sync={p95_s:.1f}ms "
+          f"rps_async={ha['throughput_rps']:.1f} "
+          f"rps_sync={hs['throughput_rps']:.1f} "
+          f"speedup={ha['throughput_rps'] / max(hs['throughput_rps'], 1e-9):.2f}x "
+          f"overlap={ha['overlap']['overlap_pct']:.0f}% "
+          f"depth<={ha['overlap']['inflight_depth_max']}",
+          ab={f"{m}_{ld}": {"p95_e2e_ms": r["latency_ms"]["e2e"]["p95"],
+                            "throughput_rps": r["throughput_rps"],
+                            "overlap_pct": r["overlap"]["overlap_pct"]}
+              for (m, ld), r in reports.items()})
 
 
 # ---- dist: mesh-sharded engine vs single device -----------------------------

@@ -24,6 +24,16 @@
   handler that swallows an error silently turns a failed request into
   a forever-pending one.  Converting handlers (``except Exception as
   e: ... RequestError(..., cause=repr(e))``) reference ``e`` and pass.
+* **A005** — a dropped future inside ``repro.serve``: a ``.submit(...)``
+  call whose result is discarded outright, or whose bound future is
+  never consumed via ``.result`` / ``.exception`` /
+  ``.add_done_callback`` (state checks like ``.done()`` / ``.cancel()``
+  don't count — they never surface the stored exception).  An error
+  raised on an executor thread lives only on the future; drop the
+  future and the failure vanishes — A004's contract one layer up, for
+  the async dispatch path.  Bindings that escape the scope (returned,
+  passed, stored) hand the obligation to the consumer and pass, as do
+  non-future ``.submit`` results used any other way.
 
 Inline suppressions (``# analysis: allow A00x -- why``) on the flagged
 line or the line above apply; see :mod:`repro.analysis.findings`.
@@ -49,6 +59,13 @@ ERROR_CONVERTING_PACKAGE = "repro.serve"
 #: except-clause types A004 treats as blanket catches
 _BLANKET_EXCEPTS = {"Exception", "BaseException", "builtins.Exception",
                     "builtins.BaseException"}
+
+#: Future methods that surface the stored exception (A005 consumers)
+_FUTURE_CONSUMERS = {"result", "exception", "add_done_callback"}
+
+#: Future methods that DON'T — a binding used only through these still
+#: drops any error the submitted work raised
+_FUTURE_STATE_ATTRS = {"done", "cancel", "cancelled", "running"}
 
 _WALLCLOCK = {
     "time.time", "time.perf_counter", "time.monotonic",
@@ -84,6 +101,7 @@ class _ModuleScan(ast.NodeVisitor):
         self.top_imports: list[tuple[str, int]] = []   # (module, line)
         self.calls: list[tuple[str, int]] = []  # (resolved dotted call, line)
         self.swallows: list[tuple[int, str]] = []      # (line, clause) A004
+        self.dropped_futures: list[tuple[int, str]] = []   # (line, desc) A005
         self._fn_depth = 0
 
     # -- imports ---------------------------------------------------------
@@ -167,6 +185,81 @@ class _ModuleScan(ast.NodeVisitor):
         self.generic_visit(node)
 
 
+def _is_submit_call(node) -> bool:
+    return (isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr == "submit")
+
+
+def _load_dotted(node) -> str | None:
+    """Dotted path of a Name/Attribute chain (no call resolution)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    return ".".join([node.id] + list(reversed(parts)))
+
+
+def _dropped_futures(tree) -> list[tuple[int, str]]:
+    """(line, description) for every ``.submit(...)`` whose outcome can
+    never surface: the call's result discarded as a bare expression
+    statement, or bound to a name/attribute that is only ever touched
+    through non-consuming state checks (or never again at all).  A
+    binding that escapes — returned, passed as an argument, stored
+    somewhere, or accessed through a non-Future attribute — hands the
+    obligation on and passes."""
+    out = []
+    scopes = [(tree, tree.body)]
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            scopes.append((node, node.body))
+    for scope, body in scopes:
+        # statements of THIS scope only; nested defs are their own scope
+        stmts, stack = [], list(body)
+        while stack:
+            n = stack.pop()
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda)):
+                continue
+            stmts.append(n)
+            stack.extend(ast.iter_child_nodes(n))
+        # parent links over the full scope: a closure may consume the
+        # future its enclosing function submitted
+        parent = {c: p for p in ast.walk(scope)
+                  for c in ast.iter_child_nodes(p)}
+        for n in stmts:
+            if isinstance(n, ast.Expr) and _is_submit_call(n.value):
+                out.append((n.lineno, ".submit(...) result discarded"))
+                continue
+            if not (isinstance(n, ast.Assign) and len(n.targets) == 1
+                    and _is_submit_call(n.value)):
+                continue
+            target = _load_dotted(n.targets[0])
+            if target is None:
+                continue
+            consumed = False
+            for m in ast.walk(scope):
+                if (m is n.targets[0]
+                        or not isinstance(getattr(m, "ctx", None), ast.Load)
+                        or _load_dotted(m) != target):
+                    continue
+                p = parent.get(m)
+                if isinstance(p, ast.Attribute):
+                    if p.attr in _FUTURE_CONSUMERS:
+                        consumed = True
+                    elif p.attr not in _FUTURE_STATE_ATTRS:
+                        consumed = True     # not a Future API: not ours
+                else:
+                    consumed = True         # escapes: consumer's problem
+            if not consumed:
+                out.append((n.lineno,
+                            f"future {target!r} never consumed (no "
+                            f".result/.exception/.add_done_callback)"))
+    return out
+
+
 def _scan_modules(src_root: str) -> dict[str, _ModuleScan]:
     scans = {}
     for path in _iter_sources(src_root):
@@ -176,9 +269,11 @@ def _scan_modules(src_root: str) -> dict[str, _ModuleScan]:
         scan = _ModuleScan(mod, path)
         scan.source = text
         try:
-            scan.visit(ast.parse(text, filename=path))
+            tree = ast.parse(text, filename=path)
         except SyntaxError as e:
             raise SyntaxError(f"{path}: {e}") from e
+        scan.visit(tree)
+        scan.dropped_futures = _dropped_futures(tree)
         scans[mod] = scan
     return scans
 
@@ -204,7 +299,7 @@ def _reachable(scans: dict[str, _ModuleScan], roots) -> set[str]:
 
 
 def repo_findings(src_root: str | None = None) -> list[Finding]:
-    """Run A001–A003 (plus S001 for malformed suppressions) over the
+    """Run A001–A005 (plus S001 for malformed suppressions) over the
     repo source tree rooted at ``src_root`` (default: the ``src/``
     directory this package was imported from)."""
     if src_root is None:
@@ -242,6 +337,14 @@ def repo_findings(src_root: str | None = None) -> list[Finding]:
                     f"convert failures to structured errors "
                     f"(RequestError / a counted rejection), never "
                     f"swallow them",
+                    where=f"{scan.path}:{line}", file=scan.path, line=line))
+            for line, desc in scan.dropped_futures:
+                findings.append(Finding(
+                    "A005",
+                    f"{desc} in {mod} — an error raised on the executor "
+                    f"thread lives only on the future; join it, read "
+                    f".exception(), or attach a done-callback so the "
+                    f"failure reaches the completion path",
                     where=f"{scan.path}:{line}", file=scan.path, line=line))
 
     reach = _reachable(scans, FAST_PATH_ROOTS)

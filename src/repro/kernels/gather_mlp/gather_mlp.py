@@ -203,6 +203,21 @@ def gather_mlp_tile_plan(s: int, k: int, d: int, dc: int, hdim: int,
     hit = None
     if not overridden and vmem_budget_mb is None and b is not None:
         hit = plans.lookup("gather_mlp", **dims)
+    if hit is not None and hit.get("variant") == "vmap":
+        # the measurement rejected the batched grid for this cell: the
+        # dispatcher runs jax.vmap of the per-cloud kernel instead (no
+        # lane padding, ts subsets per grid step per cloud)
+        ts_v = max(1, min(int(hit.get("ts", 8)), s))
+        plan = {"variant": "vmap", "ts": ts_v, "lanes": 1,
+                "d_pad": d, "h_pad": hdim, "f_pad": fout,
+                "grid_tiles": pl.cdiv(s, ts_v),
+                "vmem_budget_mb": DEFAULT_VMEM_BUDGET_MB,
+                "dimension_semantics": DEFAULT_SEMANTICS,
+                "footprint_bytes": F32_BYTES * gather_mlp_footprint_elems(
+                    ts_v, k, d, dc, hdim, fout),
+                "provenance": "autotuned"}
+        plans.note_plan("gather_mlp", dims, plan)
+        return plan
     if hit is not None:
         plan = build(hit["ts"], hit.get("lanes"), hit.get("vmem_budget_mb"),
                      hit.get("dimension_semantics"), "autotuned")
@@ -245,6 +260,16 @@ def gather_mlp_batched_pallas(raw: jnp.ndarray, centers: jnp.ndarray,
                                 lanes=lanes,
                                 dimension_semantics=dimension_semantics,
                                 b=b)
+    if plan.get("variant") == "vmap":
+        # measured winner for this cell is the per-cloud dispatch: B
+        # logical per-cloud programs via the pallas batching rule
+        per_cloud = functools.partial(gather_mlp_pallas, w1=w1, b1=b1,
+                                      w2=w2, b2=b2, ts=plan["ts"],
+                                      interpret=interpret)
+        if mask is None:
+            return jax.vmap(lambda r, c: per_cloud(r, c))(raw, centers)
+        return jax.vmap(lambda r, c, mk: per_cloud(r, c, mask=mk))(
+            raw, centers, mask)
     ts = plan["ts"]
     dp, hp, fp = plan["d_pad"], plan["h_pad"], plan["f_pad"]
 

@@ -271,6 +271,21 @@ def hub_reuse_tile_plan(hn: int, c: int, m: int, k: int, d: int, hdim: int,
     hit = None
     if not overridden and vmem_budget_mb is None and b is not None:
         hit = plans.lookup("hub_reuse", **dims)
+    if hit is not None and hit.get("variant") == "vmap":
+        # the measurement rejected the batched grid for this cell (the
+        # common case: a handful of islands, where the TH² one-hot and
+        # lane padding cost more than they amortize): dispatch jax.vmap
+        # of the per-cloud kernel — one island per grid step, no padding
+        plan = {"variant": "vmap", "th": 1, "lanes": 1,
+                "d_pad": d, "h_pad": hdim, "f_pad": fout,
+                "grid_tiles": hn,
+                "vmem_budget_mb": DEFAULT_VMEM_BUDGET_MB,
+                "dimension_semantics": DEFAULT_SEMANTICS,
+                "footprint_bytes": F32_BYTES * hub_reuse_footprint_elems(
+                    1, c, m, k, d, hdim, fout),
+                "provenance": "autotuned"}
+        plans.note_plan("hub_reuse", dims, plan)
+        return plan
     if hit is not None:
         plan = build(hit["th"], hit.get("lanes"), hit.get("vmem_budget_mb"),
                      hit.get("dimension_semantics"), "autotuned")
@@ -313,6 +328,16 @@ def hub_reuse_batched_pallas(pool_in: jnp.ndarray, slot: jnp.ndarray,
                                vmem_budget_mb=vmem_budget_mb, lanes=lanes,
                                dimension_semantics=dimension_semantics,
                                b=b)
+    if plan.get("variant") == "vmap":
+        # measured winner for this cell is the per-cloud dispatch: B
+        # logical per-cloud programs via the pallas batching rule
+        per_cloud = functools.partial(hub_reuse_pallas, w1=w1, b1=b1,
+                                      w2=w2, b2=b2, interpret=interpret)
+        if live is None:
+            return jax.vmap(lambda p, sl, cp: per_cloud(p, sl, cp))(
+                pool_in, slot, comp)
+        return jax.vmap(lambda p, sl, cp, lv: per_cloud(p, sl, cp, live=lv))(
+            pool_in, slot, comp, live)
     th = plan["th"]
     dp, hp, fp = plan["d_pad"], plan["h_pad"], plan["f_pad"]
 

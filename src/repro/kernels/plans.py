@@ -20,6 +20,15 @@ Entry format (one per :func:`plan_key`)::
      "dimension_semantics": ["parallel", "arbitrary"],
      "provenance": "autotuned", ...measurement metadata...}
 
+A cell where the batched grid *loses* to the old per-cloud dispatch
+(e.g. hub cells with only a handful of islands) stores a **variant
+entry** instead — ``{"variant": "vmap", "provenance": "autotuned",
+...}`` — and the planners resolve it to a plan with ``"variant":
+"vmap"``: the batched ops then dispatch ``jax.vmap`` of the per-cloud
+kernel for that cell rather than the (B, tiles) grid.  Losing cells are
+thereby pinned to the measured winner too, instead of silently running
+a grid that the measurement rejected.
+
 ``lanes`` is the lane-padding multiple for the D/H/F dims.  On real TPU
 hardware only 128 is Mosaic-aligned, and 128-lane candidates win the
 measurement there; in interpret mode (CPU) the padding FLOPs are real
@@ -72,6 +81,23 @@ def entry_error(kernel: str, entry) -> str | None:
     if not isinstance(entry, dict):
         return "entry is not an object"
     tf = TILE_FIELD[kernel]
+    variant = entry.get("variant")
+    if variant is not None:
+        # a "vmap" entry promotes the per-cloud-kernel dispatch for this
+        # cell (the batched grid measured slower); it has no grid knobs,
+        # only an optional per-cloud tile
+        if variant != "vmap":
+            return f"unknown variant {variant!r} (expected 'vmap')"
+        t = entry.get(tf)
+        if t is not None and (not isinstance(t, int)
+                              or isinstance(t, bool) or t < 1):
+            return (f"{tf!r} must be a positive int when present on a "
+                    f"vmap entry, got {t!r}")
+        if entry.get("provenance") != "autotuned":
+            return (f"provenance {entry.get('provenance')!r} != "
+                    f"'autotuned' (only measured winners belong in the "
+                    f"store)")
+        return None
     t = entry.get(tf)
     if not isinstance(t, int) or isinstance(t, bool) or t < 1:
         return f"{tf!r} must be a positive int, got {t!r}"

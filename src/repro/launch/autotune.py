@@ -272,6 +272,15 @@ def autotune_cell(kernel: str, dims: dict, *, budget: int = 12,
     returned entry carries the measurement context (heuristic and vmap
     baselines, search size) alongside the plan fields.
 
+    The vmap baseline is a *candidate*, not just context: if it beats
+    every grid finalist, the cell records a ``{"variant": "vmap"}``
+    entry and the planners route it through the per-cloud dispatch (see
+    ``repro.kernels.plans``) — a cell where the batched grid loses is
+    pinned to the measured winner instead of silently running the
+    loser.  The per-cloud kernel is the long-standing eager/vmap path,
+    already covered by the K-lint via the analysis matrix, so variant
+    entries skip the candidate lint gate.
+
     Timing runs in two stages: a screening pass ranks every candidate
     from one window each, then the top lint-clean finalists are
     re-timed interleaved with the vmap baseline over several
@@ -337,6 +346,33 @@ def autotune_cell(kernel: str, dims: dict, *, budget: int = 12,
         except Exception:
             pass
     us, knobs = min(finalists, key=lambda f: f[0])
+    if vmap_us is not None and vmap_us < us:
+        # the per-cloud dispatch beat every grid candidate (typical for
+        # hub cells with only a handful of islands): pin the measured
+        # winner as a variant entry — the planners then route this cell
+        # through jax.vmap of the per-cloud kernel instead of a grid
+        # the measurement rejected
+        entry = {
+            "variant": "vmap",
+            "provenance": "autotuned",
+            "measured_us": vmap_us,
+            "heuristic_us": heuristic_us,
+            "vmap_us": vmap_us,
+            "grid_us": us,
+            "speedup_vs_heuristic": heuristic_us / max(vmap_us, 1e-9),
+            "speedup_vs_grid": us / max(vmap_us, 1e-9),
+            "searched": len(timed),
+            "reps": reps,
+            "seed": seed,
+        }
+        if kernel == "gather_mlp":
+            entry["ts"] = 8       # the per-cloud kernel's subset tile
+        store.record(kernel, dims, entry)
+        if log:
+            log(f"{plans.plan_key(kernel, dims)}: vmap variant promoted "
+                f"-> {vmap_us:.0f}us (best grid {us:.0f}us, heuristic "
+                f"{heuristic_us:.0f}us)")
+        return entry
     entry = {
         plans.TILE_FIELD[kernel]: knobs["tile"],
         "lanes": knobs["lanes"],

@@ -27,7 +27,10 @@ Two families share one CLI, dispatched on ``--arch``:
     injects a deterministic chaos plan into primary dispatches,
     ``--max-queue`` bounds each bucket lane (shed-on-full),
     ``--deadline-ms`` stamps per-request TTLs, ``--fallback`` picks the
-    degraded backend ('' disables it).
+    degraded backend ('' disables it).  Dispatch is async by default
+    (up to ``--max-in-flight`` batches in flight, admission/padding
+    overlapping device compute); ``--sync`` restores the blocking
+    dispatcher as the A/B baseline.
 
         PYTHONPATH=src python -m repro.launch.serve --arch pointnet2_c \
             --trace 64 --rate 200 --buckets 512,1024 --batch 4 \
@@ -178,7 +181,8 @@ def serve_trace(args):
         faults=faults,
         max_lane_depth=args.max_queue or None,
         deadline_s=(args.deadline_ms / 1e3) if args.deadline_ms else None,
-        fallback=args.fallback or None)
+        fallback=args.fallback or None,
+        max_in_flight=args.max_in_flight, sync=args.sync)
     warmup_s = time.perf_counter() - t0
 
     rng = np.random.default_rng(args.seed)
@@ -191,6 +195,7 @@ def serve_trace(args):
         return xyz, feats
 
     rids = serve.replay(server, events, make_request)
+    server.close()                       # join + release the executor
     admitted = [r for r in rids if r is not None]
     answered = sum(server.ready(r) and not server.failed(r)
                    for r in admitted)
@@ -204,13 +209,19 @@ def serve_trace(args):
     lat = report["latency_ms"]["e2e"]
     fl = report["faults"]
     per_dev = "" if mesh is None else f" over {args.mesh_data} devices"
-    print(f"{eng}: {buckets}, timeout={args.timeout_ms:.1f}ms; warmed "
-          f"{len(buckets)} buckets in {warmup_s:.2f}s; answered "
+    dmode = ("sync" if args.sync
+             else f"async(max_in_flight={args.max_in_flight})")
+    print(f"{eng}: {buckets}, timeout={args.timeout_ms:.1f}ms, {dmode}; "
+          f"warmed {len(buckets)} buckets in {warmup_s:.2f}s; answered "
           f"{answered}/{len(rids)} requests{per_dev}")
+    ov = report["overlap"]
     print(f"throughput {report['throughput_rps']:.1f} req/s "
           f"(offered {args.rate:.1f}), padding waste "
           f"{report['padding_waste_pct']:.1f}%, dispatches "
-          f"{report['dispatches']} ({report['partial_batches']} partial)")
+          f"{report['dispatches']} ({report['partial_batches']} partial), "
+          f"overlap {ov['overlap_pct']:.1f}% "
+          f"(depth<={ov['inflight_depth_max']}, "
+          f"idle gap {ov['idle_gap_ms']:.1f}ms)")
     print(f"e2e latency ms: p50={lat['p50']:.2f} p95={lat['p95']:.2f} "
           f"p99={lat['p99']:.2f} max={lat['max']:.2f}")
     print(f"faults: degraded={fl['degraded_dispatches']} "
@@ -324,6 +335,14 @@ def main(argv=None):
     ap.add_argument("--fallback", default="reference",
                     help="FC backend for the one-shot degraded retry of "
                          "a failed batch ('' disables)")
+    ap.add_argument("--max-in-flight", type=int, default=4,
+                    help="how many fired batches may be in flight at "
+                         "once (async dispatch; admission, host padding "
+                         "and device compute overlap across buckets)")
+    ap.add_argument("--sync", action="store_true",
+                    help="fully-blocking dispatch (the pre-async "
+                         "behavior) — the A/B baseline for "
+                         "--max-in-flight")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--serve-json", default="results/serve_trace.json",
                     help="where the trace report JSON goes ('' = skip)")

@@ -19,6 +19,15 @@ others):
 
 The clock is injected (same pattern as the dispatcher timeout) so the
 open → half-open → closed walk is deterministic under a fake clock.
+
+With async dispatch the two sides of the protocol split across time:
+``allow_primary()`` is consulted at *fire* time (under the server
+lock, in firing order) and ``record_success``/``record_failure`` land
+at *completion* time, when the in-flight batch resolves.  Several
+batches fired before the first failure completes may all try the
+primary — the breaker judges verdicts in completion order, which is
+the only order that exists for an async pipeline.  The instance itself
+is not locked; the dispatcher serializes access under its own lock.
 """
 from __future__ import annotations
 

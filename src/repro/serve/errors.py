@@ -22,6 +22,11 @@ metrics layer need:
   fault, poisoned output, missed deadline, open breaker with no
   fallback).  Stored as the request's *outcome*: ``take(rid)`` raises
   it, so a failed request is observable exactly once, like a response.
+  With async dispatch these outcomes are produced by the *completion*
+  path: an in-flight batch that fails resolves to the same reasons at
+  the same counters as a synchronous one, and a deadline is judged
+  against the completion clock (``reason="deadline"`` covers both a
+  queue-side shed and an answer that materialized too late).
 * :class:`UnknownRequestError` — ``take`` on a rid that is pending,
   never existed, or was already taken (also a :class:`KeyError`, for
   callers that predate the taxonomy).

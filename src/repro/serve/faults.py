@@ -16,12 +16,18 @@ Plans are data, not chance: an explicit plan lists its steps
 syntax), and a randomized plan is *pre-sampled* from a seed into the
 same explicit form (``FaultPlan.bernoulli``), so a chaos trace replays
 identically in tests, ``launch/serve.py --faults`` and CI.  The step
-counter lives on the plan; ``plan.wrap(fn)`` may wrap many per-bucket
-callables and they all advance the one shared counter, matching the
+counter lives on the plan and is drawn under a lock; the async
+dispatcher calls :meth:`FaultPlan.draw` at *fire* time (in firing
+order, under its own lock) and :meth:`FaultPlan.apply` later on an
+executor thread, so steps stay deterministic even when several batches
+are in flight and complete out of order.  ``plan.wrap(fn)`` composes
+the two for synchronous callers and may wrap many per-bucket
+callables; they all advance the one shared counter, matching the
 server's global dispatch order.
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass
 
@@ -70,6 +76,8 @@ class FaultPlan:
         self.sleep = sleep           # injectable for fake-clock tests
         self.step = 0                # next dispatch's index
         self.injected: list[tuple[int, str]] = []   # (step, kind) fired
+        self._lock = threading.Lock()   # draw() is called at fire time,
+                                        # possibly from several threads
 
     # -- construction --------------------------------------------------------
 
@@ -114,33 +122,52 @@ class FaultPlan:
 
     # -- injection -----------------------------------------------------------
 
+    def draw(self) -> tuple[int, Fault | None]:
+        """Consume one dispatch step (thread-safe): returns the step
+        index and the fault scheduled for it (``None`` for a clean
+        step), advancing the shared counter and recording the
+        injection.  The dispatcher draws at *fire* time, under its own
+        lock, so step order matches firing order even when execution
+        completes out of order on executor threads."""
+        with self._lock:
+            step, self.step = self.step, self.step + 1
+            fault = self.events.get(step)
+            if fault is not None:
+                self.injected.append((step, fault.kind))
+            return step, fault
+
+    def apply(self, fn, batch, step: int, fault: Fault | None):
+        """Execute ``fn(batch)`` under a previously drawn fault:
+        ``fail`` raises :class:`InjectedFault` before the engine runs,
+        ``nan`` poisons the output, ``slow`` stalls after it;
+        ``fault=None`` is the clean path.  Split from :meth:`draw` so
+        drawing (ordered, at fire time) and execution (later, on an
+        executor thread) need not share a thread."""
+        if fault is not None and fault.kind == "fail":
+            raise InjectedFault(step)
+        out = fn(batch)
+        if fault is None:
+            return out
+        if fault.kind == "nan":
+            out = np.asarray(out).copy()
+            out[...] = np.nan
+            return out
+        self.sleep(fault.arg / 1e3)      # "slow"
+        return out
+
     def next_fault(self) -> Fault | None:
-        """Consume one step of the plan (dispatcher-facing): returns
-        the fault scheduled for the current dispatch, advancing the
-        shared counter."""
-        step, self.step = self.step, self.step + 1
-        fault = self.events.get(step)
-        if fault is not None:
-            self.injected.append((step, fault.kind))
-        return fault
+        """Consume one step of the plan (compat shim over
+        :meth:`draw`): returns the fault scheduled for the current
+        dispatch, advancing the shared counter."""
+        return self.draw()[1]
 
     def wrap(self, fn):
-        """Wrap one engine callable; every wrapped callable advances
-        the plan's one shared step counter in dispatch order."""
+        """Wrap one engine callable (draw + apply at call time; the
+        synchronous composition).  Every wrapped callable advances the
+        plan's one shared step counter in dispatch order."""
         def faulty(batch):
-            step = self.step            # next_fault advances it
-            fault = self.next_fault()
-            if fault is not None and fault.kind == "fail":
-                raise InjectedFault(step)
-            out = fn(batch)
-            if fault is None:
-                return out
-            if fault.kind == "nan":
-                out = np.asarray(out).copy()
-                out[...] = np.nan
-                return out
-            self.sleep(fault.arg / 1e3)      # "slow"
-            return out
+            step, fault = self.draw()
+            return self.apply(fn, batch, step, fault)
         return faulty
 
     def summary(self) -> dict:

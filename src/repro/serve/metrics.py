@@ -14,6 +14,14 @@ reported as p50/p95/p99/mean/max in milliseconds, alongside throughput
 fraction of padded (B, N) slots·rows that carried no real points, the
 price of quantizing ragged traffic onto pre-compiled bucket shapes.
 
+With async dispatch, ``t_dispatch`` is stamped when execution actually
+*begins* on an executor thread and ``t_done`` at completion — so
+service time is attributed at completion, and time spent queued behind
+a full in-flight table lands in queue-wait where it belongs.  The
+``overlap`` report section quantifies the concurrency itself:
+in-flight depth at fire time, busy time vs its interval union
+(``overlap_pct``), and the device-idle gap the sync dispatcher pays.
+
 The failure-handling layer reports through the same object: a
 ``faults`` section counts everything that did *not* go down the happy
 path — admission rejections (``rejected_invalid``,
@@ -91,6 +99,9 @@ class DispatchRecord:
     partial: bool                    # fired by timeout below capacity
     service_s: float
     degraded: bool = False           # answered by the fallback backend
+    t_start: float = 0.0             # execution began (clock value)
+    t_done: float = 0.0              # outputs materialized
+    depth: int = 1                   # in-flight batches incl. this one
 
 
 @dataclass
@@ -102,13 +113,19 @@ class ServeMetrics:
     counters: Counter = field(default_factory=Counter)
 
     def record_dispatch(self, bucket, reqs, t_dispatch, t_done, *,
-                        degraded: bool = False):
-        """``reqs``: the fired requests as (rid, n_points, t_arrival)."""
+                        degraded: bool = False, depth: int = 1):
+        """``reqs``: the fired requests as (rid, n_points, t_arrival).
+        ``t_dispatch`` is when execution *began* (in async mode the
+        executor stamps it at the top of the walk, so service time is
+        measured at completion against the true start — queue-wait
+        absorbs any wait for an in-flight slot); ``depth`` is the
+        in-flight depth at fire time."""
         self.dispatches.append(DispatchRecord(
             bucket=bucket.key, n_requests=len(reqs),
             valid_points=sum(n for _, n, _ in reqs),
             partial=len(reqs) < bucket.batch,
-            service_s=t_done - t_dispatch, degraded=degraded))
+            service_s=t_done - t_dispatch, degraded=degraded,
+            t_start=t_dispatch, t_done=t_done, depth=depth))
         if degraded:
             self.counters["degraded_dispatches"] += 1
         for rid, n, t_arr in reqs:
@@ -172,7 +189,43 @@ class ServeMetrics:
             "padding_waste_pct":
                 100.0 * (1.0 - valid / padded) if padded else 0.0,
             "per_bucket": per_bucket,
+            "overlap": self._overlap_summary(),
             "faults": {k: int(self.counters.get(k, 0))
                        for k in FAULT_COUNTERS},
             **extra,
+        }
+
+    def _overlap_summary(self) -> dict:
+        """How concurrent the dispatches actually were, from their
+        recorded execution intervals: in-flight depth at fire time,
+        total busy time vs its union (``overlap_pct`` > 0 means batches
+        genuinely ran concurrently), and the idle gap — span time no
+        dispatch covered (the sync dispatcher's serialization cost
+        shows up here)."""
+        ivs = sorted((d.t_start, d.t_done) for d in self.dispatches
+                     if d.t_done > d.t_start)
+        depths = [d.depth for d in self.dispatches]
+        if not ivs:
+            return {"inflight_depth_max": max(depths, default=0),
+                    "inflight_depth_mean": 0.0, "busy_ms": 0.0,
+                    "idle_gap_ms": 0.0, "overlap_pct": 0.0}
+        busy = sum(e - s for s, e in ivs)
+        union = 0.0
+        cur_s, cur_e = ivs[0]
+        for s, e in ivs[1:]:
+            if s > cur_e:                # disjoint: close the run
+                union += cur_e - cur_s
+                cur_s, cur_e = s, e
+            else:
+                cur_e = max(cur_e, e)
+        union += cur_e - cur_s
+        span = max(e for _, e in ivs) - ivs[0][0]
+        return {
+            "inflight_depth_max": int(max(depths, default=0)),
+            "inflight_depth_mean":
+                float(np.mean(depths)) if depths else 0.0,
+            "busy_ms": 1e3 * busy,
+            "idle_gap_ms": 1e3 * max(span - union, 0.0),
+            "overlap_pct":
+                100.0 * (1.0 - union / busy) if busy > 0 else 0.0,
         }

@@ -12,6 +12,13 @@ sleep until each arrival (in short slices, polling so timeouts keep
 firing between arrivals), submit, and drain at the end.  If the engine
 falls behind the arrival rate the backlog simply grows and queue-wait
 percentiles show it — that is the measurement, not an error.
+
+Replay composes with async dispatch unchanged: ``submit``/``poll``
+never block on device compute (batches go in flight and the loop keeps
+admitting, which is the whole point), the trailing ``drain`` *joins*
+every in-flight batch, and service/queue-wait attribution stays
+correct because the metrics layer stamps service at execution start →
+completion, not at fire.
 """
 from __future__ import annotations
 

@@ -271,14 +271,48 @@ def bad_repo(tmp_path):
                 return fn(batch)
             except KeyError:
                 return None
+
+
+        def fire_and_forget(pool, fn, batch):    # A005: result discarded
+            pool.submit(fn, batch)
+            return True
+
+
+        def fire_state_check_only(pool, fn, batch):  # A005: .done() never
+            fut = pool.submit(fn, batch)             # surfaces the error
+            return fut.done()
+
+
+        def fire_joined(pool, fn, batch):        # ok: joined inline
+            return pool.submit(fn, batch).result()
+
+
+        def fire_callback(rec, pool, fn, batch):  # ok: completion path
+            rec.future = pool.submit(fn, batch)
+            rec.future.add_done_callback(print)
+
+
+        def fire_handed_off(pool, fn, batch, futs):  # ok: escapes to the
+            f = pool.submit(fn, batch)               # caller, who owns it
+            futs.append(f)
+
+
+        def admit(queue, xyz):                   # ok: not a future at all
+            req = queue.submit(xyz)
+            return req.rid
         """)
-    # the same swallow OUTSIDE repro.serve is not A004's business
+    # the same swallow OUTSIDE repro.serve is not A004's business, and
+    # the same dropped submit outside it is not A005's
     _write(src, "repro/launch/swallow.py", """\
         def best_effort(fn):
             try:
                 return fn()
             except Exception:
                 return None
+
+
+        def best_effort_submit(pool, fn):
+            pool.submit(fn)
         """)
     return src
 
@@ -295,6 +329,14 @@ def test_forbidden_ast_patterns_flagged(bad_repo):
     assert all("serve/bad.py" in f.where for f in a004)
     assert any("bare except" in f.message for f in a004)
     assert any("except Exception" in f.message for f in a004)
+    # A005: exactly the discarded submit and the state-check-only future
+    # — joined / callback'd / escaping bindings, the non-future
+    # queue.submit, and the drop outside repro.serve all stay clean
+    a005 = [f for f in active(fs) if f.rule == "A005"]
+    assert len(a005) == 2, a005
+    assert all("serve/bad.py" in f.where for f in a005)
+    assert any("result discarded" in f.message for f in a005)
+    assert any("never consumed" in f.message for f in a005)
     # the justified suppression took effect...
     suppressed = [f for f in fs if f.suppressed]
     assert [f.rule for f in suppressed] == ["A001"]

@@ -319,3 +319,112 @@ def test_promoted_plans_pass_kernel_lint():
                  "dimension_semantics": tuple(entry["dimension_semantics"]),
                  "footprint_bytes": entry["footprint_bytes"]}
         assert autotune.lint_knobs(kernel, dims, knobs) == []
+
+
+# ---- vmap plan variant ------------------------------------------------------
+
+def vmap_wins_model(call, knobs):
+    """Injected timer for the small-island regime: the per-cloud vmap
+    dispatch (knobs=None) beats every batched-grid candidate."""
+    return 10.0 if knobs is None else cost_model(call, knobs)
+
+
+def test_vmap_variant_promoted_when_grid_loses():
+    """When the vmap baseline out-measures every grid finalist the cell
+    records a {"variant": "vmap"} entry instead of the losing grid."""
+    store = plans.PlanStore()
+    entry = autotune.autotune_cell("hub_reuse", HDIMS, budget=10,
+                                   store=store, timer=vmap_wins_model)
+    assert entry["variant"] == "vmap"
+    assert entry["provenance"] == "autotuned"
+    assert entry["measured_us"] == 10.0
+    assert entry["grid_us"] > entry["measured_us"]
+    assert plans.entry_error("hub_reuse", entry) is None
+    assert store.lookup("hub_reuse", **HDIMS) == entry
+    # deterministic: same seed/budget re-promotes the same entry
+    e2 = autotune.autotune_cell("hub_reuse", HDIMS, budget=10,
+                                store=plans.PlanStore(),
+                                timer=vmap_wins_model)
+    assert e2 == entry
+
+
+def test_vmap_variant_round_trips_and_validates(tmp_path):
+    store = plans.PlanStore()
+    store.record("hub_reuse", HDIMS, {"variant": "vmap",
+                                      "provenance": "autotuned",
+                                      "measured_us": 5.0})
+    store.record("gather_mlp", GDIMS, {"variant": "vmap", "ts": 8,
+                                       "provenance": "autotuned"})
+    path = store.save(str(tmp_path / "plans.json"))
+    loaded = plans.PlanStore.load(path)
+    assert loaded.entries == store.entries
+    with pytest.raises(ValueError, match="refusing to record"):
+        store.record("hub_reuse", HDIMS, {"variant": "grid9",
+                                          "provenance": "autotuned"})
+    with pytest.raises(ValueError, match="refusing to record"):
+        store.record("gather_mlp", GDIMS, {"variant": "vmap", "ts": 0,
+                                           "provenance": "autotuned"})
+    with pytest.raises(ValueError, match="refusing to record"):
+        store.record("hub_reuse", HDIMS, {"variant": "vmap",
+                                          "provenance": "heuristic"})
+
+
+def test_vmap_variant_dispatches_per_cloud_with_unchanged_numerics():
+    """A stored vmap entry reroutes the batched op through jax.vmap of
+    the per-cloud kernel: capture observes the variant plan and the
+    output matches the batched grid <=1e-5."""
+    from repro.kernels.hub_reuse.ops import hub_reuse_batched
+    rng = np.random.default_rng(0)
+    d = HDIMS
+    pool = jnp.asarray(rng.normal(
+        size=(d["b"], d["hn"], d["c"], d["d"])), jnp.float32)
+    slot = jnp.asarray(rng.integers(
+        -1, d["c"], (d["b"], d["hn"], d["m"], d["k"])), jnp.int32)
+    comp = jnp.asarray(rng.normal(
+        size=(d["b"], d["hn"], d["m"], d["f"])) * 0.01, jnp.float32)
+    live = jnp.asarray(rng.integers(
+        0, 2, (d["b"], d["hn"], d["m"], d["k"])), jnp.int32)
+    w1 = jnp.asarray(rng.normal(size=(d["d"], d["h"])) * 0.1, jnp.float32)
+    w2 = jnp.asarray(rng.normal(size=(d["h"], d["f"])) * 0.1, jnp.float32)
+    b1, b2 = jnp.zeros(d["h"]), jnp.zeros(d["f"])
+
+    with plans.capture() as cap:
+        out_grid = hub_reuse_batched(pool, slot, comp, w1, b1, w2, b2,
+                                     live=live)
+    assert cap[-1]["plan"]["provenance"] == "heuristic"
+    assert "variant" not in cap[-1]["plan"]
+
+    plans.active_store().record("hub_reuse", HDIMS,
+                                {"variant": "vmap",
+                                 "provenance": "autotuned"})
+    with plans.capture() as cap:
+        out_vmap = hub_reuse_batched(pool, slot, comp, w1, b1, w2, b2,
+                                     live=live)
+    plan = cap[-1]["plan"]
+    assert plan["variant"] == "vmap"
+    assert plan["provenance"] == "autotuned"
+    assert plan["grid_tiles"] == d["hn"]          # one island per step
+    np.testing.assert_allclose(np.asarray(out_vmap), np.asarray(out_grid),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_vmap_variant_serves_engine_with_unchanged_numerics():
+    """End to end at a cell set where vmap wins everywhere: the default
+    engine path resolves only variant plans and the logits match the
+    heuristic run <=1e-5."""
+    params = engine.init(jax.random.PRNGKey(0), SPEC)
+    b = _batch(SPEC, [N, 31], seed=7)
+    with plans.bypass():
+        base = engine.apply(params, b, spec=SPEC, mode="lpcn",
+                            fc_backend="pallas")
+    entries = autotune.autotune_model(SPEC, 2, N, mode="lpcn",
+                                      store=plans.active_store(),
+                                      budget=8, timer=vmap_wins_model)
+    assert entries and all(e.get("variant") == "vmap" for e in entries)
+    with plans.capture() as cap:
+        tuned = engine.apply(params, b, spec=SPEC, mode="lpcn",
+                             fc_backend="pallas")
+    used = [r for r in cap if r["dims"].get("b") is not None]
+    assert used and all(r["plan"].get("variant") == "vmap" for r in used)
+    np.testing.assert_allclose(np.asarray(tuned), np.asarray(base),
+                               rtol=1e-5, atol=1e-5)

@@ -81,10 +81,13 @@ def test_bucket_plan_quantiles_aligned():
 # ---- dispatch policy --------------------------------------------------------
 
 def test_batch_full_fires_immediately(eng_params):
-    """Reaching bucket capacity fires inside submit — no poll needed."""
+    """Reaching bucket capacity fires inside submit — no poll needed.
+    (sync mode: the test asserts resolution immediately after
+    submit returns.)"""
     eng, params = eng_params
     clock = FakeClock()
-    srv = PCNServer(eng, params, BUCKETS, timeout_s=10.0, clock=clock)
+    srv = PCNServer(eng, params, BUCKETS, timeout_s=10.0, clock=clock,
+                    sync=True)
     r0 = srv.submit(_cloud(60, 0))
     assert not srv.ready(r0) and srv.pending() == 1
     r1 = srv.submit(_cloud(50, 1))       # same 64-bucket: batch full
@@ -98,7 +101,8 @@ def test_timeout_fires_partial_no_starvation(eng_params):
     a batch that will never fill."""
     eng, params = eng_params
     clock = FakeClock()
-    srv = PCNServer(eng, params, BUCKETS, timeout_s=0.5, clock=clock)
+    srv = PCNServer(eng, params, BUCKETS, timeout_s=0.5, clock=clock,
+                    sync=True)
     rid = srv.submit(_cloud(80, 2))      # 96-bucket, alone
     assert srv.poll() == []              # not due yet
     clock.advance(0.49)
@@ -116,7 +120,8 @@ def test_fifo_within_bucket(eng_params):
     first batch."""
     eng, params = eng_params
     clock = FakeClock()
-    srv = PCNServer(eng, params, BUCKETS, timeout_s=10.0, clock=clock)
+    srv = PCNServer(eng, params, BUCKETS, timeout_s=10.0, clock=clock,
+                    sync=True)
     rids = [srv.submit(_cloud(40, s)) for s in range(3)]
     # first two filled a batch and fired; the third still queues
     assert srv.ready(rids[0]) and srv.ready(rids[1])
@@ -144,7 +149,8 @@ def test_exactly_once_and_equivalence(eng_params):
     fully masked)."""
     eng, params = eng_params
     clock = FakeClock()
-    srv = PCNServer(eng, params, BUCKETS, timeout_s=0.1, clock=clock)
+    srv = PCNServer(eng, params, BUCKETS, timeout_s=0.1, clock=clock,
+                    sync=True)
     sizes = (60, 90, 33, 64, 72)         # spans both buckets, odd count
     clouds = [_cloud(n, seed=10 + i) for i, n in enumerate(sizes)]
     keys = [jax.random.PRNGKey(100 + i) for i in range(len(sizes))]
@@ -193,7 +199,7 @@ def test_lazy_warmup_compiles_on_first_use():
     eng = engine.PCNEngine(SPEC, mode="lpcn", fc_backend="reference")
     params = eng.init(jax.random.PRNGKey(2))
     srv = PCNServer(eng, params, BUCKETS, timeout_s=10.0,
-                    clock=FakeClock(), warmup=False)
+                    clock=FakeClock(), warmup=False, sync=True)
     assert compile_cache_size(eng) == 0
     for s in range(2):
         srv.submit(_cloud(60, seed=20 + s))       # fills the 64-bucket
@@ -335,7 +341,7 @@ def test_injected_failure_isolated_and_degraded(eng_params):
     clock = FakeClock()
     plan = FaultPlan.parse("fail@1")
     srv = PCNServer(eng, params, BUCKETS, timeout_s=0.1, clock=clock,
-                    faults=plan)
+                    faults=plan, sync=True)
     keys = [jax.random.PRNGKey(100 + i) for i in range(6)]
     clouds = [_cloud(60, 30 + i) for i in range(6)]
     rids = [srv.submit(c, key=k) for c, k in zip(clouds, keys)]
@@ -375,7 +381,8 @@ def test_failure_without_fallback_surfaces_request_error(eng_params):
     eng, params = eng_params
     clock = FakeClock()
     srv = PCNServer(eng, params, BUCKETS, timeout_s=0.1, clock=clock,
-                    faults=FaultPlan.parse("fail@0"), fallback=None)
+                    faults=FaultPlan.parse("fail@0"), fallback=None,
+                    sync=True)
     r0 = srv.submit(_cloud(50, 0))
     r1 = srv.submit(_cloud(50, 1))       # same batch: fails with r0
     r2 = srv.submit(_cloud(50, 2))
@@ -410,7 +417,8 @@ def test_breaker_opens_and_half_open_probe(eng_params):
     plan = FaultPlan.parse("fail@0,fail@1")
     srv = PCNServer(eng, params, BucketSet.make([64], batch=2),
                     timeout_s=0.1, clock=clock, faults=plan,
-                    breaker_fail_streak=2, breaker_cooldown_s=5.0)
+                    breaker_fail_streak=2, breaker_cooldown_s=5.0,
+                    sync=True)
     br = srv.breakers[(2, 64)]
     for i in range(4):                   # two batches, both injected
         srv.submit(_cloud(30, i))
@@ -442,7 +450,8 @@ def test_breaker_reopens_on_failed_probe(eng_params):
     plan = FaultPlan.parse("fail@0,fail@1,fail@2")
     srv = PCNServer(eng, params, BucketSet.make([64], batch=2),
                     timeout_s=0.1, clock=clock, faults=plan,
-                    breaker_fail_streak=2, breaker_cooldown_s=5.0)
+                    breaker_fail_streak=2, breaker_cooldown_s=5.0,
+                    sync=True)
     br = srv.breakers[(2, 64)]
     for i in range(4):
         srv.submit(_cloud(30, i))
@@ -462,7 +471,7 @@ def test_circuit_open_without_fallback_fails_fast(eng_params):
     srv = PCNServer(eng, params, BucketSet.make([64], batch=2),
                     timeout_s=0.1, clock=clock, faults=plan,
                     fallback=None, breaker_fail_streak=1,
-                    breaker_cooldown_s=100.0)
+                    breaker_cooldown_s=100.0, sync=True)
     srv.submit(_cloud(30, 0))
     srv.submit(_cloud(30, 1))            # breaker trips
     step_before = plan.step
@@ -524,7 +533,7 @@ def test_chaos_trace_acceptance(eng_params):
     plan = FaultPlan.bernoulli(seed=3, n_steps=8, p_fail=0.3)
     assert plan.events                    # the seed does schedule faults
     srv = PCNServer(eng, params, BUCKETS, timeout_s=0.1, clock=clock,
-                    faults=plan, fallback=None)
+                    faults=plan, fallback=None, sync=True)
     sizes = (60, 90, 33, 64, 72, 96, 17, 50)
     clouds = [_cloud(n, seed=60 + i) for i, n in enumerate(sizes)]
     keys = [jax.random.PRNGKey(200 + i) for i in range(len(sizes))]
@@ -564,7 +573,7 @@ def test_chaos_trace_with_fallback_answers_everything(eng_params):
     clock = FakeClock()
     plan = FaultPlan.bernoulli(seed=3, n_steps=8, p_fail=0.3)
     srv = PCNServer(eng, params, BUCKETS, timeout_s=0.1, clock=clock,
-                    faults=plan)
+                    faults=plan, sync=True)
     sizes = (60, 90, 33, 64, 72, 96, 17, 50)
     clouds = [_cloud(n, seed=60 + i) for i, n in enumerate(sizes)]
     keys = [jax.random.PRNGKey(200 + i) for i in range(len(sizes))]
@@ -582,6 +591,147 @@ def test_chaos_trace_with_fallback_answers_everything(eng_params):
     rep = srv.report()
     assert rep["faults"]["degraded_dispatches"] >= 1
     assert rep["faults"]["failed_requests"] == 0
+
+
+# ---- async in-flight dispatch ----------------------------------------------
+
+def test_async_inflight_failure_resolves_request_error(eng_params):
+    """An in-flight batch that fails (no fallback) resolves to the same
+    structured RequestError at completion; take() blocks on the
+    in-flight rid and then raises it."""
+    eng, params = eng_params
+    srv = PCNServer(eng, params, BUCKETS, timeout_s=0.1,
+                    clock=FakeClock(), faults=FaultPlan.parse("fail@0"),
+                    fallback=None)
+    r0 = srv.submit(_cloud(50, 0))
+    r1 = srv.submit(_cloud(50, 1))       # batch full -> fires in flight
+    with pytest.raises(RequestError, match="engine") as ei:
+        srv.take(r0)                     # blocks until completion
+    assert ei.value.rid == r0 and "InjectedFault" in ei.value.cause
+    with pytest.raises(RequestError):
+        srv.take(r1)
+    assert srv.pending() == 0
+    rep = srv.report()
+    assert rep["faults"]["failed_dispatches"] == 1
+    assert rep["faults"]["failed_requests"] == 2
+
+
+def test_async_breaker_trips_at_completion(eng_params):
+    """Breaker verdicts land when in-flight batches complete: two
+    injected failures joined by drain() trip the breaker exactly as in
+    sync mode, and every request still gets a (degraded) answer."""
+    eng, params = eng_params
+    clock = FakeClock()
+    plan = FaultPlan.parse("fail@0,fail@1")
+    srv = PCNServer(eng, params, BucketSet.make([64], batch=2),
+                    timeout_s=0.1, clock=clock, faults=plan,
+                    breaker_fail_streak=2, breaker_cooldown_s=5.0)
+    rids = [srv.submit(_cloud(30, i)) for i in range(4)]
+    srv.drain()                          # joins the in-flight batches
+    br = srv.breakers[(2, 64)]
+    assert br.state == "open" and br.open_count == 1
+    rep = srv.report()
+    assert rep["faults"]["breaker_opened"] == 1
+    assert rep["faults"]["degraded_dispatches"] == 2
+    for rid in rids:
+        assert np.isfinite(srv.take(rid)).all()
+
+
+def test_async_deadline_expires_in_flight(eng_params):
+    """Deadlines are enforced at completion time: a slow in-flight
+    batch whose answers materialize past the deadline resolves them to
+    RequestError(reason='deadline') — same counters as a queue-side
+    shed — instead of handing back answers nobody waits for."""
+    eng, params = eng_params
+    clock = FakeClock()
+    plan = FaultPlan.parse("slow@0:500", sleep=clock.advance)
+    srv = PCNServer(eng, params, BUCKETS, timeout_s=0.1, clock=clock,
+                    faults=plan)
+    r0 = srv.submit(_cloud(50, 0), deadline_s=0.2)
+    r1 = srv.submit(_cloud(50, 1), deadline_s=0.2)   # fires in flight
+    srv.drain()
+    for rid in (r0, r1):
+        with pytest.raises(RequestError, match="deadline"):
+            srv.take(rid)
+    rep = srv.report()
+    assert rep["faults"]["deadline_miss"] == 2
+    assert rep["requests"] == 0          # no late answer was recorded
+
+
+def test_async_drain_quiescence_no_leaked_futures(eng_params):
+    """drain() joins everything: pending() == 0, the in-flight table
+    and rid set are empty, every rid has an outcome, close() is clean.
+    With max_in_flight=2 half the fires wait for a completion to pump
+    them — the bound itself is exercised."""
+    eng, params = eng_params
+    srv = PCNServer(eng, params, BUCKETS, timeout_s=0.1,
+                    clock=FakeClock(), max_in_flight=2)
+    rids = [srv.submit(_cloud(40 + i, i)) for i in range(8)]
+    srv.drain()
+    assert srv.pending() == 0
+    assert not srv._inflight and not srv._inflight_rids
+    for rid in rids:
+        assert srv.ready(rid)
+        assert np.isfinite(srv.take(rid)).all()
+    srv.close()
+    assert srv._pool is None
+
+
+def test_async_submit_overlaps_slow_inflight(eng_params):
+    """The overlap the async layer exists for: while one bucket's batch
+    stalls in flight, admission keeps landing and the other bucket
+    dispatches, completes and is taken — nothing serializes behind the
+    stall."""
+    import threading as _threading
+    eng, params = eng_params
+    release = _threading.Event()
+    plan = FaultPlan.parse("slow@0:1",
+                           sleep=lambda _dt: release.wait(10.0))
+    srv = PCNServer(eng, params, BUCKETS, timeout_s=10.0,
+                    clock=FakeClock(), faults=plan)
+    r0 = srv.submit(_cloud(40, 0))
+    srv.submit(_cloud(40, 1))            # 64-bucket fires, then stalls
+    r2 = srv.submit(_cloud(90, 2))
+    srv.submit(_cloud(90, 3))            # 96-bucket fires concurrently
+    out2 = srv.take(r2)                  # resolves during the stall
+    assert np.isfinite(out2).all()
+    assert not srv.ready(r0)             # the stalled batch: in flight
+    release.set()
+    srv.drain()
+    assert np.isfinite(srv.take(r0)).all()
+    assert srv.report()["overlap"]["inflight_depth_max"] >= 2
+
+
+def test_async_chaos_equivalence_multi_inflight(eng_params):
+    """Async chaos walk with several batches genuinely in flight: every
+    request (fallback recovers the injected ones) still equals
+    apply_single <= 1e-5 and the fault accounting matches the plan —
+    identical semantics to the sync walk."""
+    eng, params = eng_params
+    clock = FakeClock()
+    plan = FaultPlan.bernoulli(seed=7, n_steps=8, p_fail=0.2, p_nan=0.2)
+    assert plan.events                   # the seed schedules faults
+    srv = PCNServer(eng, params, BUCKETS, timeout_s=10.0, clock=clock,
+                    faults=plan, max_in_flight=4,
+                    breaker_fail_streak=99)  # keep every draw on the
+                                             # primary: injected ==
+                                             # degraded, order-free
+    sizes = (60, 50, 90, 70, 33, 64, 96, 40, 72, 55, 80, 44, 61, 91)
+    clouds = [_cloud(n, seed=80 + i) for i, n in enumerate(sizes)]
+    keys = [jax.random.PRNGKey(300 + i) for i in range(len(sizes))]
+    rids = [srv.submit(c, key=k) for c, k in zip(clouds, keys)]
+    srv.drain()
+    assert srv.pending() == 0
+    for rid, c, k in zip(rids, clouds, keys):
+        ref, _ = eng.apply_single(params, jnp.asarray(c), key=k)
+        np.testing.assert_allclose(srv.take(rid), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+    rep = srv.report()
+    assert rep["faults"]["failed_requests"] == 0
+    assert rep["faults"]["degraded_dispatches"] == len(plan.injected)
+    assert rep["faults"]["degraded_dispatches"] >= 1
+    assert rep["overlap"]["inflight_depth_max"] >= 1
+    assert rep["dispatch_mode"] == "async" and rep["max_in_flight"] == 4
 
 
 def test_fault_plan_parse_and_slow():
